@@ -1,0 +1,133 @@
+"""Shared experiment runner for the paper-reproduction benchmarks.
+
+Every benchmark sweeps (dataset x availability-mode x method) through the
+federated round engine and records the History.  Results are cached in
+benchmarks/results/paper/*.json so `python -m benchmarks.run` is restartable.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from repro.core.availability import make_mode
+from repro.core.sampler import FedGSSampler, make_sampler
+from repro.fed.engine import FLConfig, FLEngine
+from repro.fed.models import logistic_regression, small_cnn
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results"
+PAPER = RESULTS / "paper"
+
+# (mode name, beta) per dataset — the paper's Table 2 columns
+MODES = {
+    "synthetic": [("IDL", None), ("LN", 0.5), ("SLN", 0.5), ("LDF", 0.7), ("MDF", 0.7)],
+    "cifar": [("IDL", None), ("LN", 0.5), ("SLN", 0.5), ("LDF", 0.7), ("MDF", 0.7)],
+    "fashion": [("IDL", None), ("YMF", 0.9), ("YC", 0.9)],
+}
+
+METHODS = ["UniformSample", "MDSample", "Power-of-Choice", "FedProx",
+           "FedGS(0.0)", "FedGS(0.5)", "FedGS(1.0)", "FedGS(2.0)", "FedGS(5.0)"]
+
+
+def make_dataset(name: str, quick: bool):
+    if name == "synthetic":
+        from repro.data.synthetic import make_synthetic
+        return make_synthetic(n_clients=30, alpha=0.5, beta=0.5, seed=0)
+    if name == "cifar":
+        from repro.data.vision import make_cifar_like
+        return make_cifar_like(n_clients=50 if quick else 100,
+                               n_total=4000 if quick else 20000, seed=0)
+    if name == "fashion":
+        from repro.data.vision import make_fashion_like
+        return make_fashion_like(n_clients=50 if quick else 100,
+                                 n_total=4000 if quick else 20000, seed=0)
+    raise ValueError(name)
+
+
+def make_model(ds_name: str):
+    if ds_name == "synthetic":
+        return logistic_regression()
+    shape = (8, 8, 3) if ds_name == "cifar" else (8, 8, 1)
+    return small_cnn(shape=shape)
+
+
+def fl_config(ds_name: str, quick: bool, seed: int) -> FLConfig:
+    if ds_name == "synthetic":
+        return FLConfig(rounds=60 if quick else 200, sample_frac=0.2,
+                        local_steps=10, batch_size=10, lr=0.1,
+                        eval_every=2, seed=seed)
+    lr = 0.03 if ds_name == "cifar" else 0.1
+    return FLConfig(rounds=40 if quick else 150, sample_frac=0.1,
+                    local_steps=10, batch_size=32, lr=lr,
+                    eval_every=2, seed=seed)
+
+
+def make_method(name: str, prox_mu_default: float = 0.01):
+    """Returns (sampler, prox_mu)."""
+    if name.startswith("FedGS"):
+        alpha = float(name.split("(")[1].rstrip(")"))
+        return FedGSSampler(alpha=alpha, max_sweeps=32), 0.0
+    if name == "UniformSample":
+        return make_sampler("uniform"), 0.0
+    if name == "MDSample":
+        return make_sampler("md"), 0.0
+    if name == "Power-of-Choice":
+        return make_sampler("poc"), 0.0
+    if name == "FedProx":
+        return make_sampler("md"), prox_mu_default
+    raise ValueError(name)
+
+
+def run_setting(ds_name: str, mode_name: str, beta, method: str, *,
+                quick: bool = True, seed: int = 0, graph_h=None,
+                graph_tag: str = "g", force: bool = False) -> dict:
+    """One (dataset, mode, method, seed) cell. Cached on disk."""
+    PAPER.mkdir(parents=True, exist_ok=True)
+    tag = "quick" if quick else "full"
+    key = f"{ds_name}__{mode_name}{'' if beta is None else beta}__{method}__s{seed}__{tag}"
+    if graph_h is not None:
+        key += f"__{graph_tag}"
+    path = PAPER / (key.replace("(", "").replace(")", "").replace(".", "_") + ".json")
+    if path.exists() and not force:
+        return json.loads(path.read_text())
+
+    ds = make_dataset(ds_name, quick)
+    model = make_model(ds_name)
+    sampler, prox = make_method(method)
+    cfg = fl_config(ds_name, quick, seed)
+    cfg.prox_mu = prox
+    mode = make_mode(mode_name, n_clients=ds.n_clients, data_sizes=ds.sizes,
+                     label_sets=ds.label_sets(), num_labels=ds.num_classes,
+                     beta=beta, seed=99)
+    eng = FLEngine(ds, model, sampler, mode, cfg)
+    if isinstance(sampler, FedGSSampler):
+        if graph_h is not None:
+            eng.install_graph_from_H(graph_h)
+        elif ds_name == "synthetic":
+            eng.install_oracle_graph(ds.opt_params)
+        else:
+            eng.install_oracle_graph()          # label-distribution features
+    t0 = time.time()
+    hist = eng.run()
+    from repro.core.fairness import count_variance, count_range, gini
+    rec = {
+        "dataset": ds_name, "mode": mode_name, "beta": beta, "method": method,
+        "seed": seed, "quick": quick,
+        "best_loss": hist.best_loss,
+        "final_loss": hist.val_loss[-1],
+        "best_acc": float(np.max(hist.val_acc)),
+        "count_var": count_variance(eng.counts),
+        "count_range": count_range(eng.counts),
+        "gini": gini(eng.counts),
+        "counts": eng.counts.tolist(),
+        "rounds": cfg.rounds,
+        "loss_curve": hist.val_loss,
+        "curve_rounds": hist.rounds,
+        "wall_s": round(time.time() - t0, 1),
+    }
+    path.write_text(json.dumps(rec))
+    print(f"[bench] {key}: best_loss={rec['best_loss']:.4f} "
+          f"var={rec['count_var']:.2f} ({rec['wall_s']}s)", flush=True)
+    return rec

@@ -1,0 +1,76 @@
+"""Kernel micro-bench: Pallas kernels (interpret mode — correctness-grade
+timing only on CPU; the BlockSpec tiling targets TPU) vs the pure-jnp
+references.  Reports us/call and the max abs error vs the oracle."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, reps=2):
+    out = fn()
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn()
+        jax.block_until_ready(out)
+    return (time.time() - t0) / reps * 1e6, out
+
+
+def run(quick: bool = True) -> list[dict]:
+    rng = np.random.default_rng(0)
+    rows = []
+
+    # Floyd-Warshall
+    n = 256
+    r = (rng.random((n, n)) * 10).astype(np.float32)
+    r[rng.random((n, n)) < 0.4] = np.inf
+    np.fill_diagonal(r, 0)
+    rj = jnp.asarray(r)
+    us_k, out_k = _time(lambda: ops.floyd_warshall(rj))
+    us_r, out_r = _time(lambda: ref.floyd_warshall_ref(rj))
+    rows.append({"table": "kernels", "kernel": "floyd_warshall", "shape": f"{n}x{n}",
+                 "pallas_us": round(us_k), "ref_us": round(us_r),
+                 "max_err": float(np.nanmax(np.abs(np.asarray(out_k) - np.asarray(out_r))))})
+
+    # pairwise similarity
+    u = jnp.asarray(rng.random((256, 128)).astype(np.float32))
+    us_k, out_k = _time(lambda: ops.pairwise_similarity(u))
+    us_r, out_r = _time(lambda: ref.similarity_ref(u))
+    rows.append({"table": "kernels", "kernel": "pairwise_similarity",
+                 "shape": "256x128",
+                 "pallas_us": round(us_k), "ref_us": round(us_r),
+                 "max_err": float(np.max(np.abs(np.asarray(out_k) - np.asarray(out_r))))})
+
+    # window attention
+    b, s, h, d, w = 1, 512, 4, 64, 128
+    q = jnp.asarray(rng.standard_normal((b, s, h, d)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((b, s, h, d)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((b, s, h, d)).astype(np.float32))
+    us_k, out_k = _time(lambda: ops.window_attention(q, k, v, window=w), reps=1)
+    us_r, out_r = _time(lambda: ref.window_attention_ref(q, k, v, window=w), reps=1)
+    rows.append({"table": "kernels", "kernel": "window_attention",
+                 "shape": f"b{b} s{s} h{h} d{d} w{w}",
+                 "pallas_us": round(us_k), "ref_us": round(us_r),
+                 "max_err": float(np.max(np.abs(np.asarray(out_k) - np.asarray(out_r))))})
+    return rows
+
+
+def summarize(rows) -> list[str]:
+    out = ["", "== Pallas kernels (interpret mode) vs jnp oracle =="]
+    out.append(f"{'kernel':22s} {'shape':18s} {'pallas us':>10s} {'ref us':>8s} {'max err':>10s}")
+    for r in rows:
+        out.append(f"{r['kernel']:22s} {r['shape']:18s} {r['pallas_us']:10d} "
+                   f"{r['ref_us']:8d} {r['max_err']:10.2e}")
+    return out
+
+
+if __name__ == "__main__":
+    for line in summarize(run()):
+        print(line)

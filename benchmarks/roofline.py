@@ -1,0 +1,71 @@
+"""§Roofline report: reads the dry-run JSON records and formats the
+per-(arch x shape x mesh) roofline table (compute / memory / collective terms,
+dominant bottleneck, MODEL_FLOPS / HLO_FLOPs usefulness ratio)."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+DRYRUN = pathlib.Path(__file__).resolve().parent / "results" / "dryrun"
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh: str = "pod1", variant: str = "baseline") -> list[dict]:
+    rows = []
+    for f in sorted(DRYRUN.glob("*.json")):
+        r = json.loads(f.read_text())
+        if (r.get("mesh") == mesh and r.get("variant", "baseline") == variant
+                and r.get("shape") in SHAPE_ORDER):   # fedsim reported separately
+            rows.append(r)
+    rows.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])
+                             if r["shape"] in SHAPE_ORDER else 9))
+    return rows
+
+
+def run(quick: bool = True) -> list[dict]:
+    out = []
+    for mesh in ("pod1", "pod2"):
+        for r in load(mesh):
+            out.append({
+                "table": f"roofline_{mesh}", "arch": r["arch"],
+                "shape": r["shape"], "ok": r["ok"],
+                "compute_s": r.get("compute_term_s"),
+                "memory_s": r.get("memory_term_s"),
+                "collective_s": r.get("collective_term_s"),
+                "dominant": r.get("dominant"),
+                "useful_flop_ratio": r.get("useful_flop_ratio"),
+                "temp_gb": round(r.get("mem", {}).get("temp_size_in_bytes", 0) / 1e9, 1),
+                "error": r.get("error"),
+            })
+    return out
+
+
+def summarize(rows) -> list[str]:
+    out = []
+    for mesh in ("pod1", "pod2"):
+        sub = [r for r in rows if r["table"] == f"roofline_{mesh}"]
+        if not sub:
+            continue
+        n_ok = sum(1 for r in sub if r["ok"])
+        out.append("")
+        out.append(f"== Roofline ({mesh}: "
+                   f"{'16x16=256 chips' if mesh == 'pod1' else '2x16x16=512 chips'}; "
+                   f"{n_ok}/{len(sub)} lower+compile OK) ==")
+        out.append(f"{'arch':24s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} "
+                   f"{'coll_s':>10s} {'dominant':>10s} {'useful':>7s} {'tempGB':>7s}")
+        for r in sub:
+            if not r["ok"]:
+                out.append(f"{r['arch']:24s} {r['shape']:12s} FAILED: {r['error']}")
+                continue
+            out.append(
+                f"{r['arch']:24s} {r['shape']:12s} {r['compute_s']:10.3e} "
+                f"{r['memory_s']:10.3e} {r['collective_s']:10.3e} "
+                f"{r['dominant']:>10s} {r['useful_flop_ratio']:7.3f} "
+                f"{r['temp_gb']:7.1f}")
+    return out
+
+
+if __name__ == "__main__":
+    for line in summarize(run()):
+        print(line)

@@ -1,0 +1,87 @@
+"""Benchmark orchestrator — one section per paper table/figure, plus the
+framework-scale extras (solver scaling, kernel micro-bench, roofline report).
+
+  PYTHONPATH=src python -m benchmarks.run             # quick (CPU-budget) pass
+  PYTHONPATH=src python -m benchmarks.run --full      # paper-scale settings
+  PYTHONPATH=src python -m benchmarks.run --only table2,roofline
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import io
+import json
+import pathlib
+import time
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results"
+
+SECTIONS = ["table2", "fig4", "table3", "table4", "dynamic", "scaling",
+            "kernels", "roofline", "variants"]
+
+
+def _section(name: str, quick: bool):
+    if name == "table2":
+        from benchmarks import table2_availability as m
+    elif name == "fig4":
+        from benchmarks import fig4_fairness as m
+    elif name == "table3":
+        from benchmarks import table3_graph as m
+    elif name == "table4":
+        from benchmarks import table4_constructed as m
+    elif name == "dynamic":
+        from benchmarks import ablation_dynamic as m
+    elif name == "scaling":
+        from benchmarks import sampler_scaling as m
+    elif name == "kernels":
+        from benchmarks import kernel_bench as m
+    elif name == "roofline":
+        from benchmarks import roofline as m
+    elif name == "variants":
+        from benchmarks import variants_report as m
+    else:
+        raise ValueError(name)
+    rows = m.run(quick=quick)
+    return rows, m.summarize(rows)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale rounds/clients (hours on CPU)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of sections")
+    args = ap.parse_args(argv)
+    quick = not args.full
+    sections = args.only.split(",") if args.only else SECTIONS
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    all_rows = []
+    for name in sections:
+        t0 = time.time()
+        print(f"\n######## {name} ########", flush=True)
+        rows, summary = _section(name, quick)
+        all_rows.extend(rows)
+        for line in summary:
+            print(line, flush=True)
+        print(f"[{name}: {time.time() - t0:.1f}s]", flush=True)
+
+    # machine-readable dump: one CSV per table
+    by_table: dict[str, list] = {}
+    for r in all_rows:
+        by_table.setdefault(r.get("table", "misc"), []).append(r)
+    for table, rows in by_table.items():
+        keys = sorted({k for r in rows for k in r if k not in
+                       ("counts", "loss_curve", "curve_rounds")})
+        buf = io.StringIO()
+        w = csv.DictWriter(buf, fieldnames=keys, extrasaction="ignore")
+        w.writeheader()
+        for r in rows:
+            w.writerow(r)
+        (RESULTS / f"{table}.csv").write_text(buf.getvalue())
+    (RESULTS / "all_rows.json").write_text(json.dumps(all_rows, indent=1, default=str))
+    print(f"\nwrote {len(all_rows)} rows across {len(by_table)} tables to {RESULTS}")
+
+
+if __name__ == "__main__":
+    main()

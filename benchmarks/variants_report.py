@@ -1,0 +1,51 @@
+"""§Perf report: before/after of every recorded perf-variant dry-run vs its
+baseline (the hypothesis→change→measure log lives in EXPERIMENTS.md §Perf)."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+DRYRUN = pathlib.Path(__file__).resolve().parent / "results" / "dryrun"
+
+
+def _dom(r):
+    return max(r["compute_term_s"], r["memory_term_s"], r["collective_term_s"])
+
+
+def run(quick: bool = True) -> list[dict]:
+    rows = []
+    for f in sorted(DRYRUN.glob("*.json")):
+        r = json.loads(f.read_text())
+        if r.get("variant", "baseline") == "baseline" or not r.get("ok"):
+            continue
+        base_f = DRYRUN / f"{r['arch']}__{r['shape']}__{r['mesh']}.json"
+        if not base_f.exists():
+            continue
+        b = json.loads(base_f.read_text())
+        if not b.get("ok"):
+            continue
+        rows.append({
+            "table": "variants", "arch": r["arch"], "shape": r["shape"],
+            "mesh": r["mesh"], "variant": r["variant"],
+            "base_dominant_s": _dom(b), "variant_dominant_s": _dom(r),
+            "speedup": _dom(b) / max(_dom(r), 1e-12),
+            "base_temp_gb": round(b["mem"].get("temp_size_in_bytes", 0) / 1e9, 1),
+            "variant_temp_gb": round(r["mem"].get("temp_size_in_bytes", 0) / 1e9, 1),
+        })
+    rows.sort(key=lambda x: -x["speedup"])
+    return rows
+
+
+def summarize(rows) -> list[str]:
+    out = ["", "== Perf variants: dominant roofline term, baseline -> variant =="]
+    out.append(f"{'arch/shape':42s} {'variant':24s} {'base_s':>9s} {'var_s':>9s} {'x':>6s}")
+    for r in rows:
+        out.append(f"{(r['arch'] + '/' + r['shape'])[:42]:42s} "
+                   f"{r['variant']:24s} {r['base_dominant_s']:9.3g} "
+                   f"{r['variant_dominant_s']:9.3g} {r['speedup']:6.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    for line in summarize(run()):
+        print(line)

@@ -1,0 +1,51 @@
+"""Quickstart: FedGS vs UniformSample on the paper's Synthetic(0.5, 0.5)
+dataset under skewed (LogNormal) client availability.
+
+  PYTHONPATH=src python examples/quickstart.py
+
+Runs in ~1 minute on CPU and prints the two methods' loss curves and final
+sampling-count fairness — the paper's core claim in miniature.
+"""
+import numpy as np
+
+from repro.core.availability import make_mode
+from repro.core.fairness import count_variance, gini
+from repro.core.sampler import FedGSSampler, UniformSampler
+from repro.data.synthetic import make_synthetic
+from repro.fed.engine import FLConfig, FLEngine
+from repro.fed.models import logistic_regression
+
+
+def run(sampler, ds, label):
+    mode = make_mode("LN", n_clients=ds.n_clients, beta=0.5, seed=99)
+    cfg = FLConfig(rounds=40, sample_frac=0.2, local_steps=10, batch_size=10,
+                   lr=0.1, eval_every=4, seed=0)
+    eng = FLEngine(ds, logistic_regression(), sampler, mode, cfg)
+    if isinstance(sampler, FedGSSampler):
+        eng.install_oracle_graph(ds.opt_params)      # 3DG from local optima
+    hist = eng.run(progress=lambda t, l, a: print(
+        f"  [{label}] round {t:3d}  val_loss={l:.4f}  val_acc={a:.3f}"))
+    return hist, eng.counts
+
+
+def main():
+    ds = make_synthetic(n_clients=30, alpha=0.5, beta=0.5, seed=0)
+    print(f"Synthetic(0.5, 0.5): {ds.n_clients} clients, "
+          f"sizes {ds.sizes.min()}..{ds.sizes.max()}")
+
+    print("\n-- UniformSample (McMahan et al. 2017) --")
+    h_u, c_u = run(UniformSampler(), ds, "uniform")
+    print("\n-- FedGS (this paper, alpha=1) --")
+    h_g, c_g = run(FedGSSampler(alpha=1.0), ds, "fedgs")
+
+    print("\n== summary under LogNormal(0.5) availability ==")
+    print(f"{'method':15s} {'best loss':>10s} {'Var(v^T)':>10s} {'gini':>6s}")
+    print(f"{'UniformSample':15s} {h_u.best_loss:10.4f} "
+          f"{count_variance(c_u):10.2f} {gini(c_u):6.3f}")
+    print(f"{'FedGS':15s} {h_g.best_loss:10.4f} "
+          f"{count_variance(c_g):10.2f} {gini(c_g):6.3f}")
+    assert np.isfinite(h_g.best_loss)
+
+
+if __name__ == "__main__":
+    main()

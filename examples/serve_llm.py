@@ -1,0 +1,20 @@
+"""End-to-end serving driver: batched request serving of an assigned
+architecture (reduced variant on CPU; the dry-run proves the full configs
+shard on the production mesh).
+
+  PYTHONPATH=src python examples/serve_llm.py --arch smollm-135m --batch 8
+"""
+import sys
+
+from repro.launch import serve
+
+
+def main():
+    argv = sys.argv[1:]
+    if "--reduced" not in argv:
+        argv = argv + ["--reduced"]
+    serve.main(argv)
+
+
+if __name__ == "__main__":
+    main()

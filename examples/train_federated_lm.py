@@ -1,0 +1,36 @@
+"""End-to-end training driver: federated LM training (Algorithm 1) over the
+assigned-architecture model zoo with FedGS sampling — clients own distinct
+Markov token streams, the 3DG is built from client unigram statistics.
+
+Default: ~200 federated training steps (50 rounds x 4 local steps) of the
+reduced smollm-135m on CPU.  On an accelerator, drop --reduced and raise
+--seq/--batch; the production mesh path is exercised by launch/dryrun.py.
+
+  PYTHONPATH=src python examples/train_federated_lm.py --rounds 50
+"""
+import sys
+
+from repro.launch import train
+
+
+def main():
+    argv = sys.argv[1:]
+    defaults = ["--reduced", "--rounds", "50", "--clients", "16",
+                "--sampler", "fedgs", "--mode", "SLN"]
+    # user-provided flags win; defaults fill the gaps
+    have = {a for a in argv if a.startswith("--")}
+    out = list(argv)
+    i = 0
+    while i < len(defaults):
+        flag = defaults[i]
+        has_val = i + 1 < len(defaults) and not defaults[i + 1].startswith("--")
+        if flag not in have:
+            out.append(flag)
+            if has_val:
+                out.append(defaults[i + 1])
+        i += 2 if has_val else 1
+    train.main(out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Flat-npz pytree checkpointing (+ JSON metadata sidecar).
+
+Stores any dict-pytree of arrays (model params, optimizer state, FedGS round
+state: sampling counts v^t, the H matrix, rng key) with '/'-joined key paths.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        arr = np.asarray(tree)
+        if arr.dtype.name == "bfloat16":       # npz has no bf16: store raw bits
+            out[prefix[:-1] + "%bf16"] = arr.view(np.uint16)
+        else:
+            out[prefix[:-1]] = arr
+    return out
+
+
+def save_checkpoint(path: str, tree, metadata: dict | None = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
+    if metadata is not None:
+        with open(os.path.splitext(path)[0] + ".json", "w") as f:
+            json.dump(metadata, f, indent=2, default=str)
+
+
+def load_checkpoint(path: str, like=None):
+    """Returns the nested dict; if ``like`` (a template pytree) is given, the
+    result is reassembled to match its structure and dtypes."""
+    p = path if path.endswith(".npz") else path + ".npz"
+    with np.load(p) as z:
+        flat = {}
+        for k in z.files:
+            if k.endswith("%bf16"):
+                import ml_dtypes
+                flat[k[:-5]] = z[k].view(ml_dtypes.bfloat16)
+            else:
+                flat[k] = z[k]
+    nested: dict = {}
+    for k, v in flat.items():
+        cur = nested
+        parts = k.split("/")
+        for part in parts[:-1]:
+            cur = cur.setdefault(part, {})
+        cur[parts[-1]] = v
+    if like is None:
+        return nested
+
+    def rebuild(template, node):
+        if isinstance(template, dict):
+            return {k: rebuild(template[k], node[k]) for k in template}
+        if isinstance(template, (list, tuple)):
+            vals = [rebuild(t, node[str(i)]) for i, t in enumerate(template)]
+            return type(template)(vals)
+        arr = np.asarray(node)
+        return arr.astype(template.dtype) if hasattr(template, "dtype") else arr
+
+    return rebuild(like, nested)

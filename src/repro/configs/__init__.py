@@ -1,0 +1,2 @@
+from repro.configs.base import ArchConfig, InputShape, INPUT_SHAPES
+from repro.configs.registry import get_config, list_archs, REGISTRY

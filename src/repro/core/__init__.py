@@ -1,0 +1,15 @@
+# The paper's primary contribution: FedGS — graph-based client sampling
+# with arbitrary client availability (3DG + APSP + QUBO sampler + the
+# seven availability modes + fairness metrics + SSPP graph construction).
+from repro.core.availability import make_mode, ALL_MODES, AvailabilityMode
+from repro.core.graph import (
+    build_3dg, similarity_to_adjacency, shortest_paths, floyd_warshall_np,
+    oracle_similarity, update_cosine_similarity, functional_similarity,
+    finite_cap, edge_f1, normalize_01,
+)
+from repro.core.sampler import (
+    Sampler, UniformSampler, MDSampler, PowerOfChoiceSampler, FedGSSampler,
+    make_sampler,
+)
+from repro.core.fairness import count_variance, count_range, gini
+from repro.core.sspp import secure_dot, secure_similarity_matrix

@@ -1,0 +1,148 @@
+"""The paper's seven client-availability modes (Table 1).
+
+Each mode yields a per-client active probability ``p_k(t)``; each round the
+active set is an independent Bernoulli draw with a *dedicated* seed stream
+(independent of model-training randomness, as in Appendix C, so all methods
+see identical availability traces).
+
+Modes: IDL, MDF, LDF, YMF, YC, LN, SLN.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class AvailabilityMode:
+    name = "base"
+
+    def probs(self, t: int) -> np.ndarray:
+        raise NotImplementedError
+
+    def sample(self, t: int, rng: np.random.Generator) -> np.ndarray:
+        """Boolean active mask for round t."""
+        p = self.probs(t)
+        a = rng.random(p.shape) < p
+        if not a.any():                     # guarantee at least one active client
+            a[int(rng.integers(len(a)))] = True
+        return a
+
+
+class Ideal(AvailabilityMode):
+    """Full client availability."""
+    name = "IDL"
+
+    def __init__(self, n_clients: int):
+        self.n = n_clients
+
+    def probs(self, t):
+        return np.ones(self.n)
+
+
+class MoreDataFirst(AvailabilityMode):
+    """p_k = n_k^beta / max_i n_i^beta."""
+    name = "MDF"
+
+    def __init__(self, data_sizes, beta: float = 0.7):
+        ns = np.asarray(data_sizes, float)
+        self.p = ns ** beta / np.max(ns ** beta)
+
+    def probs(self, t):
+        return self.p
+
+
+class LessDataFirst(AvailabilityMode):
+    """p_k = n_k^-beta / max_i n_i^-beta."""
+    name = "LDF"
+
+    def __init__(self, data_sizes, beta: float = 0.7):
+        ns = np.asarray(data_sizes, float)
+        inv = ns ** (-beta)
+        self.p = inv / np.max(inv)
+
+    def probs(self, t):
+        return self.p
+
+
+class YMaxFirst(AvailabilityMode):
+    """p_k = beta * min_i{y_ki} / max_{c,j}{y_cj} + (1 - beta).  (Gu et al. 2021)"""
+    name = "YMF"
+
+    def __init__(self, label_sets: list[set[int]], beta: float = 0.9):
+        gmax = max(max(s) for s in label_sets)
+        self.p = np.array([beta * min(s) / max(gmax, 1) + (1 - beta) for s in label_sets])
+
+    def probs(self, t):
+        return self.p
+
+
+class YCycle(AvailabilityMode):
+    """Periodic availability keyed on label values (ours/Table 1)."""
+    name = "YC"
+
+    def __init__(self, label_sets: list[set[int]], num_labels: int,
+                 beta: float = 0.9, period: int = 20):
+        self.label_sets = label_sets
+        self.num_y = num_labels
+        self.beta = beta
+        self.tp = period
+
+    def probs(self, t):
+        phase = (1 + (t % self.tp)) / self.tp
+        out = np.empty(len(self.label_sets))
+        for k, s in enumerate(self.label_sets):
+            hit = any(y / self.num_y <= phase < (y + 1) / self.num_y for y in s)
+            out[k] = self.beta * float(hit) + (1 - self.beta)
+        return out
+
+
+class LogNormal(AvailabilityMode):
+    """Static availability c_k ~ lognormal(0, ln 1/(1-beta)); p = c/max c."""
+    name = "LN"
+
+    def __init__(self, n_clients: int, beta: float = 0.5, seed: int = 0):
+        rng = np.random.default_rng(seed)
+        sigma = np.log(1.0 / (1.0 - beta))
+        c = rng.lognormal(0.0, sigma, n_clients)
+        self.p = c / c.max()
+
+    def probs(self, t):
+        return self.p
+
+
+class SinLogNormal(LogNormal):
+    """Sin-modulated lognormal availability."""
+    name = "SLN"
+
+    def __init__(self, n_clients: int, beta: float = 0.5, seed: int = 0,
+                 period: int = 24):
+        super().__init__(n_clients, beta, seed)
+        self.tp = period
+
+    def probs(self, t):
+        mod = 0.4 * np.sin(2 * np.pi * (1 + (t % self.tp)) / self.tp) + 0.5
+        return np.clip(self.p * mod, 0.0, 1.0)
+
+
+def make_mode(name: str, *, n_clients: int, data_sizes=None, label_sets=None,
+              num_labels: int = 10, beta: float | None = None,
+              seed: int = 0, period: int = 20) -> AvailabilityMode:
+    """Factory used by benchmarks/launchers: mode names as in the paper."""
+    name = name.upper()
+    if name == "IDL":
+        return Ideal(n_clients)
+    if name == "MDF":
+        return MoreDataFirst(data_sizes, beta if beta is not None else 0.7)
+    if name == "LDF":
+        return LessDataFirst(data_sizes, beta if beta is not None else 0.7)
+    if name == "YMF":
+        return YMaxFirst(label_sets, beta if beta is not None else 0.9)
+    if name == "YC":
+        return YCycle(label_sets, num_labels, beta if beta is not None else 0.9, period)
+    if name == "LN":
+        return LogNormal(n_clients, beta if beta is not None else 0.5, seed)
+    if name == "SLN":
+        return SinLogNormal(n_clients, beta if beta is not None else 0.5, seed, period)
+    raise ValueError(f"unknown availability mode {name!r}")
+
+
+ALL_MODES = ("IDL", "MDF", "LDF", "YMF", "YC", "LN", "SLN")

@@ -1,0 +1,26 @@
+"""Fairness / long-term-bias metrics (paper Eq. 6, Fig. 4)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def count_variance(counts: np.ndarray) -> float:
+    """Var(v^t) with the paper's 1/(N-1) normalization (Eq. 6)."""
+    v = np.asarray(counts, np.float64)
+    n = len(v)
+    return float(np.sum((v - v.mean()) ** 2) / max(n - 1, 1))
+
+
+def count_range(counts: np.ndarray) -> int:
+    v = np.asarray(counts)
+    return int(v.max() - v.min())
+
+
+def gini(counts: np.ndarray) -> float:
+    """Gini coefficient of the sampling counts (0 = perfectly fair)."""
+    v = np.sort(np.asarray(counts, np.float64))
+    n = len(v)
+    if v.sum() == 0:
+        return 0.0
+    cum = np.cumsum(v)
+    return float((n + 1 - 2 * np.sum(cum) / cum[-1]) / n)

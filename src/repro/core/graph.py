@@ -1,0 +1,124 @@
+"""3DG — Data-Distribution-Dependency Graph construction (paper §3.2).
+
+Pipeline: client feature vectors U -> similarity matrix V (normalized to
+[0,1]) -> adjacency R via
+    R_ij = 0                 if i == j
+    R_ij = exp(-V_ij/sigma²) if V_ij >= eps     (similar => short edge)
+    R_ij = inf               if V_ij <  eps     (no edge)
+-> all-pairs shortest-path matrix H (Floyd–Warshall; the Pallas blocked
+kernel in ``repro.kernels`` accelerates this at datacenter client counts).
+
+Similarity sources:
+  * ``oracle_similarity``      — true label-distribution / feature dot products
+  * ``sspp_similarity``        — the same dot products computed through the
+                                 secure-scalar-product protocol (core/sspp.py)
+  * ``functional_similarity``  — Eq. 12: cosine of model outputs on a shared
+                                 Gaussian probe batch
+  * ``update_cosine_similarity`` — Eq. 11: cosine of raw model updates
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+# ------------------------------------------------------------- similarities
+def normalize_01(v: np.ndarray) -> np.ndarray:
+    """Paper Appendix C: min-max normalize similarities to [0, 1]."""
+    lo, hi = v.min(), v.max()
+    if hi - lo < 1e-12:
+        return np.zeros_like(v)
+    return (v - lo) / (hi - lo)
+
+
+def oracle_similarity(features: np.ndarray, *, kind: str = "dot") -> np.ndarray:
+    """features (N, d): label-distribution vectors (or flat local-optimum params)."""
+    u = np.asarray(features, np.float64)
+    if kind == "cosine":
+        u = u / np.maximum(np.linalg.norm(u, axis=1, keepdims=True), 1e-12)
+    v = u @ u.T
+    return normalize_01(v)
+
+
+def update_cosine_similarity(updates: np.ndarray) -> np.ndarray:
+    """Eq. 11: V_ij = max(cos(Δθ_i, Δθ_j), 0).  updates (N, P) flattened."""
+    u = np.asarray(updates, np.float64)
+    u = u / np.maximum(np.linalg.norm(u, axis=1, keepdims=True), 1e-12)
+    return np.maximum(u @ u.T, 0.0)
+
+
+def functional_similarity(embeddings: np.ndarray) -> np.ndarray:
+    """Eq. 12: V_ij = max(cos(e_i, e_j), 0) where e_i = mean layer-l output of
+    client i's model on the shared Gaussian probe batch."""
+    return update_cosine_similarity(embeddings)
+
+
+def probe_embeddings(apply_fn, client_params, probe: np.ndarray) -> np.ndarray:
+    """Run each client model on the shared probe; mean output embedding.
+
+    apply_fn(params, probe) -> (batch, dim) activations of the chosen layer
+    (the output layer in the paper).  client_params: stacked pytree (N, ...).
+    """
+    outs = jax.vmap(lambda p: jnp.mean(apply_fn(p, probe), axis=0))(client_params)
+    return np.asarray(outs)
+
+
+# --------------------------------------------------------------- adjacency
+def similarity_to_adjacency(v: np.ndarray, *, eps: float = 0.1,
+                            sigma2: float = 0.01) -> np.ndarray:
+    """V -> R per the paper (inf = no edge).  Diagonal is 0."""
+    v = np.asarray(v, np.float64)
+    r = np.where(v >= eps, np.exp(-v / sigma2), np.inf)
+    np.fill_diagonal(r, 0.0)
+    return r
+
+
+def floyd_warshall_np(r: np.ndarray) -> np.ndarray:
+    """Reference APSP (vectorized over k).  inf-safe."""
+    h = np.array(r, np.float64, copy=True)
+    n = h.shape[0]
+    for k in range(n):
+        np.minimum(h, h[:, k:k + 1] + h[k:k + 1, :], out=h)
+    return h
+
+
+def shortest_paths(r: np.ndarray, *, use_kernel: bool = False) -> np.ndarray:
+    """APSP dispatch: numpy reference or the Pallas blocked kernel."""
+    if use_kernel:
+        from repro.kernels.ops import floyd_warshall
+        return np.asarray(floyd_warshall(jnp.asarray(r, jnp.float32)))
+    return floyd_warshall_np(r)
+
+
+def finite_cap(h: np.ndarray, scale: float = 2.0) -> np.ndarray:
+    """Replace inf distances (disconnected pairs) with scale x max finite
+    distance so the QUBO objective stays finite while still strongly
+    preferring disconnected (= maximally dissimilar) pairs."""
+    finite = h[np.isfinite(h)]
+    cap = (finite.max() if finite.size else 1.0) * scale
+    out = np.where(np.isfinite(h), h, cap)
+    np.fill_diagonal(out, 0.0)
+    return out
+
+
+def build_3dg(features: np.ndarray, *, eps: float = 0.1, sigma2: float = 0.01,
+              sim_kind: str = "dot", use_kernel: bool = False):
+    """features -> (V, R, H).  The one-call oracle-3DG constructor."""
+    v = oracle_similarity(features, kind=sim_kind)
+    r = similarity_to_adjacency(v, eps=eps, sigma2=sigma2)
+    h = shortest_paths(r, use_kernel=use_kernel)
+    return v, r, h
+
+
+# --------------------------------------------------- graph-quality metrics
+def edge_f1(r_pred: np.ndarray, r_true: np.ndarray) -> tuple[float, float, float]:
+    """Precision/recall/F1 of predicted edges vs the oracle 3DG (Table 3)."""
+    pred = np.isfinite(r_pred) & (~np.eye(len(r_pred), dtype=bool))
+    true = np.isfinite(r_true) & (~np.eye(len(r_true), dtype=bool))
+    tp = float(np.sum(pred & true))
+    prec = tp / max(float(np.sum(pred)), 1e-12)
+    rec = tp / max(float(np.sum(true)), 1e-12)
+    f1 = 2 * prec * rec / max(prec + rec, 1e-12)
+    return prec, rec, f1

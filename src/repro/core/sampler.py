@@ -1,0 +1,187 @@
+"""Client samplers: FedGS (Eq. 16–17) + the paper's baselines.
+
+FedGS solves, each round t:
+    max_{s in {0,1}^|A_t|}  s^T ( alpha/N * H_A  -  diag(z_A) ) s
+    s.t.  1^T s = m,   m = min(M, |A_t|)
+with z_k = 2 (v_k^{t-1} - vbar^{t-1} - M/N) + 1  (long-term-bias penalty from
+the count-variance objective, Eq. 7/14).
+
+The problem is a p-dispersion variant (NP-hard).  The paper bounds solver
+wall-clock; we use a deterministic, fully vectorized greedy + best-swap local
+search with a fixed sweep budget (`max_sweeps`) — jit-compatible (static
+shapes, masks for availability) and TPU-lowerable.  A local optimum "already
+brings non-trivial improvement" (paper §3.3), which our experiments confirm.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from functools import partial
+
+
+# ----------------------------------------------------------------- baselines
+class Sampler:
+    """Stateless-per-round sampler interface. All samplers see only the
+    available set A_t (immediate availability, as in the paper)."""
+    name = "base"
+    needs_losses = False
+
+    def sample(self, *, avail: np.ndarray, m: int, rng: np.random.Generator,
+               counts: np.ndarray | None = None, data_sizes=None,
+               losses=None, t: int = 0) -> np.ndarray:
+        raise NotImplementedError
+
+
+class UniformSampler(Sampler):
+    """McMahan et al. 2017: uniform without replacement among available."""
+    name = "UniformSample"
+
+    def sample(self, *, avail, m, rng, **_):
+        idx = np.flatnonzero(avail)
+        m = min(m, len(idx))
+        return np.sort(rng.choice(idx, size=m, replace=False))
+
+
+class MDSampler(Sampler):
+    """Li et al. 2020: probability proportional to local data size (with
+    replacement in theory; we draw without replacement by weight, the common
+    implementation), among available clients."""
+    name = "MDSample"
+
+    def sample(self, *, avail, m, rng, data_sizes=None, **_):
+        idx = np.flatnonzero(avail)
+        m = min(m, len(idx))
+        w = np.asarray(data_sizes, float)[idx]
+        w = w / w.sum()
+        return np.sort(rng.choice(idx, size=m, replace=False, p=w))
+
+
+class PowerOfChoiceSampler(Sampler):
+    """Cho et al. 2020: sample a candidate set by data size, then keep the
+    top-m highest local loss."""
+    name = "Power-of-Choice"
+    needs_losses = True
+
+    def __init__(self, d_factor: int = 2):
+        self.d_factor = d_factor
+
+    def sample(self, *, avail, m, rng, data_sizes=None, losses=None, **_):
+        idx = np.flatnonzero(avail)
+        m = min(m, len(idx))
+        d = min(len(idx), max(m, self.d_factor * m))
+        w = np.asarray(data_sizes, float)[idx]
+        cand = rng.choice(idx, size=d, replace=False, p=w / w.sum())
+        order = np.argsort(-np.asarray(losses)[cand])
+        return np.sort(cand[order[:m]])
+
+
+# -------------------------------------------------------------------- FedGS
+@partial(jax.jit, static_argnames=("m", "max_sweeps"))
+def _fedgs_solve(q: jax.Array, avail: jax.Array, *, m: int, max_sweeps: int):
+    """Greedy + best-swap local search on  max s^T Q s,  |s| = m,  s <= avail.
+
+    q: (N, N) symmetric with diagonal = -z (counts penalty).
+    Returns s (N,) bool.
+    """
+    n = q.shape[0]
+    neg = jnp.float32(-1e18)
+
+    # ---------------- greedy construction --------------------------------
+    def greedy_step(carry, _):
+        s, r = carry                       # s: (N,) bool, r_k = sum_{i in S} Q_ik
+        gain = q.diagonal() + 2.0 * r      # marginal gain of adding k
+        gain = jnp.where(s | ~avail, neg, gain)
+        k = jnp.argmax(gain)
+        s = s.at[k].set(True)
+        r = r + q[k]
+        return (s, r), None
+
+    s0 = jnp.zeros((n,), bool)
+    r0 = jnp.zeros((n,), jnp.float32)
+    (s, r), _ = jax.lax.scan(greedy_step, (s0, r0), None, length=m)
+
+    # ---------------- best-swap local search -----------------------------
+    diag = q.diagonal()
+
+    def sweep(carry, _):
+        s, r = carry
+        # delta(i -> j) = -2 r_i + Q_ii + 2 (r_j - Q_ij) + Q_jj
+        out_term = (-2.0 * r + diag)                          # (N,) for i in S
+        in_term = (2.0 * r + diag)                            # (N,) for j notin S
+        delta = out_term[:, None] + in_term[None, :] - 2.0 * q
+        delta = jnp.where(s[:, None], delta, neg)             # i must be in S
+        delta = jnp.where((~s & avail)[None, :], delta, neg)  # j must be addable
+        flat = jnp.argmax(delta)
+        i, j = flat // n, flat % n
+        best = delta[i, j]
+
+        def do_swap(args):
+            s, r = args
+            s2 = s.at[i].set(False).at[j].set(True)
+            r2 = r - q[i] + q[j]
+            return s2, r2
+
+        s, r = jax.lax.cond(best > 1e-9, do_swap, lambda a: a, (s, r))
+        return (s, r), best
+
+    (s, r), _ = jax.lax.scan(sweep, (s, r), None, length=max_sweeps)
+    return s
+
+
+@dataclass
+class FedGSSampler(Sampler):
+    """The paper's method.  alpha weighs graph dispersion vs count balance."""
+    alpha: float = 1.0
+    max_sweeps: int = 64
+
+    name = "FedGS"
+
+    def __post_init__(self):
+        self.name = f"FedGS(alpha={self.alpha})"
+        self._h = None
+
+    def set_graph(self, h: np.ndarray):
+        """Install the (finite-capped) shortest-path matrix H.
+
+        H is normalized to [0, 1] by its max finite entry.  The paper's Eq. 16
+        uses raw H, but with its 3DG constants (sigma^2 = 0.01) the edge
+        weights exp(-V/sigma^2) are O(1e-4) while the count-balance term z is
+        O(1), which silently reduces FedGS to pure count balancing for any
+        alpha in the paper's sweep.  Normalizing makes alpha trade the two
+        objectives on comparable scales (DESIGN.md assumption log).
+        """
+        from repro.core.graph import finite_cap
+        h = np.asarray(finite_cap(h), np.float64)
+        hmax = h.max()
+        if hmax > 0:
+            h = h / hmax
+        self._h = h.astype(np.float32)
+
+    def sample(self, *, avail, m, rng, counts=None, **_):
+        assert self._h is not None, "call set_graph(H) first"
+        n = len(avail)
+        m_eff = int(min(m, int(avail.sum())))
+        v = np.asarray(counts, np.float64)
+        z = 2.0 * (v - v.mean() - m / n) + 1.0
+        q = (self.alpha / n) * self._h - np.diag(z)
+        q = 0.5 * (q + q.T)                           # symmetrize (H should be)
+        s = _fedgs_solve(jnp.asarray(q, jnp.float32), jnp.asarray(avail),
+                         m=m_eff, max_sweeps=self.max_sweeps)
+        return np.flatnonzero(np.asarray(s))
+
+
+def make_sampler(name: str, **kw) -> Sampler:
+    name = name.lower()
+    if name in ("uniform", "uniformsample"):
+        return UniformSampler()
+    if name in ("md", "mdsample"):
+        return MDSampler()
+    if name in ("poc", "power-of-choice", "powerofchoice"):
+        return PowerOfChoiceSampler()
+    if name == "fedgs":
+        return FedGSSampler(**kw)
+    raise ValueError(f"unknown sampler {name!r}")

@@ -1,0 +1,5 @@
+from repro.data.fed_dataset import FedDataset
+from repro.data.synthetic import make_synthetic
+from repro.data.vision import make_cifar_like, make_fashion_like
+from repro.data.partition import dirichlet_label_partition, two_label_partition, lognormal_sizes
+from repro.data.lm_stream import token_batches

@@ -1,0 +1,4 @@
+from repro.fed.models import logistic_regression, small_cnn, FedModel
+from repro.fed.client import make_local_trainer, make_loss_prober
+from repro.fed.server import aggregate
+from repro.fed.engine import FLConfig, FLEngine

@@ -1,0 +1,56 @@
+"""Client-side local training — one vmap'd XLA program over sampled clients.
+
+This replaces the paper's sequential PyTorch client loop with a single
+client-batched program (the TPU-native formulation, DESIGN.md §3): all
+sampled clients' padded data is stacked and E local SGD steps run under
+``vmap`` with per-client batch draws.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.tree import global_norm
+
+
+def make_local_trainer(model_loss, *, local_steps: int, batch_size: int,
+                       prox_mu: float = 0.0):
+    """Returns jit'd fn(global_params, x (M,n_max,...), y (M,n_max), sizes (M,),
+    lr, rng) -> stacked local params (M, ...)."""
+
+    def one_client(global_params, x, y, n_k, lr, rng):
+        def loss_fn(p, xb, yb):
+            l = model_loss(p, xb, yb)
+            if prox_mu > 0.0:
+                sq = sum(jnp.sum(jnp.square(a - b)) for a, b in zip(
+                    jax.tree_util.tree_leaves(p),
+                    jax.tree_util.tree_leaves(global_params)))
+                l = l + 0.5 * prox_mu * sq
+            return l
+
+        def step(params, key):
+            idx = jax.random.randint(key, (batch_size,), 0, jnp.maximum(n_k, 1))
+            g = jax.grad(loss_fn)(params, x[idx], y[idx])
+            params = jax.tree_util.tree_map(lambda p, gg: p - lr * gg, params, g)
+            return params, None
+
+        params, _ = jax.lax.scan(step, global_params,
+                                 jax.random.split(rng, local_steps))
+        return params
+
+    batched = jax.vmap(one_client, in_axes=(None, 0, 0, 0, None, 0))
+    return jax.jit(batched)
+
+
+def make_loss_prober(model_loss, *, probe_size: int = 64):
+    """jit'd fn(params, x (N,n_max,...), y, sizes, rng) -> per-client loss (N,)
+    of the *global* model on each client's local data (Power-of-Choice)."""
+
+    def one(params, x, y, n_k, rng):
+        idx = jax.random.randint(rng, (probe_size,), 0, jnp.maximum(n_k, 1))
+        return model_loss(params, x[idx], y[idx])
+
+    batched = jax.vmap(one, in_axes=(None, 0, 0, 0, 0))
+    return jax.jit(batched)

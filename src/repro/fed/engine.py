@@ -1,0 +1,218 @@
+"""The federated round engine (Algorithm 1).
+
+Per round t:
+  1. availability mode draws A_t            (independent seed stream)
+  2. sampler picks S_t ⊆ A_t, |S_t| ≤ M     (FedGS solves Eq. 16)
+  3. broadcast θ^t; vmap'd local training (E steps SGD, optional prox)
+  4. aggregate via Eq. 18 weights n_k/Σn
+  5. update counts v^{t+1}
+Evaluation on the shared validation split; history records loss/acc/fairness.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.availability import AvailabilityMode
+from repro.core.sampler import Sampler, FedGSSampler
+from repro.core import graph as graph_mod
+from repro.data.fed_dataset import FedDataset
+from repro.fed.client import make_local_trainer, make_loss_prober
+from repro.fed.models import FedModel
+from repro.fed.server import aggregate
+
+
+@dataclass
+class FLConfig:
+    rounds: int = 200
+    sample_frac: float = 0.1          # M = frac * N (paper: 0.1 / 0.2)
+    local_steps: int = 10             # E
+    batch_size: int = 10
+    lr: float = 0.1
+    lr_decay: float = 0.998
+    prox_mu: float = 0.0
+    eval_every: int = 5
+    seed: int = 0
+    avail_seed: int = 1234            # independent availability stream
+    # dynamic 3DG: rebuild the graph from participants' uploaded models every
+    # K rounds (0 = static graph; paper §3.2 "dynamically built and polished
+    # round by round")
+    graph_refresh_every: int = 0
+
+
+@dataclass
+class History:
+    rounds: list = field(default_factory=list)
+    val_loss: list = field(default_factory=list)
+    val_acc: list = field(default_factory=list)
+    count_var: list = field(default_factory=list)
+    sampled: list = field(default_factory=list)
+
+    @property
+    def best_loss(self) -> float:
+        return float(np.min(self.val_loss)) if self.val_loss else float("inf")
+
+    @property
+    def final_counts_var(self) -> float:
+        return self.count_var[-1] if self.count_var else 0.0
+
+
+class FLEngine:
+    def __init__(self, ds: FedDataset, model: FedModel, sampler: Sampler,
+                 mode: AvailabilityMode, cfg: FLConfig):
+        self.ds, self.model, self.sampler, self.mode, self.cfg = ds, model, sampler, mode, cfg
+        self.n = ds.n_clients
+        self.m = max(1, int(round(cfg.sample_frac * self.n)))
+        self._trainer = make_local_trainer(
+            model.loss, local_steps=cfg.local_steps,
+            batch_size=cfg.batch_size, prox_mu=cfg.prox_mu)
+        self._prober = make_loss_prober(model.loss) if sampler.needs_losses else None
+        self._eval = jax.jit(lambda p, x, y: (model.loss(p, x, y), model.accuracy(p, x, y)))
+        self.counts = np.zeros(self.n)
+
+    # ------------------------------------------------------------- 3DG setup
+    def install_oracle_graph(self, features: Optional[np.ndarray] = None,
+                             eps: float = 0.1, sigma2: float = 0.01,
+                             use_kernel: bool = False):
+        """Build the oracle 3DG (label-distribution features by default,
+        Appendix C) and hand H to a FedGS sampler."""
+        if not isinstance(self.sampler, FedGSSampler):
+            return None
+        if features is None:
+            features = self.ds.label_dist
+        _, r, h = graph_mod.build_3dg(np.asarray(features), eps=eps,
+                                      sigma2=sigma2, use_kernel=use_kernel)
+        self.sampler.set_graph(h)
+        return r
+
+    def install_graph_from_H(self, h: np.ndarray):
+        if isinstance(self.sampler, FedGSSampler):
+            self.sampler.set_graph(h)
+
+    # ------------------------------------------------------- dynamic 3DG
+    def install_dynamic_graph(self, refresh_every: int = 10, eps: float = 0.1,
+                              sigma2: float = 0.01, probe_size: int = 64):
+        """Functional-similarity 3DG maintained online (paper §3.2): the
+        initial graph comes from one all-clients local-training probe round
+        (the paper's everyone-available-at-init assumption); afterwards the
+        server re-embeds only the clients that participate and rebuilds
+        V -> R -> H every ``refresh_every`` rounds."""
+        if not isinstance(self.sampler, FedGSSampler):
+            return
+        self.cfg.graph_refresh_every = refresh_every
+        self._graph_eps, self._graph_sigma2 = eps, sigma2
+        rng = np.random.default_rng(self.cfg.seed + 777)
+        xv = np.asarray(self.ds.x_val, np.float64).reshape(len(self.ds.x_val), -1)
+        mu, cov = xv.mean(0), np.cov(xv.T) + 1e-4 * np.eye(xv.shape[1])
+        probe = rng.multivariate_normal(mu, cov, probe_size).astype(np.float32)
+        self._probe = jnp.asarray(probe.reshape(probe_size, *self.ds.x_val.shape[1:]))
+
+        # init: probe round over ALL clients from a fresh global model
+        key = jax.random.PRNGKey(self.cfg.seed + 778)
+        params = self.model.init(key)
+        stacked = self._trainer(params, jnp.asarray(self.ds.x),
+                                jnp.asarray(self.ds.y),
+                                jnp.asarray(self.ds.sizes),
+                                jnp.float32(self.cfg.lr),
+                                jax.random.split(key, self.n))
+        self._emb = np.array(graph_mod.probe_embeddings(
+            self.model.embed, stacked, self._probe), copy=True)
+        self._rebuild_dynamic_graph()
+
+    def _rebuild_dynamic_graph(self):
+        v = graph_mod.functional_similarity(self._emb)
+        r = graph_mod.similarity_to_adjacency(
+            graph_mod.normalize_01(v), eps=self._graph_eps,
+            sigma2=self._graph_sigma2)
+        self.sampler.set_graph(graph_mod.shortest_paths(r))
+
+    def _update_dynamic_embeddings(self, sel, local_stacked):
+        emb = np.asarray(graph_mod.probe_embeddings(
+            self.model.embed, local_stacked, self._probe))
+        self._emb[sel] = emb
+
+    # ---------------------------------------------------------------- round
+    def run(self, progress: Callable | None = None, *,
+            ckpt_path: str | None = None, ckpt_every: int = 0,
+            resume: bool = False) -> History:
+        """Run the federated rounds.  Randomness is derived per round from
+        (seed, t) SeedSequences, so the process is Markov in
+        (params, counts, t) and a checkpoint resume is exact; the
+        availability stream stays independent of training randomness and
+        identical across methods (Appendix C)."""
+        cfg = self.cfg
+        key0 = jax.random.PRNGKey(cfg.seed)
+        params = self.model.init(key0)
+        hist = History()
+        start_round = 0
+        if resume and ckpt_path:
+            import os
+            from repro.checkpoint.ckpt import load_checkpoint
+            if os.path.exists(ckpt_path if ckpt_path.endswith(".npz")
+                              else ckpt_path + ".npz"):
+                state = load_checkpoint(ckpt_path,
+                                        like={"params": params,
+                                              "counts": self.counts,
+                                              "round": np.zeros((), np.int64)})
+                params = jax.tree_util.tree_map(jnp.asarray, state["params"])
+                self.counts = np.asarray(state["counts"], np.float64)
+                start_round = int(state["round"]) + 1
+
+        xs = jnp.asarray(self.ds.x)
+        ys = jnp.asarray(self.ds.y)
+        sizes = jnp.asarray(self.ds.sizes)
+        xv = jnp.asarray(self.ds.x_val)
+        yv = jnp.asarray(self.ds.y_val)
+
+        for t in range(start_round, cfg.rounds):
+            rng = np.random.default_rng(np.random.SeedSequence([cfg.seed, t]))
+            avail_rng = np.random.default_rng(
+                np.random.SeedSequence([cfg.avail_seed, t]))
+            key = jax.random.fold_in(key0, t)
+            avail = self.mode.sample(t, avail_rng)
+            losses = None
+            if self._prober is not None:
+                key, sub = jax.random.split(key)
+                losses = np.asarray(self._prober(
+                    params, xs, ys, sizes, jax.random.split(sub, self.n)))
+            sel = self.sampler.sample(
+                avail=avail, m=self.m, rng=rng, counts=self.counts,
+                data_sizes=self.ds.sizes, losses=losses, t=t)
+            sel = np.asarray(sel, dtype=int)
+
+            lr = cfg.lr * (cfg.lr_decay ** t)
+            key, sub = jax.random.split(key)
+            local = self._trainer(params, xs[sel], ys[sel], sizes[sel],
+                                  jnp.float32(lr), jax.random.split(sub, len(sel)))
+            params = aggregate(local, jnp.asarray(self.ds.sizes[sel], jnp.float32))
+            self.counts[sel] += 1
+
+            if cfg.graph_refresh_every > 0 and hasattr(self, "_emb"):
+                self._update_dynamic_embeddings(sel, local)
+                if (t + 1) % cfg.graph_refresh_every == 0:
+                    self._rebuild_dynamic_graph()
+
+            if t % cfg.eval_every == 0 or t == cfg.rounds - 1:
+                vl, va = self._eval(params, xv, yv)
+                from repro.core.fairness import count_variance
+                hist.rounds.append(t)
+                hist.val_loss.append(float(vl))
+                hist.val_acc.append(float(va))
+                hist.count_var.append(count_variance(self.counts))
+                hist.sampled.append(sel.tolist())
+                if progress:
+                    progress(t, float(vl), float(va))
+            if ckpt_path and ckpt_every and (t + 1) % ckpt_every == 0:
+                from repro.checkpoint.ckpt import save_checkpoint
+                save_checkpoint(ckpt_path,
+                                {"params": params, "counts": self.counts,
+                                 "round": np.asarray(t, np.int64)},
+                                metadata={"round": t,
+                                          "sampler": self.sampler.name})
+        self.params = params
+        return hist

@@ -1,0 +1,18 @@
+"""Server-side aggregation (paper Eq. 18)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def aggregate(stacked_params, weights):
+    """theta^{t+1} = sum_k w_k theta_k,  w_k = n_k / sum n  (Eq. 18).
+
+    stacked_params: pytree with leading client axis (M, ...); weights (M,)."""
+    w = weights / jnp.maximum(jnp.sum(weights), 1e-12)
+
+    def wsum(p):
+        return jnp.tensordot(w.astype(p.dtype), p, axes=(0, 0))
+
+    return jax.tree_util.tree_map(wsum, stacked_params)

@@ -1,0 +1,7 @@
+# Pallas TPU kernels for the framework's compute hot-spots
+# (validated in interpret mode on CPU against the pure-jnp oracles in ref.py):
+#   floyd_warshall       — blocked min-plus APSP over the 3DG
+#   pairwise_similarity  — fused U·Uᵀ -> 3DG adjacency epilogue
+#   window_attention     — flash sliding-window attention (long_500k path)
+from repro.kernels import ops
+from repro.kernels import ref

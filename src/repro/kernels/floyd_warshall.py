@@ -1,0 +1,129 @@
+"""Blocked Floyd–Warshall APSP — Pallas TPU kernel.
+
+The classic cache-blocked FW re-tiled for VMEM (DESIGN.md hardware-adaptation
+notes): for each pivot block kb (sequential on host),
+  phase 1  pivot (kb,kb) block: full FW within the tile,
+  phase 2  pivot row & column panels, using the updated pivot tile,
+  phase 3  all remaining tiles via a min-plus rank-T update from their
+           row/column panels.
+
+min-plus is not an MXU semiring, so the inner update is a VPU
+broadcast-min-add; tiles are (T, T) f32 with T=128 (128-lane aligned,
+3 tiles live in VMEM during phase 3 ≈ 192 KiB — far under the 16 MiB/core
+budget, leaving room for the pipeline's double buffering).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 128
+
+
+def _fw_tile(tile, ka: jax.Array | None = None, kb_: jax.Array | None = None):
+    """In-tile FW sweep: tile = min(tile, colsrc[:,k] + rowsrc[k,:]) for all k.
+
+    ka (T,Tk) column source, kb_ (Tk,T) row source; None means the tile
+    itself (phase-1 self-referential sweep must be sequential)."""
+    t = tile.shape[0]
+
+    def body(k, cur):
+        col = jax.lax.dynamic_slice_in_dim(cur if ka is None else ka, k, 1, 1)   # (T,1)
+        row = jax.lax.dynamic_slice_in_dim(cur if kb_ is None else kb_, k, 1, 0) # (1,T)
+        return jnp.minimum(cur, col + row)
+
+    tk = t if ka is None else ka.shape[1]
+    return jax.lax.fori_loop(0, tk, body, tile)
+
+
+# --------------------------------------------------------------- kernels
+def _phase1_kernel(h_ref, out_ref):
+    out_ref[...] = _fw_tile(h_ref[...])
+
+
+def _phase2_row_kernel(pivot_ref, h_ref, out_ref):
+    # row panel: block (kb, j).  col source = pivot, row source = self
+    out_ref[...] = _fw_tile(h_ref[...], ka=pivot_ref[...], kb_=None)
+
+
+def _phase2_col_kernel(pivot_ref, h_ref, out_ref):
+    # col panel: block (i, kb). col source = self, row source = pivot
+    out_ref[...] = _fw_tile(h_ref[...], ka=None, kb_=pivot_ref[...])
+
+
+def _phase3_kernel(col_ref, row_ref, h_ref, out_ref):
+    # independent rank-T min-plus update
+    out_ref[...] = _fw_tile(h_ref[...], ka=col_ref[...], kb_=row_ref[...])
+
+
+def _call(kernel, n_in, grid, in_specs, out_spec, shape, interpret):
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct(shape, jnp.float32),
+        interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def floyd_warshall_pallas(h: jax.Array, *, tile: int = TILE,
+                          interpret: bool = False) -> jax.Array:
+    """h (N, N) f32 adjacency (inf = no edge, 0 diag) -> shortest paths."""
+    n = h.shape[0]
+    assert n % tile == 0, f"pad N={n} to a multiple of {tile}"
+    nb = n // tile
+    t = tile
+
+    spec_pivot = lambda kb: pl.BlockSpec((t, t), lambda *_: (kb, kb))
+
+    for kb in range(nb):
+        # ---- phase 1: pivot tile
+        h = pl.pallas_call(
+            _phase1_kernel,
+            grid=(1,),
+            in_specs=[pl.BlockSpec((t, t), lambda g, kb=kb: (kb, kb))],
+            out_specs=pl.BlockSpec((t, t), lambda g, kb=kb: (kb, kb)),
+            out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+            input_output_aliases={0: 0},
+            interpret=interpret,
+        )(h)
+        # ---- phase 2: row panel (kb, j) for all j
+        h = pl.pallas_call(
+            _phase2_row_kernel,
+            grid=(nb,),
+            in_specs=[pl.BlockSpec((t, t), lambda j, kb=kb: (kb, kb)),
+                      pl.BlockSpec((t, t), lambda j, kb=kb: (kb, j))],
+            out_specs=pl.BlockSpec((t, t), lambda j, kb=kb: (kb, j)),
+            out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+            input_output_aliases={1: 0},
+            interpret=interpret,
+        )(h, h)
+        # ---- phase 2: col panel (i, kb) for all i
+        h = pl.pallas_call(
+            _phase2_col_kernel,
+            grid=(nb,),
+            in_specs=[pl.BlockSpec((t, t), lambda i, kb=kb: (kb, kb)),
+                      pl.BlockSpec((t, t), lambda i, kb=kb: (i, kb))],
+            out_specs=pl.BlockSpec((t, t), lambda i, kb=kb: (i, kb)),
+            out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+            input_output_aliases={1: 0},
+            interpret=interpret,
+        )(h, h)
+        # ---- phase 3: the rest
+        h = pl.pallas_call(
+            _phase3_kernel,
+            grid=(nb, nb),
+            in_specs=[pl.BlockSpec((t, t), lambda i, j, kb=kb: (i, kb)),
+                      pl.BlockSpec((t, t), lambda i, j, kb=kb: (kb, j)),
+                      pl.BlockSpec((t, t), lambda i, j: (i, j))],
+            out_specs=pl.BlockSpec((t, t), lambda i, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+            input_output_aliases={2: 0},
+            interpret=interpret,
+        )(h, h, h)
+    return h

@@ -1,0 +1,125 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute in ``interpret=True`` mode — the
+kernel body runs in Python, which validates correctness; on TPU they compile
+natively.  Wrappers handle padding to tile multiples and unpadding, so the
+callers (core/graph.py, models/attention.py) see clean shapes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.floyd_warshall import floyd_warshall_pallas, TILE
+from repro.kernels.pairwise_similarity import (
+    similarity_pallas, adjacency_pallas, TILE_N, TILE_K,
+)
+from repro.kernels.window_attention import window_attention_pallas
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _pad_to(x: np.ndarray | jax.Array, mult: int, axes: tuple[int, ...],
+            value: float = 0.0):
+    pads = [(0, 0)] * x.ndim
+    for ax in axes:
+        pads[ax] = (0, (-x.shape[ax]) % mult)
+    if all(p == (0, 0) for p in pads):
+        return x
+    return jnp.pad(x, pads, constant_values=value)
+
+
+# ------------------------------------------------------------------- APSP
+def floyd_warshall(h: jax.Array, *, tile: int = TILE,
+                   interpret: bool | None = None) -> jax.Array:
+    """All-pairs shortest paths of an (N, N) f32 adjacency (inf = no edge).
+
+    Pads to the tile multiple with inf off-diagonal / 0 diagonal (pad nodes
+    are isolated, so true distances are unchanged), runs the blocked Pallas
+    FW, and unpads.
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    n = h.shape[0]
+    m = ((n + tile - 1) // tile) * tile
+    if m != n:
+        hp = jnp.full((m, m), jnp.inf, jnp.float32)
+        hp = hp.at[:n, :n].set(h.astype(jnp.float32))
+        hp = hp.at[jnp.arange(m), jnp.arange(m)].set(0.0)
+    else:
+        hp = h.astype(jnp.float32)
+    out = floyd_warshall_pallas(hp, tile=tile, interpret=interpret)
+    return out[:n, :n]
+
+
+# ------------------------------------------------- similarity -> adjacency
+def pairwise_similarity(u: jax.Array, *, interpret: bool | None = None) -> jax.Array:
+    """V = U Uᵀ for (N, d) features, tiled on the MXU. Returns (N, N) f32."""
+    if interpret is None:
+        interpret = _on_cpu()
+    n, d = u.shape
+    up = _pad_to(u.astype(jnp.float32), TILE_N, (0,))
+    up = _pad_to(up, TILE_K, (1,))
+    v = similarity_pallas(up, interpret=interpret)
+    return v[:n, :n]
+
+
+def similarity_to_adjacency(v: jax.Array, *, eps: float, sigma2: float,
+                            interpret: bool | None = None) -> jax.Array:
+    """Fused min-max-normalize -> threshold -> exp(-V/σ²) epilogue.
+
+    Pad tiles are flagged with +inf similarity sentinels excluded from lo/hi;
+    pad rows/cols are sliced off before returning.
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    n = v.shape[0]
+    lo = jnp.min(v)
+    hi = jnp.max(v)
+    m = ((n + TILE_N - 1) // TILE_N) * TILE_N
+    vp = _pad_to(v.astype(jnp.float32), TILE_N, (0, 1))
+    scal = jnp.stack([lo, hi, jnp.float32(eps), jnp.float32(sigma2)]).reshape(1, 4)
+    r = adjacency_pallas(vp, scal, interpret=interpret)
+    return r[:n, :n]
+
+
+def build_3dg_kernel(u: jax.Array, *, eps: float = 0.1, sigma2: float = 0.01,
+                     interpret: bool | None = None):
+    """Full fused path: features -> V -> R -> H, all on-kernel. Returns (V, R, H)."""
+    v = pairwise_similarity(u, interpret=interpret)
+    r = similarity_to_adjacency(v, eps=eps, sigma2=sigma2, interpret=interpret)
+    h = floyd_warshall(r, interpret=interpret)
+    return v, r, h
+
+
+# -------------------------------------------------------- window attention
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    interpret: bool | None = None) -> jax.Array:
+    """Full-causal flash attention: the sliding-window kernel with
+    window = S covers every past position, so the same VMEM-tiled online
+    softmax serves the train-side hot spot (EXPERIMENTS §Perf C)."""
+    return window_attention(q, k, v, window=q.shape[1], interpret=interpret)
+
+
+def window_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                     window: int, interpret: bool | None = None) -> jax.Array:
+    """Flash sliding-window attention (B, S, H, D). S padded to 128 internally."""
+    if interpret is None:
+        interpret = _on_cpu()
+    b, s, h, d = q.shape
+    bq = min(128, s) if s % 128 else 128
+    sp = ((s + bq - 1) // bq) * bq
+    if sp != s:
+        qp = _pad_to(q, bq, (1,))
+        kp = _pad_to(k, bq, (1,))
+        vp = _pad_to(v, bq, (1,))
+    else:
+        qp, kp, vp = q, k, v
+    out = window_attention_pallas(qp, kp, vp, window=window, bq=bq,
+                                  bk=bq, interpret=interpret)
+    return out[:, :s]

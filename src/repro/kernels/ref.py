@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def floyd_warshall_ref(h: jax.Array) -> jax.Array:
+    """APSP min-plus closure. h (N, N) f32, inf = no edge, diag 0."""
+    n = h.shape[0]
+
+    def body(k, h):
+        col = jax.lax.dynamic_slice_in_dim(h, k, 1, axis=1)   # (N, 1)
+        row = jax.lax.dynamic_slice_in_dim(h, k, 1, axis=0)   # (1, N)
+        return jnp.minimum(h, col + row)
+
+    return jax.lax.fori_loop(0, n, body, h)
+
+
+def similarity_ref(u: jax.Array) -> jax.Array:
+    """Raw dot-product similarity V = U U^T.  u (N, d) f32."""
+    return u @ u.T
+
+
+def adjacency_ref(v: jax.Array, lo: float, hi: float, eps: float,
+                  sigma2: float) -> jax.Array:
+    """Min-max-normalized similarity -> 3DG adjacency (graph.py semantics)."""
+    vn = (v - lo) / jnp.maximum(hi - lo, 1e-12)
+    r = jnp.where(vn >= eps, jnp.exp(-vn / sigma2), jnp.inf)
+    n = v.shape[0]
+    return r * (1 - jnp.eye(n, dtype=v.dtype))  # inf*0 -> nan; fix below
+
+
+def adjacency_ref_safe(v, lo, hi, eps, sigma2):
+    vn = (v - lo) / jnp.maximum(hi - lo, 1e-12)
+    r = jnp.where(vn >= eps, jnp.exp(-vn / sigma2), jnp.inf)
+    eye = jnp.eye(v.shape[0], dtype=bool)
+    return jnp.where(eye, 0.0, r)
+
+
+def window_attention_ref(q, k, v, *, window: int) -> jax.Array:
+    """Causal sliding-window attention. q/k/v (B, S, H, D); fp32 softmax."""
+    b, s, h, d = q.shape
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) / np.sqrt(d)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = (kpos <= qpos) & (kpos > qpos - window)
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v)

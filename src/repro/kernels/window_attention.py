@@ -1,0 +1,120 @@
+"""Sliding-window flash attention — Pallas TPU kernel.
+
+The long_500k hot-spot (DESIGN.md): causal attention where each query attends
+only to the previous ``window`` positions.  Flash-style online softmax over KV
+blocks, but the KV block range is *statically bounded* per query block —
+compute and VMEM traffic are O(S·window), never O(S²).
+
+Tiling: grid = (B·H, S/BQ, NKB) with NKB = ceil(window+BQ over BK)+1 KV blocks
+per query block; the KV block offset is derived from the query block index in
+the BlockSpec index_map, so the pipeline only streams the window span from
+HBM.  Scores/softmax accumulate in f32 VMEM scratch ((BQ,BK) scores tile,
+(BQ,D) accumulator); inputs can be bf16 or f32.  Default BQ=BK=128, D<=256:
+working set ≈ 128·128·4 + 3·128·256·4 ≈ 460 KiB — well inside VMEM with
+double buffering.
+
+K/V are left-padded by PAD = NKB·BK so every index_map block is in-bounds for
+every query block; padded keys are masked by their (negative) true position.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _wa_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+               window: int, bq: int, bk: int, pad: int, seq: int):
+    iq = pl.program_id(1)
+    jk = pl.program_id(2)
+    nkb = pl.num_programs(2)
+
+    @pl.when(jk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)                 # (BQ, D)
+    k = k_ref[0].astype(jnp.float32)                 # (BK, D)
+    d = q.shape[-1]
+
+    # true positions of this query / kv block
+    q0 = iq * bq
+    kb0 = (q0 - window + 1 + pad) // bk              # first kv block (padded coords)
+    qpos = q0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = (kb0 + jk) * bk - pad + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s * (1.0 / np.sqrt(d))
+    mask = (kpos <= qpos) & (kpos > qpos - window) & (kpos >= 0) & (kpos < seq)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                              # (BQ, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)                           # (BQ, BK)
+    corr = jnp.exp(m_prev - m_new)                   # (BQ, 1)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(jk == nkb - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "bq", "bk", "interpret"))
+def window_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                            window: int, bq: int = 128, bk: int = 128,
+                            interpret: bool = False) -> jax.Array:
+    """Causal sliding-window attention.  q/k/v (B, S, H, D) -> (B, S, H, D).
+
+    S must be a multiple of bq; kv heads must already be repeated to q heads.
+    """
+    b, s, h, d = q.shape
+    assert s % bq == 0, (s, bq)
+    nq = s // bq
+    # KV blocks per query block: cover [q0-window+1, q0+BQ-1]
+    nkb = (window + bq - 2) // bk + 2
+    pad = nkb * bk                                    # left pad; >= window+bq
+
+    def flat(x):
+        return x.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+
+    qf = flat(q)
+    kf = jnp.pad(flat(k), ((0, 0), (pad, 0), (0, 0)))
+    vf = jnp.pad(flat(v), ((0, 0), (pad, 0), (0, 0)))
+
+    def kv_index(bh, iq, jk):
+        kb0 = (iq * bq - window + 1 + pad) // bk
+        return (bh, kb0 + jk, 0)
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    out = pl.pallas_call(
+        functools.partial(_wa_kernel, window=window, bq=bq, bk=bk, pad=pad,
+                          seq=s),
+        grid=(b * h, nq, nkb),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, iq, jk: (bh, iq, 0)),
+            pl.BlockSpec((1, bk, d), kv_index),
+            pl.BlockSpec((1, bk, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, iq, jk: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),        # acc
+            pltpu.VMEM((bq, 1), jnp.float32),        # running max
+            pltpu.VMEM((bq, 1), jnp.float32),        # running denom
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, d).transpose(0, 2, 1, 3)

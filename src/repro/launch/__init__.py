@@ -1,0 +1,3 @@
+# Launchers: production mesh construction, abstract input specs, the three
+# lowered programs (train / prefill / serve), the multi-pod dry-run driver,
+# and the real train/serve entry points.

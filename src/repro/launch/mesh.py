@@ -1,0 +1,77 @@
+"""Production mesh + logical-axis map construction.
+
+All constructors are FUNCTIONS (no module-level jax device access) so
+importing this module never locks the device count — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first init.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+from repro.sharding.ctx import ShardCtx
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Target hardware: TPU v5e, 256 chips/pod.
+
+    single pod : (16, 16)    axes ("data", "model")
+    two pods   : (2, 16, 16) axes ("pod", "data", "model")
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for the production mesh, have {len(devices)} — "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "importing jax (launch/dryrun.py does this)")
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
+def make_host_mesh():
+    """Whatever this host actually has: (n_dev,) pure data-parallel mesh."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))
+
+
+# When True (variant `fsdp_over_pod`), weights/optimizer shard over BOTH the
+# pod and data axes (32-way ZeRO-style) instead of data only — halves
+# per-chip weight+opt memory for the 340B archs at the price of cross-pod
+# weight gathers on the slower inter-pod links.
+FSDP_OVER_POD = False
+
+
+def axis_map_for(mesh) -> dict[str, tuple[str, ...]]:
+    """Logical -> physical axis map (DESIGN.md §3).
+
+    dp    batch axis: ("pod","data") multi-pod, ("data",) single-pod
+    fsdp  weight-sharding axis: ("data",)
+    tp    tensor-parallel axis: ("model",)
+    sp    sequence axis (long-context, batch=1): ("data",)
+    """
+    names = set(mesh.axis_names)
+    amap: dict[str, tuple[str, ...]] = {}
+    if "pod" in names and "data" in names:
+        amap["dp"] = ("pod", "data")
+    elif "data" in names:
+        amap["dp"] = ("data",)
+    if "data" in names:
+        if FSDP_OVER_POD and "pod" in names:
+            amap["fsdp"] = ("pod", "data")
+        else:
+            amap["fsdp"] = ("data",)
+        amap["sp"] = ("data",)
+    if "model" in names:
+        amap["tp"] = ("model",)
+    return amap
+
+
+def make_shard_ctx(mesh) -> ShardCtx:
+    amap = axis_map_for(mesh)
+    sizes = {n: s for n, s in zip(mesh.axis_names, mesh.devices.shape)}
+    tp = int(np.prod([sizes[a] for a in amap.get("tp", ())])) if amap.get("tp") else 1
+    dp = int(np.prod([sizes[a] for a in amap.get("dp", ())])) if amap.get("dp") else 1
+    return ShardCtx(axis_map=amap, mesh=mesh, tp_size=tp, dp_size=dp)

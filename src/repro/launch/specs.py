@@ -1,0 +1,94 @@
+"""Abstract input/parameter specs for every (architecture × input shape).
+
+``input_specs`` returns jax.ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, zero allocation) for the lowered program of the shape's kind:
+
+  train    -> {tokens, labels (+ image_emb | audio_frames)}
+  prefill  -> {tokens (+ image_emb | audio_frames)}
+  decode   -> (tokens (B,), cache pytree with seq_len-entry KV/SSM state)
+
+The modality frontends are stubs per the assignment: VLM patch embeddings and
+audio frame embeddings arrive precomputed at the model's d_model width.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape, INPUT_SHAPES, pad_heads
+from repro.models import lm
+
+# perf-variant knob: pad attention heads to this multiple for TP alignment
+# (exact weight embedding — see configs.base.pad_heads); None = off.
+PAD_HEADS_MULTIPLE = None
+
+
+def variant_for_shape(cfg: ArchConfig, shape: InputShape) -> ArchConfig:
+    """long_500k needs sub-quadratic attention: full-attention archs switch to
+    the sliding-window variant (window=cfg.window, default 4096) — the
+    beyond-paper config flagged in DESIGN.md §Shape-applicability.  SSM /
+    hybrid / already-windowed archs are unchanged."""
+    if shape.name == "long_500k" and cfg.attention == "full":
+        cfg = dataclasses.replace(cfg, attention="sliding_window")
+    if PAD_HEADS_MULTIPLE and cfg.attention != "none":
+        cfg = pad_heads(cfg, PAD_HEADS_MULTIPLE)
+    return cfg
+
+
+def abstract_params(cfg: ArchConfig):
+    """ShapeDtypeStruct pytree of the model parameters (no allocation)."""
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(lambda k: lm.init_params(k, cfg), key)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape) -> dict[str, Any]:
+    """Returns the kwargs pytree for the shape's lowered program."""
+    b, s = shape.global_batch, shape.seq_len
+    act_dtype = jnp.dtype(cfg.dtype)
+
+    if shape.kind in ("train", "prefill"):
+        batch: dict[str, Any] = {}
+        s_text = s
+        if cfg.family == "vlm" and cfg.n_image_tokens:
+            s_text = s - cfg.n_image_tokens
+            batch["image_emb"] = _sds((b, cfg.n_image_tokens, cfg.d_model), act_dtype)
+        if cfg.enc_dec:
+            batch["audio_frames"] = _sds((b, cfg.n_audio_frames, cfg.d_model), act_dtype)
+        batch["tokens"] = _sds((b, s_text), jnp.int32)
+        if shape.kind == "train":
+            batch["labels"] = _sds((b, s_text), jnp.int32)
+        return {"batch": batch}
+
+    # ---- decode: one token against a seq_len cache -----------------------
+    enc_len = cfg.n_audio_frames if cfg.enc_dec else 0
+    max_len = s
+    if lm.RING_CACHE and cfg.attention == "sliding_window":
+        max_len = min(s, cfg.window)       # ring buffer: the window IS the cache
+    cache = jax.eval_shape(
+        partial(lm.init_decode_cache, cfg, b, max_len, enc_len))
+    tokens = _sds((b,), jnp.int32)
+    return {"tokens": tokens, "cache": cache}
+
+
+def concrete_inputs(cfg: ArchConfig, shape: InputShape, key=None):
+    """Materialize real (random) inputs matching ``input_specs`` — used by the
+    smoke tests and CPU examples at reduced configs."""
+    import numpy as np
+    rng = np.random.default_rng(0)
+    specs = input_specs(cfg, shape)
+
+    def mk(x):
+        if jnp.issubdtype(x.dtype, jnp.integer):
+            return jnp.asarray(rng.integers(0, max(cfg.vocab_size - 1, 2), x.shape),
+                               x.dtype)
+        return jnp.asarray(rng.normal(0, 0.02, x.shape), x.dtype)
+
+    return jax.tree_util.tree_map(mk, specs)

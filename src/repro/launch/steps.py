@@ -1,0 +1,120 @@
+"""The three lowered programs and their sharding assignments.
+
+  train_step   : fwd + bwd + AdamW update      (train_4k)
+  prefill_step : prompt forward + cache build  (prefill_32k)
+  serve_step   : ONE token against the cache   (decode_32k, long_500k)
+
+``make_shardings`` derives NamedSharding pytrees for every argument from the
+path-based rules in ``repro.sharding.rules`` — 2D weight sharding
+(FSDP × TP), batch over dp, cache over dp (or over *sequence* when
+global_batch == 1, the long_500k layout).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models import lm
+from repro.optim.optimizers import adamw, Optimizer
+from repro.sharding import rules
+from repro.sharding.ctx import ShardCtx
+
+
+# ------------------------------------------------------------------- steps
+# Microbatch count for gradient accumulation (perf variant knob): the global
+# batch is split into MICROBATCHES chunks scanned sequentially, dividing the
+# live-activation footprint by the same factor at the cost of re-running the
+# (FSDP weight-gather) collectives per chunk.
+MICROBATCHES = 1
+# dtype of the gradient accumulator in the microbatch scan (f32 default;
+# bf16 halves the largest persistent temp buffer of the 340B train step)
+GRAD_ACC_DTYPE = "float32"
+
+
+def make_train_step(cfg: ArchConfig, optimizer: Optimizer | None = None):
+    optimizer = optimizer or adamw(state_dtype=jnp.bfloat16)
+    n_micro = MICROBATCHES
+
+    def loss_fn(p, batch):
+        return lm.train_loss(p, cfg, batch)
+
+    def train_step(params, opt_state, batch, lr):
+        if n_micro == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            # split every leaf's batch dim into (n_micro, b/n_micro, ...)
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+
+            micro = jax.tree_util.tree_map(split, batch)
+
+            def acc_step(carry, mb):
+                loss_acc, g_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, x: a + x.astype(a.dtype), g_acc, g)
+                return (loss_acc + l, g_acc), None
+
+            acc_dt = jnp.dtype(GRAD_ACC_DTYPE)
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params)
+            (loss, grads), _ = jax.lax.scan(
+                acc_step, (jnp.zeros((), jnp.float32), g0), micro)
+            loss = loss / n_micro
+            grads = jax.tree_util.tree_map(lambda g: g / n_micro, grads)
+        new_params, new_state = optimizer.update(grads, opt_state, params, lr)
+        return new_params, new_state, loss
+
+    return train_step, optimizer
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, batch):
+        return lm.prefill(params, cfg, batch)
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    def serve_step(params, tokens, cache):
+        return lm.decode_step(params, cfg, tokens, cache)
+    return serve_step
+
+
+# --------------------------------------------------------------- shardings
+def _named(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_state_specs(param_spec_tree):
+    return {"m": param_spec_tree, "v": param_spec_tree, "t": P()}
+
+
+def make_shardings(cfg: ArchConfig, shape: InputShape, ctx: ShardCtx,
+                   params_abs, cache_abs=None, batch_abs=None):
+    """Returns dict with NamedSharding pytrees: params, opt, batch, cache."""
+    mesh = ctx.mesh
+    if cfg.attention != "none" and rules.HEAD_AWARE_TP:
+        ctx = dataclasses.replace(ctx, head_divisors={
+            "wq": cfg.n_heads, "wo": cfg.n_heads,
+            "wk": cfg.n_kv_heads, "wv": cfg.n_kv_heads})
+    pspecs = rules.param_specs(params_abs, ctx)
+    out: dict[str, Any] = {"params": _named(mesh, pspecs)}
+    out["opt"] = _named(mesh, opt_state_specs(pspecs))
+    if batch_abs is not None:
+        out["batch"] = _named(mesh, rules.batch_specs(batch_abs, ctx))
+    if cache_abs is not None:
+        # batch=1 long-context: shard the cache over *sequence* — unless the
+        # ring-cache variant already shrank it to one window (then replicate)
+        seq_shard = shape.global_batch == 1 and not lm.RING_CACHE
+        out["cache"] = _named(mesh, rules.cache_specs(cache_abs, ctx,
+                                                      seq_shard=seq_shard))
+    return out

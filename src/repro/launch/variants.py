@@ -1,0 +1,363 @@
+"""Perf-iteration variants for the §Perf hillclimb.
+
+A variant is a named, reversible patch of framework knobs (attention path
+thresholds, loss chunking, remat policy, cache layout) applied around a
+dry-run lowering.  The baseline is the paper-faithful/default configuration;
+each variant is one hypothesis from EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Callable
+
+import jax
+
+from repro.models import attention as attn_mod
+from repro.models import lm as lm_mod
+
+# name -> (setup() -> undo_state, teardown(undo_state))
+_REGISTRY: dict[str, tuple[Callable, Callable]] = {}
+
+
+def _register(name):
+    def deco(fn):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+@_register("baseline")
+def _baseline():
+    yield
+
+
+@_register("dense_max_2k")
+def _dense_max_2k():
+    """Force the chunked (flash-pattern) attention path at train_4k —
+    hypothesis: removes the (B,H,S,S) f32 score buffer from temp memory."""
+    old = attn_mod.DENSE_MAX
+    attn_mod.DENSE_MAX = 2048
+    try:
+        yield
+    finally:
+        attn_mod.DENSE_MAX = old
+
+
+@_register("loss_chunk_128")
+def _loss_chunk_128():
+    """Smaller LM-head loss chunks — hypothesis: shrinks the transient
+    (B,chunk,V) logits tile (memory term) at the cost of more head matmuls."""
+    old = lm_mod.LOSS_CHUNK
+    lm_mod.LOSS_CHUNK = 128
+    try:
+        yield
+    finally:
+        lm_mod.LOSS_CHUNK = old
+
+
+@_register("loss_chunk_1k")
+def _loss_chunk_1k():
+    old = lm_mod.LOSS_CHUNK
+    lm_mod.LOSS_CHUNK = 1024
+    try:
+        yield
+    finally:
+        lm_mod.LOSS_CHUNK = old
+
+
+@_register("kv_chunk_2k")
+def _kv_chunk_2k():
+    """Larger KV chunks in the online-softmax path — hypothesis: fewer scan
+    steps / larger matmuls lower the memory term for prefill_32k."""
+    old = attn_mod.KV_CHUNK
+    attn_mod.KV_CHUNK = 2048
+    try:
+        yield
+    finally:
+        attn_mod.KV_CHUNK = old
+
+
+@_register("no_remat")
+def _no_remat():
+    """Disable layer remat — hypothesis: compute term drops (no recompute) at
+    the cost of the memory term; viable only for the small archs."""
+    old = lm_mod.train_loss
+
+    def patched(params, cfg, batch, **kw):
+        kw["remat"] = False
+        return old(params, cfg, batch, **kw)
+
+    lm_mod.train_loss = patched
+    try:
+        yield
+    finally:
+        lm_mod.train_loss = old
+
+
+@_register("minremat")
+def _minremat():
+    """Save-nothing remat — hypothesis: kills the scan-stacked saved-dot
+    buffers (the big temp term) for ~+33% compute."""
+    old = lm_mod.REMAT_POLICY
+    lm_mod.REMAT_POLICY = "nothing"
+    try:
+        yield
+    finally:
+        lm_mod.REMAT_POLICY = old
+
+
+def _micro(n):
+    from repro.launch import steps as steps_mod
+    old = steps_mod.MICROBATCHES
+    steps_mod.MICROBATCHES = n
+    try:
+        yield
+    finally:
+        steps_mod.MICROBATCHES = old
+
+
+@_register("micro8")
+def _micro8():
+    yield from _micro(8)
+
+
+@_register("micro8_minremat")
+def _micro8_minremat():
+    old = lm_mod.REMAT_POLICY
+    lm_mod.REMAT_POLICY = "nothing"
+    try:
+        yield from _micro(8)
+    finally:
+        lm_mod.REMAT_POLICY = old
+
+
+@_register("micro16_minremat")
+def _micro16_minremat():
+    old = lm_mod.REMAT_POLICY
+    lm_mod.REMAT_POLICY = "nothing"
+    try:
+        yield from _micro(16)
+    finally:
+        lm_mod.REMAT_POLICY = old
+
+
+@_register("ring_cache")
+def _ring_cache():
+    """Window-sized ring-buffer KV cache for sliding-window decode —
+    hypothesis: removes the seq-sharded-cache gather (the collective term)
+    from long_500k entirely."""
+    old = lm_mod.RING_CACHE
+    lm_mod.RING_CACHE = True
+    try:
+        yield
+    finally:
+        lm_mod.RING_CACHE = old
+
+
+@_register("chunked_attn")
+def _chunked_attn():
+    """Alias of dense_max_2k with the canonical name used in EXPERIMENTS."""
+    old = attn_mod.DENSE_MAX
+    attn_mod.DENSE_MAX = 2048
+    try:
+        yield
+    finally:
+        attn_mod.DENSE_MAX = old
+
+
+@_register("chunked_attn_minremat")
+def _chunked_attn_minremat():
+    old_d = attn_mod.DENSE_MAX
+    old_p = lm_mod.REMAT_POLICY
+    attn_mod.DENSE_MAX = 2048
+    lm_mod.REMAT_POLICY = "nothing"
+    try:
+        yield
+    finally:
+        attn_mod.DENSE_MAX = old_d
+        lm_mod.REMAT_POLICY = old_p
+
+
+@_register("micro8_chunked_minremat")
+def _micro8_chunked_minremat():
+    old_d = attn_mod.DENSE_MAX
+    old_p = lm_mod.REMAT_POLICY
+    attn_mod.DENSE_MAX = 2048
+    lm_mod.REMAT_POLICY = "nothing"
+    try:
+        yield from _micro(8)
+    finally:
+        attn_mod.DENSE_MAX = old_d
+        lm_mod.REMAT_POLICY = old_p
+
+
+@_register("tp_only_weights")
+def _tp_only_weights():
+    """Replicate weights over the data axis (TP-only sharding) — hypothesis:
+    decode stops all-gathering the FSDP-sharded weights every token, trading
+    per-chip weight memory for the collective term."""
+    from repro.sharding import rules as rules_mod
+    old = rules_mod.FSDP_ENABLED
+    rules_mod.FSDP_ENABLED = False
+    try:
+        yield
+    finally:
+        rules_mod.FSDP_ENABLED = old
+
+
+@_register("tp_only_ring")
+def _tp_only_ring():
+    from repro.sharding import rules as rules_mod
+    old_f = rules_mod.FSDP_ENABLED
+    old_r = lm_mod.RING_CACHE
+    rules_mod.FSDP_ENABLED = False
+    lm_mod.RING_CACHE = True
+    try:
+        yield
+    finally:
+        rules_mod.FSDP_ENABLED = old_f
+        lm_mod.RING_CACHE = old_r
+
+
+@_register("bf16_scores")
+def _bf16_scores():
+    """bf16 (B,H,S,S) score/prob buffers in the dense attention path —
+    hypothesis: halves the dominant S^2 HBM traffic of small-d archs."""
+    old = attn_mod.SCORE_DTYPE
+    attn_mod.SCORE_DTYPE = "bfloat16"
+    try:
+        yield
+    finally:
+        attn_mod.SCORE_DTYPE = old
+
+
+def _set_many(micro=None, group=None, grad_dt=None, policy=None):
+    from repro.launch import steps as steps_mod
+    olds = (steps_mod.MICROBATCHES, lm_mod.REMAT_GROUP,
+            steps_mod.GRAD_ACC_DTYPE, lm_mod.REMAT_POLICY)
+    if micro is not None:
+        steps_mod.MICROBATCHES = micro
+    if group is not None:
+        lm_mod.REMAT_GROUP = group
+    if grad_dt is not None:
+        steps_mod.GRAD_ACC_DTYPE = grad_dt
+    if policy is not None:
+        lm_mod.REMAT_POLICY = policy
+    try:
+        yield
+    finally:
+        (steps_mod.MICROBATCHES, lm_mod.REMAT_GROUP,
+         steps_mod.GRAD_ACC_DTYPE, lm_mod.REMAT_POLICY) = olds
+
+
+@_register("remat2_micro16")
+def _remat2_micro16():
+    """2-level remat (groups of 8 layers) + 16 microbatches — hypothesis:
+    saved carries drop from L to L/G + G per microbatch, pushing the 340B
+    train step's temp under HBM."""
+    yield from _set_many(micro=16, group=8)
+
+
+@_register("remat2_micro16_gradbf16")
+def _remat2_micro16_gradbf16():
+    yield from _set_many(micro=16, group=8, grad_dt="bfloat16")
+
+
+@_register("remat2_micro8")
+def _remat2_micro8():
+    yield from _set_many(micro=8, group=8)
+
+
+@_register("headaware")
+def _headaware():
+    """No-op alias: head-aware TP is the (post-fix) default; this name tags
+    dry-run records produced after the fix, next to the legacy baselines."""
+    yield
+
+
+@_register("legacy_tp")
+def _legacy_tp():
+    """Pre-fix TP rules (head-unaware): shards attn projections whenever the
+    flat dim divides, forcing attention-path regathers when the head count
+    does not — kept to reproduce the recorded baseline."""
+    from repro.sharding import rules as rules_mod
+    old = rules_mod.HEAD_AWARE_TP
+    rules_mod.HEAD_AWARE_TP = False
+    try:
+        yield
+    finally:
+        rules_mod.HEAD_AWARE_TP = old
+
+
+@_register("padded_heads")
+def _padded_heads():
+    """Pad attention heads to the 16-way TP width (exact weight embedding,
+    configs.base.pad_heads) — hypothesis: attention shards 16-way instead of
+    replicating, cutting per-device attention compute/memory by ~16/flop-pad
+    while keeping collectives head-aligned (no cache regathers)."""
+    from repro.launch import specs as specs_mod
+    old = specs_mod.PAD_HEADS_MULTIPLE
+    specs_mod.PAD_HEADS_MULTIPLE = 16
+    try:
+        yield
+    finally:
+        specs_mod.PAD_HEADS_MULTIPLE = old
+
+
+@_register("moe_grouped")
+def _moe_grouped():
+    """Group-local MoE dispatch (one group per dp shard) — hypothesis: the
+    global scatter into the (E,C,d) buffer lowers to partial-buffer +
+    all-reduce (3.9 TB/step on olmoe train_4k); per-shard dispatch keeps the
+    scatter local and leaves only the expert-parallel collectives."""
+    from repro.models import ffn as ffn_mod
+    old = ffn_mod.MOE_GROUPS
+    ffn_mod.MOE_GROUPS = -1            # auto: one group per data shard
+    try:
+        yield
+    finally:
+        ffn_mod.MOE_GROUPS = old
+
+
+@_register("fsdp_over_pod")
+def _fsdp_over_pod():
+    """Shard weights/opt over (pod, data) = 32-way instead of data-only —
+    hypothesis: halves the 340B per-chip state at the cost of cross-pod
+    weight-gather traffic (only meaningful on the multi-pod mesh)."""
+    from repro.launch import mesh as mesh_mod
+    old = mesh_mod.FSDP_OVER_POD
+    mesh_mod.FSDP_OVER_POD = True
+    try:
+        yield
+    finally:
+        mesh_mod.FSDP_OVER_POD = old
+
+
+@_register("ring_padded")
+def _ring_padded():
+    """ring_cache + padded_heads stacked — the two winning long_500k levers."""
+    from repro.launch import specs as specs_mod
+    old_r, old_p = lm_mod.RING_CACHE, specs_mod.PAD_HEADS_MULTIPLE
+    lm_mod.RING_CACHE = True
+    specs_mod.PAD_HEADS_MULTIPLE = 16
+    try:
+        yield
+    finally:
+        lm_mod.RING_CACHE = old_r
+        specs_mod.PAD_HEADS_MULTIPLE = old_p
+
+
+VARIANTS = dict(_REGISTRY)
+
+
+@contextlib.contextmanager
+def apply_variant(name: str):
+    gen = _REGISTRY[name]()
+    next(gen)
+    try:
+        yield
+    finally:
+        try:
+            next(gen)
+        except StopIteration:
+            pass

@@ -1,0 +1,7 @@
+from repro.models.lm import (
+    init_params,
+    train_loss,
+    prefill,
+    decode_step,
+    init_decode_cache,
+)

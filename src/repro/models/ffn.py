@@ -1,0 +1,149 @@
+"""Feed-forward blocks: SwiGLU / squared-ReLU dense FFN, and token-choice MoE.
+
+The MoE uses sort-based fixed-capacity dispatch (MegaBlocks-style grouped
+matmul shape, TPU-friendly static shapes): tokens' top-k expert choices are
+flattened, sorted by expert id, placed into an (E, C) capacity buffer (drop on
+overflow), run through grouped einsum ``ecd,edf->ecf``, then combined back
+weighted by router probabilities.  Experts shard over the ``model`` mesh axis
+(expert parallelism).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+# ---------------------------------------------------------------- dense FFN
+def init_ffn(key, d_model: int, d_ff: int, kind: str, dtype):
+    ks = jax.random.split(key, 3)
+    p = {"w_in": dense_init(ks[0], d_model, d_ff, dtype),
+         "w_out": dense_init(ks[1], d_ff, d_model, dtype)}
+    if kind == "swiglu":
+        p["w_gate"] = dense_init(ks[2], d_model, d_ff, dtype)
+    return p
+
+
+def apply_ffn(p, x, kind: str):
+    h = x @ p["w_in"]
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * h
+    elif kind == "squared_relu":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        raise ValueError(kind)
+    return h @ p["w_out"]
+
+
+# ---------------------------------------------------------------- MoE
+def init_moe(key, d_model: int, d_ff: int, n_experts: int, kind: str, dtype):
+    ks = jax.random.split(key, 4)
+
+    def fresh(key, n, a, b):
+        return jax.vmap(lambda k: dense_init(k, a, b, dtype))(jax.random.split(key, n))
+
+    p = {
+        "router": dense_init(ks[0], d_model, n_experts, jnp.float32),
+        "w_in": fresh(ks[1], n_experts, d_model, d_ff),
+        "w_out": fresh(ks[2], n_experts, d_ff, d_model),
+    }
+    if kind == "swiglu":
+        p["w_gate"] = fresh(ks[3], n_experts, d_model, d_ff)
+    return p
+
+
+def moe_capacity(n_tokens: int, n_experts: int, top_k: int, factor: float) -> int:
+    c = int(n_tokens * top_k * factor / n_experts)
+    return max(8, ((c + 7) // 8) * 8)
+
+
+# Dispatch groups: 1 = the paper-simple global sort dispatch.  Set to the dp
+# size (launch.variants `moe_grouped`) to keep the scatter/gather LOCAL per
+# data shard — a global scatter into the (E,C,d) buffer otherwise lowers to
+# partial-buffer + all-reduce under SPMD (3.9 TB/step for olmoe train_4k;
+# EXPERIMENTS §Perf F).
+MOE_GROUPS = 1                       # int, or -1 = auto (the mesh's dp size)
+
+
+def _dispatch_group(xt, probs, gate, choice, p, *, cap: int, top_k: int,
+                    kind: str):
+    """Sort-based fixed-capacity dispatch for one token group.
+
+    xt (T, d); probs (T, E); gate/choice (T, K).  Returns (out (T, d), aux).
+    Called under vmap over the group axis; the expert-dim sharding
+    constraints batch through (the group axis inherits the dp sharding of
+    the operands).
+    """
+    from repro.sharding.ctx import shard_act
+    t, d = xt.shape
+    e = p["w_in"].shape[0]
+    flat_expert = choice.reshape(-1)                            # (T*K,)
+    flat_token = jnp.repeat(jnp.arange(t), top_k)               # (T*K,)
+    flat_gate = gate.reshape(-1)
+    order = jnp.argsort(flat_expert, stable=True)
+    se, st, sg = flat_expert[order], flat_token[order], flat_gate[order]
+    # position within expert segment via searchsorted on the sorted ids
+    starts = jnp.searchsorted(se, jnp.arange(e), side="left")
+    pos_in_e = jnp.arange(t * top_k) - starts[se]
+    keep = pos_in_e < cap
+    # overflow entries get an out-of-range slot and are dropped by the scatter
+    slot = jnp.where(keep, se * cap + pos_in_e, e * cap)
+
+    buf = jnp.zeros((e * cap, d), xt.dtype)
+    buf = buf.at[slot].set(xt[st], mode="drop")
+    buf = buf.reshape(e, cap, d)
+    buf = shard_act(buf, "tp", None, None)          # experts over tp
+
+    h = jnp.einsum("ecd,edf->ecf", buf, p["w_in"])
+    if kind == "swiglu":
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])) * h
+    else:
+        h = jnp.square(jax.nn.relu(h))
+    out_e = jnp.einsum("ecf,efd->ecd", h, p["w_out"])
+    out_e = shard_act(out_e, "tp", None, None).reshape(e * cap, d)
+
+    slot_c = jnp.minimum(slot, e * cap - 1)
+    contrib = out_e[slot_c] * (sg * keep)[:, None].astype(xt.dtype)
+    out = jnp.zeros((t, d), xt.dtype).at[st].add(contrib)
+
+    # load-balance auxiliary loss (Switch-style)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(choice[:, 0], e), axis=0)
+    aux = e * jnp.sum(me * ce)
+    return out, aux
+
+
+def apply_moe(p, x, *, top_k: int, capacity_factor: float, kind: str):
+    """x: (B, S, d) -> (B, S, d), plus aux load-balance loss.
+
+    Returns (out, aux_loss).  With MOE_GROUPS == G > 1 the dispatch runs
+    independently on G contiguous token groups (aligned with the dp batch
+    sharding), each with capacity/G — drops match the global dispatch in
+    distribution, and exactly when capacity is ample.
+    """
+    from repro.sharding.ctx import current_ctx, shard_act
+    b, s, d = x.shape
+    t = b * s
+    g = MOE_GROUPS
+    if g == -1:                       # auto: one group per data shard
+        ctx = current_ctx()
+        g = ctx.dp_size if ctx is not None else 1
+    if g < 1 or t % g != 0:
+        g = 1
+    e = p["w_in"].shape[0]
+    cap = moe_capacity(t // g, e, top_k, capacity_factor)
+
+    xt = x.reshape(g, t // g, d)
+    xt = shard_act(xt, "dp", None, None)
+    logits = (xt.astype(jnp.float32) @ p["router"])             # (G, Tg, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, choice = jax.lax.top_k(probs, top_k)                  # (G, Tg, K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    out, aux = jax.vmap(
+        lambda xg, pg, gg, cg: _dispatch_group(
+            xg, pg, gg, cg, p, cap=cap, top_k=top_k, kind=kind)
+    )(xt, probs, gate, choice)
+    out = shard_act(out, "dp", None, None)
+    return out.reshape(b, s, d), jnp.mean(aux)

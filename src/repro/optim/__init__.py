@@ -1,0 +1,2 @@
+from repro.optim.optimizers import sgd, adamw, Optimizer
+from repro.optim.schedules import constant, round_decay, cosine_warmup

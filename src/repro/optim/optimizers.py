@@ -1,0 +1,74 @@
+"""Minimal optax-style optimizers (pure functions over pytrees).
+
+``adamw(state_dtype=jnp.bfloat16)`` keeps first/second moments in bf16 — the
+memory plan for the >=15B dense archs (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable          # (grads, state, params, lr) -> (new_params, new_state)
+
+
+def sgd(momentum: float = 0.0, weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    def update(grads, state, params, lr):
+        if weight_decay:
+            grads = jax.tree_util.tree_map(lambda g, p: g + weight_decay * p, grads, params)
+        if momentum == 0.0:
+            new = jax.tree_util.tree_map(lambda p, g: p - lr * g.astype(p.dtype), params, grads)
+            return new, ()
+        state = jax.tree_util.tree_map(lambda m, g: momentum * m + g, state, grads)
+        new = jax.tree_util.tree_map(lambda p, m: p - lr * m.astype(p.dtype), params, state)
+        return new, state
+
+    return Optimizer(init, update)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0, state_dtype=None) -> Optimizer:
+    def init(params):
+        def z(p):
+            dt = state_dtype or p.dtype
+            return jnp.zeros(p.shape, dt)
+        return {
+            "m": jax.tree_util.tree_map(z, params),
+            "v": jax.tree_util.tree_map(z, params),
+            "t": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        t = state["t"] + 1
+        c1 = 1.0 - b1 ** t.astype(jnp.float32)
+        c2 = 1.0 - b2 ** t.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+            step = lr * (m32 / c1) / (jnp.sqrt(v32 / c2) + eps)
+            if weight_decay:
+                step = step + lr * weight_decay * p.astype(jnp.float32)
+            return ((p.astype(jnp.float32) - step).astype(p.dtype),
+                    m32.astype(m.dtype), v32.astype(v.dtype))
+
+        out = jax.tree_util.tree_map(upd, params, grads, state["m"], state["v"])
+        leaves, treedef = jax.tree_util.tree_flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+        new_p = treedef.unflatten([l[0] for l in leaves])
+        new_m = treedef.unflatten([l[1] for l in leaves])
+        new_v = treedef.unflatten([l[2] for l in leaves])
+        return new_p, {"m": new_m, "v": new_v, "t": t}
+
+    return Optimizer(init, update)

@@ -1,0 +1,2 @@
+from repro.sharding.ctx import ShardCtx, use_sharding, shard_act, current_ctx
+from repro.sharding.rules import param_specs, batch_specs, cache_specs

@@ -1,0 +1,96 @@
+"""Logical-axis activation-sharding context.
+
+Model code annotates activations with *logical* axis names
+(``shard_act(x, "dp", None, "tp")``); the launcher installs a ``ShardCtx``
+mapping logical names to physical mesh axes.  Outside a context the calls are
+no-ops, so the same model code runs in CPU smoke tests (1 device, no mesh) and
+in the 512-device dry-run.
+
+Logical names:
+  dp    batch/data-parallel axis    -> ("pod","data") multi-pod, ("data",) single
+  tp    tensor-parallel axis        -> ("model",)
+  fsdp  parameter-sharding axis     -> ("data",)  (2D weight sharding with tp)
+  sp    sequence axis (long-context decode, batch=1) -> ("data",)
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from dataclasses import dataclass, field
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ShardCtx:
+    axis_map: dict = field(default_factory=dict)   # logical -> tuple of mesh axes
+    mesh: object = None
+    # sizes of the physical tp axis, for divisibility checks
+    tp_size: int = 1
+    dp_size: int = 1
+    # head-aware TP: leaf name -> semantic unit count (e.g. {"wq": n_heads}).
+    # A projection whose flat dim is divisible by tp but whose HEAD count is
+    # not must stay replicated, or the (B,S,H,dh) reshape forces XLA to
+    # regather the whole attention path (incl. the KV cache) every step.
+    head_divisors: dict = field(default_factory=dict)
+
+    def resolve(self, *logical) -> P:
+        phys = []
+        for name in logical:
+            if name is None:
+                phys.append(None)
+            else:
+                axes = self.axis_map.get(name)
+                if not axes:
+                    phys.append(None)
+                elif len(axes) == 1:
+                    phys.append(axes[0])
+                else:
+                    phys.append(tuple(axes))
+        return P(*phys)
+
+
+_ctx: contextvars.ContextVar[ShardCtx | None] = contextvars.ContextVar("shard_ctx", default=None)
+
+
+def current_ctx() -> ShardCtx | None:
+    return _ctx.get()
+
+
+@contextlib.contextmanager
+def use_sharding(ctx: ShardCtx):
+    token = _ctx.set(ctx)
+    try:
+        yield ctx
+    finally:
+        _ctx.reset(token)
+
+
+def shard_act(x: jax.Array, *logical, dim_sizes_ok: bool = True):
+    """Apply a with_sharding_constraint if a ShardCtx is installed.
+
+    A logical axis is silently dropped (-> replicated) when the corresponding
+    array dim is not divisible by the product of physical axis sizes — the
+    divisibility-aware fallback from DESIGN.md §4.
+    """
+    ctx = _ctx.get()
+    if ctx is None or ctx.mesh is None:
+        return x
+    sizes = {n: s for n, s in zip(ctx.mesh.axis_names, ctx.mesh.devices.shape)}
+    checked = []
+    for dim, name in enumerate(logical):
+        if name is None:
+            checked.append(None)
+            continue
+        axes = ctx.axis_map.get(name) or ()
+        total = 1
+        for a in axes:
+            total *= sizes.get(a, 1)
+        if total > 1 and x.shape[dim] % total == 0:
+            checked.append(name)
+        else:
+            checked.append(None)
+    spec = ctx.resolve(*checked)
+    from jax.sharding import NamedSharding
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))

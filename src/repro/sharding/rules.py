@@ -1,0 +1,152 @@
+"""Parameter / input / cache PartitionSpec derivation.
+
+Weights get 2D sharding (FSDP over ``data`` × TP over ``model``) following the
+path-based rules below; any dim not divisible by its axis size falls back to
+replication on that axis (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.utils.tree import map_with_path
+
+# When False, the "fsdp" logical axis maps to replication — TP-only weight
+# sharding, the standard serving layout (decode would otherwise all-gather
+# the full FSDP-sharded weights every token; see EXPERIMENTS.md §Perf).
+FSDP_ENABLED = True
+
+# Head-aware TP (default on): see ShardCtx.head_divisors.  The `legacy_tp`
+# variant disables it to reproduce the pre-fix baseline numbers.
+HEAD_AWARE_TP = True
+
+# (path-suffix match, (dim -> logical axis)) — first match wins.
+# logical: "tp" tensor-parallel, "fsdp" data-axis weight sharding
+_RULES: list[tuple[tuple[str, ...], tuple[str | None, ...]]] = [
+    (("embed",), ("tp", "fsdp")),              # (V, d)
+    (("lm_head",), ("fsdp", "tp")),            # (d, V)
+    (("wq",), ("fsdp", "tp")),
+    (("wk",), ("fsdp", "tp")),
+    (("wv",), ("fsdp", "tp")),
+    (("wo",), ("tp", "fsdp")),
+    (("router",), ("fsdp", None)),
+    (("w_gate",), ("fsdp", "tp")),
+    (("w_in",), ("fsdp", "tp")),
+    (("w_out",), ("tp", "fsdp")),
+    (("w_z",), ("fsdp", "tp")),
+    (("w_x",), ("fsdp", "tp")),
+    (("w_B",), ("fsdp", None)),
+    (("w_C",), ("fsdp", None)),
+    (("w_dt",), ("fsdp", None)),
+]
+
+
+def _axes_for(path: tuple[str, ...], shape: tuple[int, ...]):
+    name = path[-1]
+    moe = "moe" in path
+    axes = None
+    for (suffix, rule_axes) in _RULES:
+        if name == suffix[0]:
+            if moe and name in ("w_in", "w_out", "w_gate"):
+                # (E, a, b): experts over tp, FSDP on the larger inner dim
+                axes = ("tp", "fsdp", None)
+            else:
+                axes = rule_axes
+            break
+    if axes is not None and not FSDP_ENABLED:
+        axes = tuple(None if a == "fsdp" else a for a in axes)
+    return axes  # None -> replicate (norms, scalars, biases, conv)
+
+
+def param_specs(params, ctx):
+    """Pytree of PartitionSpec matching ``params``; divisibility-checked."""
+    sizes = {n: s for n, s in zip(ctx.mesh.axis_names, ctx.mesh.devices.shape)}
+
+    tp_axes = ctx.axis_map.get("tp") or ()
+    tp_total = int(np.prod([sizes.get(a, 1) for a in tp_axes])) if tp_axes else 1
+
+    def spec_of(path, x):
+        axes = _axes_for(path, x.shape)
+        if axes is None:
+            return P()
+        # head-aware TP (see ShardCtx.head_divisors)
+        unit = ctx.head_divisors.get(path[-1])
+        if unit is not None and tp_total > 1 and unit % tp_total != 0:
+            axes = tuple(None if a == "tp" else a for a in axes)
+        # stacked-per-layer leaves carry a leading L dim: right-align the rule
+        axes = (None,) * max(0, x.ndim - len(axes)) + tuple(axes[: x.ndim])
+        phys = []
+        for dim, logical in enumerate(axes):
+            if logical is None:
+                phys.append(None)
+                continue
+            mesh_axes = ctx.axis_map.get(logical) or ()
+            total = int(np.prod([sizes.get(a, 1) for a in mesh_axes])) if mesh_axes else 1
+            if total > 1 and x.shape[dim] % total == 0:
+                phys.append(mesh_axes[0] if len(mesh_axes) == 1 else tuple(mesh_axes))
+            else:
+                phys.append(None)
+        return P(*phys)
+
+    return map_with_path(spec_of, params)
+
+
+def batch_specs(batch, ctx):
+    """Shard dim-0 (batch) of every input over the dp axes when divisible."""
+    sizes = {n: s for n, s in zip(ctx.mesh.axis_names, ctx.mesh.devices.shape)}
+    dp = ctx.axis_map.get("dp") or ()
+    total = int(np.prod([sizes.get(a, 1) for a in dp])) if dp else 1
+
+    def spec_of(path, x):
+        if x.ndim >= 1 and total > 1 and x.shape[0] % total == 0:
+            first = dp[0] if len(dp) == 1 else tuple(dp)
+            return P(first, *([None] * (x.ndim - 1)))
+        return P(*([None] * x.ndim))
+
+    return map_with_path(spec_of, batch)
+
+
+def cache_specs(cache, ctx, *, seq_shard: bool):
+    """KV/SSM cache specs.  Layout: kv (L, B, S, H, D), ssm (L, B, H, P, N).
+
+    ``seq_shard=True`` (batch=1 long-context): shard the cache *sequence* dim
+    over the dp axes instead of batch.
+    """
+    sizes = {n: s for n, s in zip(ctx.mesh.axis_names, ctx.mesh.devices.shape)}
+    dp = ctx.axis_map.get("dp") or ()
+    tp = ctx.axis_map.get("tp") or ()
+    dp_total = int(np.prod([sizes.get(a, 1) for a in dp])) if dp else 1
+    tp_total = int(np.prod([sizes.get(a, 1) for a in tp])) if tp else 1
+    dp_phys = None if not dp else (dp[0] if len(dp) == 1 else tuple(dp))
+    tp_phys = None if not tp else (tp[0] if len(tp) == 1 else tuple(tp))
+
+    def spec_of(path, x):
+        name = path[-1]
+        if x.ndim == 0:
+            return P()
+        spec = [None] * x.ndim
+        if name in ("k", "v") and x.ndim == 5:          # (L,B,S,Hkv,D)
+            if not seq_shard and dp_total > 1 and x.shape[1] % dp_total == 0:
+                spec[1] = dp_phys
+            if seq_shard and dp_total > 1 and x.shape[2] % dp_total == 0:
+                spec[2] = dp_phys
+            if tp_total > 1 and x.shape[3] % tp_total == 0:
+                spec[3] = tp_phys
+        elif name == "ssm" and x.ndim == 5:             # (L,B,H,P,N)
+            if dp_total > 1 and x.shape[1] % dp_total == 0:
+                spec[1] = dp_phys
+            if tp_total > 1 and x.shape[2] % tp_total == 0:
+                spec[2] = tp_phys
+        elif name == "conv" and x.ndim == 4:            # (L,B,K-1,C)
+            if dp_total > 1 and x.shape[1] % dp_total == 0:
+                spec[1] = dp_phys
+            if tp_total > 1 and x.shape[3] % tp_total == 0:
+                spec[3] = tp_phys
+        elif name in ("enc_k", "enc_v") and x.ndim == 5:
+            if not seq_shard and dp_total > 1 and x.shape[1] % dp_total == 0:
+                spec[1] = dp_phys
+            if tp_total > 1 and x.shape[3] % tp_total == 0:
+                spec[3] = tp_phys
+        return P(*spec)
+
+    return map_with_path(spec_of, cache)

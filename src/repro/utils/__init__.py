@@ -1,0 +1,2 @@
+from repro.utils.tree import param_count, tree_bytes, map_with_path
+from repro.utils.hlo import collective_bytes, collective_breakdown

@@ -1,0 +1,53 @@
+"""Small pytree utilities used across the framework."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def param_count(tree) -> int:
+    """Total number of scalar parameters in a pytree."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes of a pytree of (possibly abstract) arrays."""
+    total = 0
+    for x in jax.tree_util.tree_leaves(tree):
+        total += int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+    return total
+
+
+def map_with_path(fn, tree):
+    """tree_map that passes ('a','b',...) key-path tuples of strings to fn."""
+
+    def _keystr(path):
+        out = []
+        for p in path:
+            if hasattr(p, "key"):
+                out.append(str(p.key))
+            elif hasattr(p, "idx"):
+                out.append(str(p.idx))
+            else:
+                out.append(str(p))
+        return tuple(out)
+
+    return jax.tree_util.tree_map_with_path(lambda p, x: fn(_keystr(p), x), tree)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def tree_add(a, b, scale_b=1.0):
+    return jax.tree_util.tree_map(lambda x, y: x + scale_b * y, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree_util.tree_map(lambda x: x * s, a)
+
+
+def tree_zeros_like(a):
+    return jax.tree_util.tree_map(jnp.zeros_like, a)

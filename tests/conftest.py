@@ -1,0 +1,14 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def synthetic_ds():
+    """The paper's exact Synthetic(0.5, 0.5) dataset, 30 clients."""
+    from repro.data.synthetic import make_synthetic
+    return make_synthetic(n_clients=30, alpha=0.5, beta=0.5, seed=0)

@@ -1,0 +1,94 @@
+"""The seven client-availability modes (paper Table 1)."""
+import numpy as np
+import pytest
+
+from repro.core.availability import (ALL_MODES, Ideal, LessDataFirst,
+                                     LogNormal, MoreDataFirst, SinLogNormal,
+                                     YCycle, YMaxFirst, make_mode)
+
+
+@pytest.fixture
+def sizes(rng):
+    return rng.integers(10, 1000, 40).astype(float)
+
+
+@pytest.fixture
+def label_sets(rng):
+    return [set(rng.choice(10, 2, replace=False).tolist()) for _ in range(40)]
+
+
+def test_all_modes_constructible(sizes, label_sets):
+    for name in ALL_MODES:
+        m = make_mode(name, n_clients=40, data_sizes=sizes,
+                      label_sets=label_sets, num_labels=10)
+        p = m.probs(3)
+        assert p.shape == (40,)
+        assert np.all(p >= 0) and np.all(p <= 1)
+
+
+def test_ideal_always_full():
+    m = Ideal(7)
+    assert np.all(m.probs(0) == 1)
+    a = m.sample(0, np.random.default_rng(0))
+    assert a.all()
+
+
+def test_mdf_monotone_in_size(sizes):
+    m = MoreDataFirst(sizes, beta=0.7)
+    order = np.argsort(sizes)
+    p = m.probs(0)
+    assert np.all(np.diff(p[order]) >= -1e-12)
+    assert p.max() == pytest.approx(1.0)      # largest client fully available
+
+
+def test_ldf_monotone_inverse(sizes):
+    m = LessDataFirst(sizes, beta=0.7)
+    order = np.argsort(sizes)
+    p = m.probs(0)
+    assert np.all(np.diff(p[order]) <= 1e-12)
+
+
+def test_ymf_formula(label_sets):
+    beta = 0.9
+    m = YMaxFirst(label_sets, beta=beta)
+    gmax = max(max(s) for s in label_sets)
+    want = np.array([beta * min(s) / gmax + (1 - beta) for s in label_sets])
+    assert np.allclose(m.probs(5), want)
+    # time-independent
+    assert np.allclose(m.probs(0), m.probs(99))
+
+
+def test_ycycle_periodic(label_sets):
+    m = YCycle(label_sets, num_labels=10, beta=0.9, period=20)
+    assert np.allclose(m.probs(3), m.probs(23))
+    # floor (1-beta) for inactive clients
+    assert m.probs(0).min() >= 0.1 - 1e-12
+
+
+def test_lognormal_static_and_seeded():
+    a = LogNormal(30, beta=0.5, seed=7)
+    b = LogNormal(30, beta=0.5, seed=7)
+    assert np.allclose(a.probs(0), b.probs(1))
+    assert a.probs(0).max() == pytest.approx(1.0)
+
+
+def test_sln_modulation():
+    m = SinLogNormal(30, beta=0.5, seed=7, period=24)
+    probs = np.stack([m.probs(t) for t in range(24)])
+    assert np.allclose(probs[0], m.probs(24))        # periodic
+    assert probs.max() <= 0.9 + 1e-9                  # 0.4 sin + 0.5 ceiling
+
+
+def test_sample_never_empty():
+    m = LogNormal(10, beta=0.99, seed=0)              # near-zero availability
+    rng = np.random.default_rng(0)
+    for t in range(50):
+        assert m.sample(t, rng).any()
+
+
+def test_availability_trace_reproducible(sizes):
+    m = MoreDataFirst(sizes, beta=0.7)
+    t1 = [m.sample(t, np.random.default_rng(42)) for t in range(5)]
+    t2 = [m.sample(t, np.random.default_rng(42)) for t in range(5)]
+    for a, b in zip(t1, t2):
+        assert np.array_equal(a, b)

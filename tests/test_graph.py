@@ -1,0 +1,96 @@
+"""3DG construction (paper §3.2): similarity -> adjacency -> shortest paths."""
+import numpy as np
+import pytest
+
+from repro.core import graph as G
+
+
+def test_normalize_01_bounds(rng):
+    v = rng.normal(size=(20, 20))
+    n = G.normalize_01(v)
+    assert n.min() == 0.0 and n.max() == 1.0
+
+
+def test_normalize_01_constant():
+    assert np.all(G.normalize_01(np.full((4, 4), 3.0)) == 0.0)
+
+
+def test_adjacency_semantics(rng):
+    v = G.normalize_01(rng.random((10, 10)))
+    r = G.similarity_to_adjacency(v, eps=0.3, sigma2=0.01)
+    assert np.all(np.diag(r) == 0.0)
+    off = ~np.eye(10, dtype=bool)
+    edged = np.isfinite(r) & off
+    # edges exist exactly where similarity >= eps
+    assert np.array_equal(edged, (v >= 0.3) & off)
+    # higher similarity => shorter edge
+    i = np.unravel_index(np.argmax(np.where(edged, v, -1)), v.shape)
+    j = np.unravel_index(np.argmin(np.where(edged, v, 2)), v.shape)
+    assert r[i] <= r[j]
+
+
+def test_floyd_warshall_matches_bruteforce(rng):
+    n = 12
+    r = rng.random((n, n)) * 5
+    r = 0.5 * (r + r.T)
+    r[rng.random((n, n)) < 0.5] = np.inf
+    r = np.minimum(r, r.T)
+    np.fill_diagonal(r, 0.0)
+    h = G.floyd_warshall_np(r)
+    # brute force: O(n) rounds of min-plus until fixpoint
+    want = r.copy()
+    for _ in range(n):
+        want = np.minimum(want, np.min(want[:, :, None] + want[None, :, :], axis=1))
+    assert np.allclose(h, want, equal_nan=True)
+
+
+def test_shortest_paths_triangle_inequality(rng):
+    r = rng.random((16, 16)) * 3
+    np.fill_diagonal(r, 0)
+    h = G.floyd_warshall_np(r)
+    for k in range(16):
+        assert np.all(h <= h[:, k:k + 1] + h[k:k + 1, :] + 1e-9)
+
+
+def test_finite_cap():
+    h = np.array([[0.0, 1.0, np.inf], [1.0, 0.0, 2.0], [np.inf, 2.0, 0.0]])
+    c = G.finite_cap(h, scale=2.0)
+    assert np.isfinite(c).all()
+    assert c[0, 2] == 4.0          # 2 x max finite (=2)
+    assert np.all(np.diag(c) == 0)
+
+
+def test_oracle_vs_sspp_similarity(rng):
+    """SSPP-constructed V equals the oracle dot-product V up to float error."""
+    from repro.core.sspp import secure_similarity_matrix
+    feats = rng.normal(size=(6, 8))
+    v_oracle = feats @ feats.T
+    v_sspp = secure_similarity_matrix(feats, seed=3)
+    assert np.allclose(v_oracle, v_sspp, atol=1e-6)
+
+
+def test_edge_f1_perfect_and_disjoint():
+    r1 = np.array([[0, 1.0, np.inf], [1.0, 0, 1.0], [np.inf, 1.0, 0]])
+    p, rec, f1 = G.edge_f1(r1, r1)
+    assert f1 == pytest.approx(1.0)
+    r2 = np.where(np.isfinite(r1), np.inf, 1.0)
+    np.fill_diagonal(r2, 0)
+    _, _, f1d = G.edge_f1(r2, r1)
+    assert f1d == pytest.approx(0.0)
+
+
+def test_functional_similarity_ranks_similar_clients(rng):
+    """Clients with identical label dists should be more functionally similar
+    than clients with disjoint ones (Eq. 12 sanity)."""
+    e = np.stack([[1, 0, 0], [1, 0.1, 0], [0, 0, 1.0]])
+    v = G.functional_similarity(e)
+    assert v[0, 1] > v[0, 2]
+
+
+def test_build_3dg_shapes(rng):
+    feats = rng.random((9, 5))
+    v, r, h = G.build_3dg(feats, eps=0.1, sigma2=0.01)
+    assert v.shape == r.shape == h.shape == (9, 9)
+    assert np.all(np.diag(h) == 0)
+    # H is the min-plus closure: re-running FW changes nothing
+    assert np.allclose(G.floyd_warshall_np(h), h, equal_nan=True)

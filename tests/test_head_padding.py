@@ -1,0 +1,49 @@
+"""Head padding for TP alignment (configs.base.pad_heads) must be an EXACT
+function-preserving weight embedding."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, pad_heads
+from repro.configs.registry import get_config
+from repro.models import lm
+
+
+def _cfg(hq, hkv):
+    return ArchConfig(
+        name="t", family="dense", source="test", n_layers=2, d_model=64,
+        n_heads=hq, n_kv_heads=hkv, head_dim=16, d_ff=96, vocab_size=128,
+        dtype="float32")
+
+
+@pytest.mark.parametrize("hq,hkv,mult", [(3, 1, 4), (9, 3, 16), (5, 5, 8),
+                                         (25, 5, 16)])
+def test_padded_model_exact(rng, hq, hkv, mult):
+    cfg = _cfg(hq, hkv)
+    cfg_p = pad_heads(cfg, mult)
+    assert cfg_p.n_heads % mult == 0
+    assert cfg_p.n_heads % cfg_p.n_kv_heads == 0
+    assert cfg_p.n_heads // cfg_p.n_kv_heads >= hq // hkv
+
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    params_p = lm.embed_params_padded(params, cfg, cfg_p)
+
+    batch = {"tokens": jnp.asarray(rng.integers(0, 128, (2, 12)), jnp.int32),
+             "labels": jnp.asarray(rng.integers(0, 128, (2, 12)), jnp.int32)}
+    l0 = float(lm.train_loss(params, cfg, batch, remat=False))
+    l1 = float(lm.train_loss(params_p, cfg_p, batch, remat=False))
+    assert l0 == pytest.approx(l1, rel=1e-5)
+
+    lg0, _ = lm.prefill(params, cfg, {"tokens": batch["tokens"]})
+    lg1, _ = lm.prefill(params_p, cfg_p, {"tokens": batch["tokens"]})
+    np.testing.assert_allclose(np.asarray(lg0), np.asarray(lg1),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_pad_heads_noop_when_aligned():
+    cfg = get_config("olmoe-1b-7b")        # 16 heads, kv 16
+    assert pad_heads(cfg, 16) is cfg

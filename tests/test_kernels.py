@@ -1,0 +1,120 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU): shape/dtype
+sweeps per the assignment."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+# --------------------------------------------------------- floyd-warshall
+@pytest.mark.parametrize("n", [4, 60, 128, 130, 256])
+def test_floyd_warshall_sweep(rng, n):
+    r = (rng.random((n, n)) * 10).astype(np.float32)
+    r[rng.random((n, n)) < 0.4] = np.inf
+    r = np.minimum(r, r.T)
+    np.fill_diagonal(r, 0)
+    got = np.asarray(ops.floyd_warshall(jnp.asarray(r)))
+    want = np.asarray(ref.floyd_warshall_ref(jnp.asarray(r)))
+    np.testing.assert_allclose(got, want, atol=1e-4)
+
+
+def test_floyd_warshall_disconnected_stays_inf():
+    r = np.full((8, 8), np.inf, np.float32)
+    np.fill_diagonal(r, 0)
+    r[0, 1] = r[1, 0] = 1.0
+    h = np.asarray(ops.floyd_warshall(jnp.asarray(r)))
+    assert h[0, 1] == 1.0 and np.isinf(h[0, 7])
+
+
+# ------------------------------------------------------------- similarity
+@pytest.mark.parametrize("n,d", [(10, 3), (128, 128), (200, 60), (50, 300)])
+def test_pairwise_similarity_sweep(rng, n, d):
+    u = rng.normal(size=(n, d)).astype(np.float32)
+    got = np.asarray(ops.pairwise_similarity(jnp.asarray(u)))
+    np.testing.assert_allclose(got, u @ u.T, atol=1e-2, rtol=1e-4)
+
+
+@pytest.mark.parametrize("eps,sigma2", [(0.1, 0.01), (0.0, 1.0), (0.5, 0.1)])
+def test_adjacency_epilogue(rng, eps, sigma2):
+    v = rng.normal(size=(100, 100)).astype(np.float32)
+    v = 0.5 * (v + v.T)
+    got = np.asarray(ops.similarity_to_adjacency(jnp.asarray(v), eps=eps,
+                                                 sigma2=sigma2))
+    vn = (v - v.min()) / (v.max() - v.min())
+    want = np.where(vn >= eps, np.exp(-vn / sigma2), np.inf)
+    np.fill_diagonal(want, 0)
+    mask = np.isfinite(want)
+    np.testing.assert_allclose(got[mask], want[mask], atol=1e-4, rtol=1e-4)
+    assert np.array_equal(np.isinf(got), np.isinf(want))
+
+
+def test_build_3dg_kernel_end_to_end(rng):
+    from repro.core.graph import build_3dg
+    feats = rng.random((40, 16)).astype(np.float32)
+    _, _, h_np = build_3dg(feats, eps=0.1, sigma2=0.01, use_kernel=False)
+    v, r, h_k = ops.build_3dg_kernel(jnp.asarray(feats), eps=0.1, sigma2=0.01)
+    mask = np.isfinite(h_np)
+    np.testing.assert_allclose(np.asarray(h_k)[mask], h_np[mask], atol=1e-3,
+                               rtol=1e-3)
+
+
+# ------------------------------------------------------- window attention
+@pytest.mark.parametrize("s,w,dtype", [
+    (128, 32, jnp.float32),
+    (256, 64, jnp.float32),
+    (256, 100, jnp.float32),
+    (384, 128, jnp.bfloat16),
+])
+def test_window_attention_sweep(rng, s, w, dtype):
+    b, h, d = 2, 3, 32
+    q = jnp.asarray(rng.normal(size=(b, s, h, d)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, s, h, d)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, s, h, d)), dtype)
+    got = np.asarray(ops.window_attention(q, k, v, window=w), np.float32)
+    want = np.asarray(ref.window_attention_ref(q, k, v, window=w), np.float32)
+    atol = 3e-2 if dtype == jnp.bfloat16 else 2e-3
+    np.testing.assert_allclose(got, want, atol=atol, rtol=atol)
+
+
+def test_window_attention_is_causal(rng):
+    """Changing future keys must not change past outputs."""
+    b, s, h, d, w = 1, 128, 2, 16, 32
+    q = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    out1 = np.asarray(ops.window_attention(q, k, v, window=w))
+    k2 = k.at[:, 100:].set(99.0)
+    v2 = v.at[:, 100:].set(-99.0)
+    out2 = np.asarray(ops.window_attention(q, k2, v2, window=w))
+    np.testing.assert_allclose(out1[:, :100], out2[:, :100], atol=1e-5)
+
+
+def test_window_attention_respects_window(rng):
+    """Keys older than the window must not influence the output."""
+    b, s, h, d, w = 1, 256, 1, 16, 64
+    q = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    out1 = np.asarray(ops.window_attention(q, k, v, window=w))
+    # perturb keys/values well outside the last query's window
+    k2 = k.at[:, :s - w - 64].set(7.0)
+    v2 = v.at[:, :s - w - 64].set(-7.0)
+    out2 = np.asarray(ops.window_attention(q, k2, v2, window=w))
+    np.testing.assert_allclose(out1[:, -1], out2[:, -1], atol=1e-5)
+
+
+@pytest.mark.parametrize("s,dtype", [(128, jnp.float32), (256, jnp.bfloat16)])
+def test_flash_attention_full_causal(rng, s, dtype):
+    """flash_attention == dense causal attention (the window covers all)."""
+    from repro.models.attention import attend_dense
+    b, h, d = 2, 2, 32
+    q = jnp.asarray(rng.normal(size=(b, s, h, d)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, s, h, d)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, s, h, d)), dtype)
+    got = np.asarray(ops.flash_attention(q, k, v), np.float32)
+    want = np.asarray(attend_dense(q, k, v, causal=True, window=None), np.float32)
+    atol = 3e-2 if dtype == jnp.bfloat16 else 2e-3
+    np.testing.assert_allclose(got, want, atol=atol, rtol=atol)

@@ -1,0 +1,223 @@
+"""Model-zoo unit tests: attention path agreement, SSD vs naive recurrence,
+MoE dispatch vs per-token reference, RoPE."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models import attention as A
+from repro.models import ffn as F
+from repro.models import ssd as S
+from repro.models.layers import apply_rope, rope_angles, rms_norm
+
+
+# ------------------------------------------------------------- attention
+@pytest.fixture
+def qkv(rng):
+    b, s, h, d = 2, 128, 4, 16
+    mk = lambda: jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    return mk(), mk(), mk()
+
+
+def test_chunked_matches_dense(qkv, monkeypatch):
+    q, k, v = qkv
+    monkeypatch.setattr(A, "KV_CHUNK", 32)
+    dense = A.attend_dense(q, k, v, causal=True, window=None)
+    chunked = A.attend_chunked_full(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(chunked),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_windowed_matches_dense(qkv, monkeypatch):
+    q, k, v = qkv
+    monkeypatch.setattr(A, "Q_CHUNK", 32)
+    w = 48
+    dense = A.attend_dense(q, k, v, causal=True, window=w)
+    windowed = A.attend_windowed(q, k, v, window=w)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(windowed),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_decode_attend_matches_dense_last_position(qkv):
+    q, k, v = qkv
+    b, s, h, d = q.shape
+    full = A.attend_dense(q, k, v, causal=True, window=None)
+    got = A.decode_attend(q[:, -1:], k, v, jnp.asarray(s, jnp.int32), window=None)
+    np.testing.assert_allclose(np.asarray(full[:, -1:]), np.asarray(got),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_decode_attend_window_slices(qkv):
+    q, k, v = qkv
+    b, s, h, d = q.shape
+    w = 32
+    full = A.attend_dense(q, k, v, causal=True, window=w)
+    got = A.decode_attend(q[:, -1:], k, v, jnp.asarray(s, jnp.int32), window=w)
+    np.testing.assert_allclose(np.asarray(full[:, -1:]), np.asarray(got),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_repeat_kv():
+    k = jnp.arange(2 * 3 * 2 * 4).reshape(2, 3, 2, 4).astype(jnp.float32)
+    r = A._repeat_kv(k, 3)
+    assert r.shape == (2, 3, 6, 4)
+    np.testing.assert_array_equal(np.asarray(r[:, :, 0]), np.asarray(r[:, :, 1]))
+    np.testing.assert_array_equal(np.asarray(r[:, :, 0]), np.asarray(k[:, :, 0]))
+
+
+# ------------------------------------------------------------------ rope
+def test_rope_preserves_norm(rng):
+    x = jnp.asarray(rng.normal(size=(2, 8, 3, 16)), jnp.float32)
+    cos, sin = rope_angles(jnp.arange(8), 16, 10000.0)
+    y = apply_rope(x, cos, sin)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(x), axis=-1),
+                               np.linalg.norm(np.asarray(y), axis=-1),
+                               rtol=1e-5)
+
+
+def test_rope_relative_position_property(rng):
+    """<rope(q,i), rope(k,j)> depends only on i - j."""
+    d = 16
+    q = jnp.asarray(rng.normal(size=(1, 1, 1, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 1, 1, d)), jnp.float32)
+
+    def dot_at(i, j):
+        ci, si = rope_angles(jnp.asarray([i]), d, 10000.0)
+        cj, sj = rope_angles(jnp.asarray([j]), d, 10000.0)
+        qi = apply_rope(q, ci, si)
+        kj = apply_rope(k, cj, sj)
+        return float(jnp.sum(qi * kj))
+
+    assert dot_at(5, 3) == pytest.approx(dot_at(12, 10), abs=1e-4)
+    assert dot_at(7, 7) == pytest.approx(dot_at(0, 0), abs=1e-4)
+
+
+def test_rms_norm_unit_scale(rng):
+    x = jnp.asarray(rng.normal(size=(4, 32)) * 7, jnp.float32)
+    y = rms_norm(x, jnp.ones(32))
+    rms = np.sqrt(np.mean(np.asarray(y) ** 2, -1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+
+# ------------------------------------------------------------------- ssd
+def _naive_ssm(x, dt, Alog, B, C, D):
+    """Direct per-step recurrence h_t = exp(dt A) h_{t-1} + dt B x; y = C h + D x."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    Aneg = -np.exp(Alog)
+    st = np.zeros((b, h, p, n))
+    ys = np.zeros_like(x)
+    for t in range(s):
+        decay = np.exp(dt[:, t] * Aneg[None])              # (b,h)
+        upd = np.einsum("bh,bhp,bn->bhpn", dt[:, t], x[:, t], B[:, t])
+        st = st * decay[..., None, None] + upd
+        ys[:, t] = np.einsum("bhpn,bn->bhp", st, C[:, t]) + x[:, t] * D[None, :, None]
+    return ys, st
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 32])
+def test_ssd_chunked_matches_naive(rng, chunk):
+    b, s, h, p, n = 2, 32, 3, 8, 4
+    x = rng.normal(size=(b, s, h, p)).astype(np.float32)
+    dt = rng.uniform(0.01, 0.2, (b, s, h)).astype(np.float32)
+    Alog = rng.uniform(-1, 1, h).astype(np.float32)
+    B = rng.normal(size=(b, s, n)).astype(np.float32)
+    C = rng.normal(size=(b, s, n)).astype(np.float32)
+    D = rng.normal(size=h).astype(np.float32)
+    y, st = S.ssd_chunked(jnp.asarray(x), jnp.asarray(dt),
+                          -jnp.exp(jnp.asarray(Alog)), jnp.asarray(B),
+                          jnp.asarray(C), jnp.asarray(D), chunk=chunk)
+    y_ref, st_ref = _naive_ssm(x, dt, Alog, B, C, D)
+    np.testing.assert_allclose(np.asarray(y), y_ref, atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(st), st_ref, atol=2e-4, rtol=2e-4)
+
+
+def test_ssd_decode_continues_prefill(rng):
+    """apply_ssd on s steps == apply_ssd on s-1 steps + ssd_decode_step."""
+    cfg = SSMConfig(d_state=4, head_dim=8, expand=2, chunk=8, d_conv=4)
+    d_model = 16
+    key = jax.random.PRNGKey(0)
+    params = S.init_ssd(key, d_model, cfg, jnp.float32)
+    x = jnp.asarray(rng.normal(size=(2, 17, d_model)), jnp.float32)
+
+    y_full, (st_full, cv_full) = S.apply_ssd(params, x, cfg)
+    y_pre, (st, cv) = S.apply_ssd(params, x[:, :-1], cfg)
+    y_step, (st2, cv2) = S.ssd_decode_step(params, x[:, -1:], cfg, st, cv)
+
+    np.testing.assert_allclose(np.asarray(y_full[:, -1:]), np.asarray(y_step),
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_full), np.asarray(st2),
+                               atol=2e-4, rtol=2e-4)
+
+
+# ------------------------------------------------------------------- moe
+def _naive_moe(p, x, top_k, kind):
+    """Per-token loop reference (no capacity dropping)."""
+    t, d = x.shape
+    e = p["w_in"].shape[0]
+    logits = x @ np.asarray(p["router"], np.float64)
+    probs = np.exp(logits - logits.max(-1, keepdims=True))
+    probs /= probs.sum(-1, keepdims=True)
+    out = np.zeros_like(x)
+    for i in range(t):
+        top = np.argsort(-probs[i])[:top_k]
+        g = probs[i, top] / probs[i, top].sum()
+        for gg, ee in zip(g, top):
+            h = x[i] @ np.asarray(p["w_in"][ee])
+            if kind == "swiglu":
+                gate = x[i] @ np.asarray(p["w_gate"][ee])
+                h = (gate / (1 + np.exp(-gate))) * h
+            else:
+                h = np.maximum(h, 0) ** 2
+            out[i] += gg * (h @ np.asarray(p["w_out"][ee]))
+    return out
+
+
+@pytest.mark.parametrize("kind", ["swiglu", "squared_relu"])
+def test_moe_matches_per_token_reference(rng, kind):
+    d, dff, e, k = 8, 16, 4, 2
+    key = jax.random.PRNGKey(1)
+    p = F.init_moe(key, d, dff, e, kind, jnp.float32)
+    x = jnp.asarray(rng.normal(size=(1, 12, d)), jnp.float32)
+    # huge capacity => no token drops => must match the dense reference
+    out, aux = F.apply_moe(p, x, top_k=k, capacity_factor=8.0, kind=kind)
+    ref = _naive_moe(p, np.asarray(x[0], np.float64), k, kind)
+    np.testing.assert_allclose(np.asarray(out[0]), ref, atol=1e-4, rtol=1e-3)
+    assert float(aux) > 0
+
+
+def test_moe_capacity_drops_dont_nan(rng):
+    d, dff, e = 8, 16, 4
+    p = F.init_moe(jax.random.PRNGKey(2), d, dff, e, "swiglu", jnp.float32)
+    x = jnp.asarray(rng.normal(size=(2, 64, d)), jnp.float32)
+    out, aux = F.apply_moe(p, x, top_k=2, capacity_factor=0.25, kind="swiglu")
+    assert np.all(np.isfinite(np.asarray(out)))
+
+
+def test_ffn_kinds(rng):
+    d, dff = 8, 16
+    x = jnp.asarray(rng.normal(size=(2, 4, d)), jnp.float32)
+    for kind in ("swiglu", "squared_relu"):
+        p = F.init_ffn(jax.random.PRNGKey(0), d, dff, kind, jnp.float32)
+        y = F.apply_ffn(p, x, kind)
+        assert y.shape == x.shape
+        assert np.all(np.isfinite(np.asarray(y)))
+
+
+def test_moe_grouped_matches_global(rng):
+    """Group-local dispatch == global dispatch when capacity is ample."""
+    d, dff, e, k = 8, 16, 4, 2
+    key = jax.random.PRNGKey(3)
+    p = F.init_moe(key, d, dff, e, "swiglu", jnp.float32)
+    x = jnp.asarray(rng.normal(size=(4, 16, d)), jnp.float32)
+    out1, _ = F.apply_moe(p, x, top_k=k, capacity_factor=8.0, kind="swiglu")
+    old = F.MOE_GROUPS
+    F.MOE_GROUPS = 4
+    try:
+        out2, _ = F.apply_moe(p, x, top_k=k, capacity_factor=8.0, kind="swiglu")
+    finally:
+        F.MOE_GROUPS = old
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               atol=1e-5, rtol=1e-5)

@@ -1,0 +1,110 @@
+"""Hypothesis property tests on the system's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import graph as G
+from repro.core.fairness import count_variance, gini
+from repro.core.sampler import _fedgs_solve
+
+
+@st.composite
+def sym_matrix(draw, nmin=3, nmax=12):
+    n = draw(st.integers(nmin, nmax))
+    vals = draw(st.lists(st.floats(0, 10, allow_nan=False), min_size=n * n,
+                         max_size=n * n))
+    q = np.array(vals).reshape(n, n)
+    q = 0.5 * (q + q.T)
+    np.fill_diagonal(q, 0)
+    return q
+
+
+@settings(max_examples=25, deadline=None)
+@given(sym_matrix(), st.integers(1, 6), st.integers(0, 2 ** 31 - 1))
+def test_solver_invariants(q, m, seed):
+    """|S| = min(m, |A|), S subset of A, deterministic."""
+    n = q.shape[0]
+    rng = np.random.default_rng(seed)
+    avail = rng.random(n) < 0.7
+    if not avail.any():
+        avail[0] = True
+    m_eff = min(m, int(avail.sum()))
+    s1 = np.asarray(_fedgs_solve(jnp.asarray(q, jnp.float32),
+                                 jnp.asarray(avail), m=m_eff, max_sweeps=8))
+    s2 = np.asarray(_fedgs_solve(jnp.asarray(q, jnp.float32),
+                                 jnp.asarray(avail), m=m_eff, max_sweeps=8))
+    assert np.array_equal(s1, s2)                     # deterministic
+    sel = np.flatnonzero(s1)
+    assert len(sel) == m_eff
+    assert np.all(avail[sel])
+
+
+@settings(max_examples=25, deadline=None)
+@given(sym_matrix(3, 10))
+def test_fw_fixpoint_and_triangle(r):
+    """FW is idempotent and satisfies the triangle inequality."""
+    h = G.floyd_warshall_np(r)
+    h2 = G.floyd_warshall_np(h)
+    assert np.allclose(h, h2, equal_nan=True)
+    n = len(h)
+    for k in range(n):
+        assert np.all(h <= h[:, k:k + 1] + h[k:k + 1, :] + 1e-9)
+    # distances never exceed direct edges
+    assert np.all(h <= r + 1e-9)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, 1000), min_size=2, max_size=50))
+def test_fairness_metrics_bounds(counts):
+    v = np.array(counts, float)
+    assert count_variance(v) >= 0
+    gi = gini(v)
+    assert -1e-9 <= gi <= 1.0
+    # perfectly uniform counts => zero variance, zero gini
+    u = np.full(len(v), 7.0)
+    assert count_variance(u) == 0.0
+    assert abs(gini(u)) < 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 30), st.floats(0.05, 0.95), st.integers(0, 10 ** 6))
+def test_availability_probs_always_valid(n, beta, seed):
+    from repro.core.availability import LogNormal, SinLogNormal
+    for cls in (LogNormal, SinLogNormal):
+        mode = cls(n, beta=beta, seed=seed)
+        for t in (0, 7, 100):
+            p = mode.probs(t)
+            assert p.shape == (n,)
+            assert np.all(p >= 0) and np.all(p <= 1)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.floats(0.1, 100, allow_nan=False), min_size=2, max_size=8),
+       st.integers(0, 2 ** 31 - 1))
+def test_aggregation_is_convex_combination(weights, seed):
+    """Aggregating identical client params returns them unchanged; aggregated
+    values always lie inside the per-client min/max envelope (Eq. 18 is a
+    convex combination)."""
+    import jax.numpy as jnp
+    from repro.fed.server import aggregate
+    rng = np.random.default_rng(seed)
+    m = len(weights)
+    stacked = {"w": jnp.asarray(rng.normal(size=(m, 4)), jnp.float32)}
+    out = np.asarray(aggregate(stacked, jnp.asarray(weights, jnp.float32))["w"])
+    lo = np.asarray(stacked["w"]).min(0) - 1e-5
+    hi = np.asarray(stacked["w"]).max(0) + 1e-5
+    assert np.all(out >= lo) and np.all(out <= hi)
+    same = {"w": jnp.broadcast_to(stacked["w"][0], stacked["w"].shape)}
+    out2 = np.asarray(aggregate(same, jnp.asarray(weights, jnp.float32))["w"])
+    np.testing.assert_allclose(out2, np.asarray(stacked["w"][0]), atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 40), st.integers(1, 60))
+def test_secure_dot_exact_property(n, seed):
+    from repro.core.sspp import secure_dot
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=n)
+    b = rng.normal(size=n)
+    assert abs(secure_dot(a, b, seed=seed) - a @ b) < 1e-8

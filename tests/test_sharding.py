@@ -1,0 +1,126 @@
+"""Sharding rules: divisibility-aware PartitionSpec derivation."""
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import INPUT_SHAPES
+from repro.configs.registry import get_config
+from repro.launch.specs import abstract_params, input_specs, variant_for_shape
+from repro.models import lm
+from repro.sharding import rules
+from repro.sharding.ctx import ShardCtx
+
+
+def _fake_mesh(shape=(16, 16), names=("data", "model")):
+    """rules.* only reads axis_names and devices.shape — no jax needed."""
+    return SimpleNamespace(axis_names=names, devices=np.empty(shape))
+
+
+def _ctx(shape=(16, 16), names=("data", "model")):
+    amap = {"dp": ("data",), "tp": ("model",), "fsdp": ("data",), "sp": ("data",)}
+    if "pod" in names:
+        amap["dp"] = ("pod", "data")
+    return ShardCtx(axis_map=amap, mesh=_fake_mesh(shape, names))
+
+
+def _check_divisible(tree, specs, sizes):
+    flat_x = jax.tree_util.tree_leaves(tree)
+    flat_s = jax.tree_util.tree_leaves(specs, is_leaf=lambda s: isinstance(s, P))
+    assert len(flat_x) == len(flat_s)
+    for x, spec in zip(flat_x, flat_s):
+        for dim, axes in enumerate(spec):
+            if axes is None:
+                continue
+            axes = (axes,) if isinstance(axes, str) else axes
+            total = int(np.prod([sizes[a] for a in axes]))
+            assert x.shape[dim] % total == 0, (x.shape, spec)
+
+
+@pytest.mark.parametrize("arch", ["smollm-135m", "nemotron-4-340b",
+                                  "olmoe-1b-7b", "mamba2-780m", "hymba-1.5b"])
+def test_param_specs_always_divisible(arch):
+    cfg = get_config(arch)
+    ctx = _ctx()
+    params = abstract_params(cfg)
+    specs = rules.param_specs(params, ctx)
+    _check_divisible(params, specs, {"data": 16, "model": 16})
+
+
+def test_param_specs_2d_sharding_on_big_dense():
+    """nemotron-340b weights must actually get both fsdp and tp axes."""
+    cfg = get_config("nemotron-4-340b")
+    ctx = _ctx()
+    params = abstract_params(cfg)
+    specs = rules.param_specs(params, ctx)
+    wq_spec = specs["blocks"]["attn"]["wq"]
+    # stacked (L, d, hq*dh): expect (None, "data", "model")
+    assert wq_spec == P(None, "data", "model")
+
+
+def test_hymba_attention_replicated():
+    """25 heads / kv=5 aren't divisible by tp=16 -> replicate, don't crash."""
+    cfg = get_config("hymba-1.5b")
+    ctx = _ctx()
+    params = abstract_params(cfg)
+    specs = rules.param_specs(params, ctx)
+    wq = specs["blocks"]["attn"]["wq"]      # (L, 1600, 1600): both dims 1600%16==0
+    # d_model 1600 = 16*100 is divisible, so fsdp/tp apply on the projection
+    assert wq == P(None, "data", "model")
+
+
+def test_batch_specs_shard_batch_dim():
+    cfg = get_config("smollm-135m")
+    shape = INPUT_SHAPES["train_4k"]
+    ctx = _ctx()
+    batch = input_specs(cfg, shape)["batch"]
+    specs = rules.batch_specs(batch, ctx)
+    assert specs["tokens"] == P("data", None)
+    assert specs["labels"] == P("data", None)
+
+
+def test_batch_specs_multipod():
+    cfg = get_config("smollm-135m")
+    shape = INPUT_SHAPES["train_4k"]
+    ctx = _ctx((2, 16, 16), ("pod", "data", "model"))
+    batch = input_specs(cfg, shape)["batch"]
+    specs = rules.batch_specs(batch, ctx)
+    assert specs["tokens"] == P(("pod", "data"), None)
+
+
+def test_cache_specs_batch_vs_seq_sharding():
+    cfg = get_config("deepseek-coder-33b")
+    ctx = _ctx()
+    for shape_name, seq_shard in [("decode_32k", False), ("long_500k", True)]:
+        shape = INPUT_SHAPES[shape_name]
+        c = variant_for_shape(cfg, shape)
+        cache = jax.eval_shape(
+            lambda: lm.init_decode_cache(c, shape.global_batch, shape.seq_len))
+        specs = rules.cache_specs(cache, ctx, seq_shard=seq_shard)
+        kspec = specs["k"]
+        if seq_shard:
+            assert kspec[2] == "data" and kspec[1] is None   # (L,B,S,H,D): S sharded
+        else:
+            assert kspec[1] == "data"                        # batch sharded
+
+
+def test_undivisible_batch_replicates():
+    """global_batch=1 (long_500k) can't shard over 16 -> replicated."""
+    cfg = get_config("mamba2-780m")
+    ctx = _ctx()
+    shape = INPUT_SHAPES["long_500k"]
+    specs_in = input_specs(cfg, shape)
+    cache_specs = rules.cache_specs(specs_in["cache"], ctx, seq_shard=True)
+    ssm = cache_specs["ssm"]                # (L,B,H,P,N): B=1 -> None
+    assert ssm[1] is None
+
+
+def test_shard_act_noop_without_ctx():
+    import jax.numpy as jnp
+    from repro.sharding.ctx import shard_act
+    x = jnp.ones((4, 4))
+    y = shard_act(x, "dp", "tp")
+    assert y.shape == x.shape

@@ -1,0 +1,52 @@
+"""Secure Scalar Product Protocol (paper Appendix D, Algorithm 2)."""
+import numpy as np
+import pytest
+
+from repro.core.sspp import secure_dot, secure_similarity_matrix
+
+
+def test_exactness(rng):
+    for _ in range(20):
+        a = rng.normal(size=16)
+        b = rng.normal(size=16)
+        got = secure_dot(a, b, seed=int(rng.integers(1 << 30)))
+        assert got == pytest.approx(float(a @ b), rel=1e-9, abs=1e-9)
+
+
+def test_similarity_matrix_symmetric_exact(rng):
+    feats = rng.normal(size=(7, 5))
+    v = secure_similarity_matrix(feats, seed=1)
+    assert np.allclose(v, v.T)
+    assert np.allclose(v, feats @ feats.T, atol=1e-8)
+
+
+def test_server_transcript_masks_features(rng):
+    """Everything the server sees is masked: the uploaded vectors differ from
+    the raw features by the (unknown-to-an-outside-observer) random masks, and
+    the blinded partials don't expose the dot product components."""
+    a = rng.normal(size=32)
+    b = rng.normal(size=32)
+    transcript = []
+    dot = secure_dot(a, b, seed=9, transcript=transcript)
+    a_hat, b_hat, u, v1, v2 = transcript
+    assert not np.allclose(a_hat, a, atol=1e-3)
+    assert not np.allclose(b_hat, b, atol=1e-3)
+    # the final product only emerges from the v1 + v2 combination
+    assert v1 + v2 == pytest.approx(dot)
+    assert abs(v1 - dot) > 1e-6 and abs(v2 - dot) > 1e-6
+
+
+def test_transcript_varies_with_seed_while_dot_constant(rng):
+    """Reconstruction-infeasibility property: the same (A, B) pair produces
+    completely different server-visible transcripts under different protocol
+    randomness, while the output stays fixed — the transcript therefore
+    cannot determine A or B."""
+    a = rng.normal(size=8)
+    b = rng.normal(size=8)
+    t1, t2 = [], []
+    d1 = secure_dot(a, b, seed=1, transcript=t1)
+    d2 = secure_dot(a, b, seed=2, transcript=t2)
+    assert d1 == pytest.approx(d2)
+    assert not np.allclose(t1[0], t2[0])
+    assert not np.allclose(t1[1], t2[1])
+    assert t1[2] != pytest.approx(t2[2])

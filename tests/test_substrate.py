@@ -1,0 +1,142 @@
+"""Substrate layers: optimizers, schedules, checkpointing, data pipeline,
+HLO cost walker."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.optimizers import adamw, sgd
+from repro.optim.schedules import constant, cosine_warmup, round_decay
+
+
+# --------------------------------------------------------------- optimizers
+@pytest.mark.parametrize("opt", [sgd(), sgd(momentum=0.9), adamw(),
+                                 adamw(state_dtype=jnp.bfloat16)])
+def test_optimizer_minimizes_quadratic(opt):
+    params = {"x": jnp.asarray([3.0, -2.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        g = jax.grad(lambda p: jnp.sum(jnp.square(p["x"])))(params)
+        params, state = opt.update(g, state, params, 0.05)
+    assert float(jnp.sum(jnp.abs(params["x"]))) < 0.05
+
+
+def test_adamw_bf16_state_dtype():
+    opt = adamw(state_dtype=jnp.bfloat16)
+    params = {"x": jnp.zeros((4,), jnp.float32)}
+    state = opt.init(params)
+    assert state["m"]["x"].dtype == jnp.bfloat16
+    assert state["v"]["x"].dtype == jnp.bfloat16
+
+
+def test_weight_decay_shrinks():
+    opt = sgd(weight_decay=0.1)
+    params = {"x": jnp.asarray([1.0])}
+    state = opt.init(params)
+    zero_g = {"x": jnp.asarray([0.0])}
+    p2, _ = opt.update(zero_g, state, params, 0.1)
+    assert float(p2["x"][0]) < 1.0
+
+
+# ---------------------------------------------------------------- schedules
+def test_schedules():
+    assert constant(0.1)(99) == 0.1
+    assert round_decay(0.1, 0.998)(2) == pytest.approx(0.1 * 0.998 ** 2)
+    cw = cosine_warmup(1.0, warmup=10, total=100)
+    assert cw(0) < cw(9) <= 1.0
+    assert cw(100) == pytest.approx(0.0, abs=1e-9)
+
+
+# --------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip(tmp_path):
+    from repro.checkpoint.ckpt import load_checkpoint, save_checkpoint
+    tree = {"params": {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+                       "b": jnp.zeros((3,), jnp.bfloat16)},
+            "counts": np.arange(5)}
+    path = str(tmp_path / "ckpt")
+    save_checkpoint(path, tree, metadata={"round": 7})
+    back = load_checkpoint(path, like=tree)
+    np.testing.assert_array_equal(np.asarray(back["params"]["w"]),
+                                  np.asarray(tree["params"]["w"]))
+    assert back["params"]["b"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(back["counts"], tree["counts"])
+
+
+# --------------------------------------------------------------------- data
+def test_synthetic_exact_recipe(synthetic_ds):
+    ds = synthetic_ds
+    assert ds.n_clients == 30
+    assert ds.x.shape[-1] == 60
+    assert ds.num_classes == 10
+    assert hasattr(ds, "opt_params") and ds.opt_params.shape == (30, 610)
+    # imbalanced lognormal(4,2) sizes
+    assert ds.sizes.min() >= 1 and ds.sizes.max() > 2 * ds.sizes.min()
+
+
+def test_two_label_partition(rng):
+    from repro.data.partition import two_label_partition
+    labels = rng.integers(0, 10, 2000)
+    parts = two_label_partition(labels, 100, rng)
+    assert len(parts) == 100
+    for ix in parts:
+        assert len(np.unique(labels[ix])) <= 3   # 2 shards -> usually 2 labels
+
+
+def test_dirichlet_partition_sizes(rng):
+    from repro.data.partition import dirichlet_label_partition, lognormal_sizes
+    labels = rng.integers(0, 10, 5000)
+    sizes = lognormal_sizes(5000, 50, rng)
+    parts = dirichlet_label_partition(labels, 50, 1.75, rng, sizes)
+    got = np.array([len(p) for p in parts])
+    assert got.sum() <= 5000
+    assert np.all(got > 0)
+
+
+def test_vision_surrogates(rng):
+    from repro.data.vision import make_cifar_like, make_fashion_like
+    ds = make_cifar_like(n_clients=20, n_total=2000)
+    assert ds.n_clients == 20 and ds.label_dist.shape == (20, 10)
+    ds2 = make_fashion_like(n_clients=20, n_total=2000)
+    for k in range(20):
+        labels = np.unique(ds2.y[k][: ds2.sizes[k]])
+        assert len(labels) <= 3
+
+
+def test_token_streams(rng):
+    from repro.data.lm_stream import token_batches
+    pools = token_batches(vocab=64, n_clients=4, tokens_per_client=330,
+                          seq_len=32, seed=0)
+    assert pools.shape == (4, 10, 33)
+    assert pools.min() >= 0 and pools.max() < 64
+    # clients differ (distinct Markov chains)
+    assert not np.array_equal(pools[0], pools[1])
+
+
+# ------------------------------------------------------------ HLO cost walk
+def test_hlo_walker_multiplies_loop_trips():
+    from repro.utils.hlo import analyze
+
+    def f_scan(x, ws):
+        y, _ = jax.lax.scan(lambda c, w: (jnp.tanh(c @ w), None), x, ws)
+        return y
+
+    def f_unroll(x, ws):
+        for i in range(ws.shape[0]):
+            x = jnp.tanh(x @ ws[i])
+        return x
+
+    x = jax.ShapeDtypeStruct((64, 32), jnp.float32)
+    ws = jax.ShapeDtypeStruct((5, 32, 32), jnp.float32)
+    fs = analyze(jax.jit(f_scan).lower(x, ws).compile().as_text()).flops
+    fu = analyze(jax.jit(f_unroll).lower(x, ws).compile().as_text()).flops
+    assert fs == fu == 2 * 64 * 32 * 32 * 5
+
+
+def test_hlo_walker_collectives_empty_on_single_device():
+    from repro.utils.hlo import analyze
+    c = jax.jit(lambda x: x @ x).lower(
+        jax.ShapeDtypeStruct((8, 8), jnp.float32)).compile()
+    a = analyze(c.as_text())
+    assert a.collective_bytes == 0
+    assert a.flops == 2 * 8 * 8 * 8
