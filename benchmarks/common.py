@@ -16,9 +16,20 @@ from repro.core.availability import make_mode
 from repro.core.sampler import FedGSSampler, make_sampler
 from repro.fed.engine import FLConfig, FLEngine
 from repro.fed.models import logistic_regression, small_cnn
+from repro.fed.scan_engine import (
+    ScanConfig, ScanEngine, oracle_h, precompute_masks,
+)
 
 RESULTS = pathlib.Path(__file__).resolve().parent / "results"
 PAPER = RESULTS / "paper"
+
+# per-process caches reused across batched sweep rows: datasets/models per
+# (ds_name, quick), oracle graphs per (ds_name, quick), ScanEngine instances
+# per (ds_name, quick, config) — jit caches live per engine, so the five
+# FedGS(alpha) rows of a dataset share ONE compiled program
+_DS_CACHE: dict = {}
+_H_CACHE: dict = {}
+_ENGINE_CACHE: dict = {}
 
 # (mode name, beta) per dataset — the paper's Table 2 columns
 MODES = {
@@ -78,6 +89,100 @@ def make_method(name: str, prox_mu_default: float = 0.01):
     if name == "FedProx":
         return make_sampler("md"), prox_mu_default
     raise ValueError(name)
+
+
+def scan_method(name: str, prox_mu_default: float = 0.01):
+    """Method name -> (scan sampler kind, prox_mu, fedgs alpha), or None when
+    the method needs the host engine (Power-of-Choice probes losses)."""
+    if name.startswith("FedGS"):
+        return "fedgs", 0.0, float(name.split("(")[1].rstrip(")"))
+    if name == "UniformSample":
+        return "uniform", 0.0, 1.0
+    if name == "MDSample":
+        return "md", 0.0, 1.0
+    if name == "FedProx":
+        return "md", prox_mu_default, 1.0
+    return None
+
+
+def run_row_batched(ds_name: str, mode_list, method: str, seeds, *,
+                    quick: bool = True, force: bool = False) -> list[dict]:
+    """One whole Table-2 sweep row — every (availability mode x seed) cell of
+    one (dataset, method) — as ONE jit-compiled scan-over-rounds /
+    vmap-over-cells program (repro.fed.scan_engine).  Returns one record per
+    cell with the run_setting schema subset; cached per row on disk."""
+    kind = scan_method(method)
+    if kind is None:
+        raise ValueError(f"{method!r} is host-engine only (use run_setting)")
+    sampler_kind, prox, alpha = kind
+    PAPER.mkdir(parents=True, exist_ok=True)
+    tag = "quick" if quick else "full"
+    mtag = "-".join(f"{m}{'' if b is None else b}" for m, b in mode_list)
+    key = f"scanrow__{ds_name}__{method}__{mtag}__s{'-'.join(map(str, seeds))}__{tag}"
+    path = PAPER / (key.replace("(", "").replace(")", "").replace(".", "_") + ".json")
+    if path.exists() and not force:
+        return json.loads(path.read_text())
+
+    dk = (ds_name, quick)
+    if dk not in _DS_CACHE:
+        _DS_CACHE[dk] = (make_dataset(ds_name, quick), make_model(ds_name))
+    ds, model = _DS_CACHE[dk]
+    fcfg = fl_config(ds_name, quick, 0)
+    cfg = ScanConfig(rounds=fcfg.rounds,
+                     m=max(1, int(round(fcfg.sample_frac * ds.n_clients))),
+                     local_steps=fcfg.local_steps, batch_size=fcfg.batch_size,
+                     lr=fcfg.lr, lr_decay=fcfg.lr_decay, prox_mu=prox,
+                     eval_every=fcfg.eval_every, sampler=sampler_kind,
+                     max_sweeps=32)
+    ck = (ds_name, quick, cfg)
+    if ck not in _ENGINE_CACHE:
+        _ENGINE_CACHE[ck] = ScanEngine(ds, model, cfg, use_masks=True)
+    eng = _ENGINE_CACHE[ck]
+    h = None
+    if sampler_kind == "fedgs":
+        if dk not in _H_CACHE:
+            feats = ds.opt_params if ds_name == "synthetic" else ds.label_dist
+            _H_CACHE[dk] = oracle_h(np.asarray(feats))
+        h = _H_CACHE[dk]
+    cells, meta = [], []
+    for mode_name, beta in mode_list:
+        mode = make_mode(mode_name, n_clients=ds.n_clients,
+                         data_sizes=ds.sizes, label_sets=ds.label_sets(),
+                         num_labels=ds.num_classes, beta=beta, seed=99)
+        # host-precomputed masks: every method (scan-batched or host-loop
+        # Power-of-Choice) sees the IDENTICAL availability trace, the
+        # Appendix C invariant FLEngine.run implements
+        masks = precompute_masks(mode, cfg.rounds, fcfg.avail_seed)
+        for seed in seeds:
+            cells.append(eng.cell(seed=seed, masks=masks, alpha=alpha, h=h))
+            meta.append((mode_name, beta, seed))
+    t0 = time.time()
+    hists = eng.run_batch(cells)
+    wall = round(time.time() - t0, 1)
+
+    from repro.core.fairness import count_variance, count_range, gini
+    recs = []
+    for (mode_name, beta, seed), hist in zip(meta, hists):
+        recs.append({
+            "dataset": ds_name, "mode": mode_name, "beta": beta,
+            "method": method, "seed": seed, "quick": quick,
+            "best_loss": hist.best_loss,
+            "final_loss": float(hist.val_loss[hist.rounds[-1]]),
+            "best_acc": float(np.nanmax(hist.val_acc)),
+            "count_var": count_variance(hist.counts),
+            "count_range": count_range(hist.counts),
+            "gini": gini(hist.counts),
+            "counts": hist.counts.tolist(),
+            "rounds": cfg.rounds,
+            "loss_curve": hist.val_loss[hist.rounds].tolist(),
+            "curve_rounds": hist.rounds.tolist(),
+            "wall_s": wall,                 # whole batched row, shared
+            "engine": "scan",
+        })
+    path.write_text(json.dumps(recs))
+    print(f"[bench] {key}: {len(recs)} cells in one batched program ({wall}s)",
+          flush=True)
+    return recs
 
 
 def run_setting(ds_name: str, mode_name: str, beta, method: str, *,

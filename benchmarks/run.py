@@ -17,7 +17,7 @@ import time
 RESULTS = pathlib.Path(__file__).resolve().parent / "results"
 
 SECTIONS = ["table2", "fig4", "table3", "table4", "dynamic", "scaling",
-            "kernels", "roofline", "variants"]
+            "engine", "kernels", "roofline", "variants"]
 
 
 def _section(name: str, quick: bool):
@@ -33,6 +33,8 @@ def _section(name: str, quick: bool):
         from benchmarks import ablation_dynamic as m
     elif name == "scaling":
         from benchmarks import sampler_scaling as m
+    elif name == "engine":
+        from benchmarks import engine_bench as m
     elif name == "kernels":
         from benchmarks import kernel_bench as m
     elif name == "roofline":

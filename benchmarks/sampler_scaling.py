@@ -1,9 +1,12 @@
 """Beyond-paper: FedGS solver scaling — wall time of the jit'd greedy+swap
-QUBO local search, and of the 3DG pipeline (similarity + Floyd-Warshall), as
-the client count N grows toward datacenter scale."""
+QUBO local search and of the 3DG pipeline (similarity + Floyd-Warshall) as
+the client count N grows toward datacenter scale, plus the amortized
+per-cell cost when a whole sweep row of solves runs as one vmapped program
+(the scan-engine formulation, repro.fed.scan_engine)."""
 from __future__ import annotations
 
 import time
+from functools import partial
 
 import numpy as np
 
@@ -11,7 +14,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.graph import build_3dg
-from repro.core.sampler import _fedgs_solve
+from repro.core.sampler import _fedgs_solve, fedgs_solve
+
+BATCH = 8          # cells in the vmapped solve (seeds x modes slice)
 
 
 def _time(fn, reps=3):
@@ -36,18 +41,29 @@ def run(quick: bool = True) -> list[dict]:
         m = max(2, n // 10)
         t_solve = _time(lambda: np.asarray(
             _fedgs_solve(qj, avail, m=m, max_sweeps=32)))
+
+        # whole sweep row at once: vmap the pure solver over BATCH cells
+        qb = jnp.asarray(0.5 * (lambda a: a + a.transpose(0, 2, 1))(
+            rng.random((BATCH, n, n)).astype(np.float32)))
+        ab = jnp.asarray(rng.random((BATCH, n)) < 0.7)
+        solve_b = jax.jit(jax.vmap(
+            partial(fedgs_solve, m=m, max_sweeps=32)))
+        t_batched = _time(lambda: np.asarray(solve_b(qb, ab))) / BATCH
         rows.append({"table": "sampler_scaling", "n_clients": n, "m": m,
                      "graph_build_s": round(t_graph, 4),
-                     "solve_s": round(t_solve, 4)})
+                     "solve_s": round(t_solve, 4),
+                     "solve_batched_percell_s": round(t_batched, 4),
+                     "batch": BATCH})
     return rows
 
 
 def summarize(rows) -> list[str]:
     out = ["", "== FedGS solver / 3DG scaling =="]
-    out.append(f"{'N':>6s} {'M':>5s} {'3DG build (s)':>14s} {'solve (s)':>10s}")
+    out.append(f"{'N':>6s} {'M':>5s} {'3DG build (s)':>14s} {'solve (s)':>10s} "
+               f"{'vmap x{}/cell (s)'.format(rows[0]['batch'] if rows else 0):>18s}")
     for r in rows:
         out.append(f"{r['n_clients']:6d} {r['m']:5d} {r['graph_build_s']:14.4f} "
-                   f"{r['solve_s']:10.4f}")
+                   f"{r['solve_s']:10.4f} {r['solve_batched_percell_s']:18.4f}")
     return out
 
 

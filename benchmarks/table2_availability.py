@@ -1,33 +1,47 @@
 """Paper Table 2: optimal testing loss of every method under every client
 availability mode, on all three datasets (Synthetic exact; CIFAR10 /
 FashionMNIST as class-Gaussian surrogates with the paper's partitioners).
+
+Since the scan engine landed, each (dataset, method) sweep ROW — all
+availability modes x all seeds — executes as ONE jit-compiled
+scan-over-rounds / vmap-over-cells program (``common.run_row_batched``);
+only Power-of-Choice (which probes per-client losses on the host) still goes
+through the per-cell ``FLEngine`` path.  Pass ``batched=False`` to force the
+legacy host loop everywhere.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import METHODS, MODES, run_setting
+from benchmarks.common import (
+    METHODS, MODES, run_row_batched, run_setting, scan_method,
+)
 
 
-def run(quick: bool = True, seeds=None) -> list[dict]:
+def _row_cells(ds_name, modes, method, seeds, quick, batched):
+    """All (mode, seed) cell records of one sweep row."""
+    if batched and scan_method(method) is not None:
+        return run_row_batched(ds_name, modes, method, seeds, quick=quick)
+    return [run_setting(ds_name, mode_name, beta, method,
+                        quick=quick, seed=seed)
+            for mode_name, beta in modes for seed in seeds]
+
+
+def run(quick: bool = True, seeds=None, batched: bool = True) -> list[dict]:
     rows = []
     for ds_name, modes in MODES.items():
         # paper averages 3 seeds; logreg on Synthetic is cheap enough to do so
         # even in the quick pass, the CNN surrogates use one seed per cell
         ds_seeds = seeds or ((0, 1, 2) if ds_name == "synthetic" else (0,))
-        for mode_name, beta in modes:
-            for method in METHODS:
-                losses, cvars = [], []
-                for seed in ds_seeds:
-                    rec = run_setting(ds_name, mode_name, beta, method,
-                                      quick=quick, seed=seed)
-                    losses.append(rec["best_loss"])
-                    cvars.append(rec["count_var"])
+        for method in METHODS:
+            cells = _row_cells(ds_name, modes, method, ds_seeds, quick, batched)
+            for mode_name, beta in modes:
+                sub = [c for c in cells if c["mode"] == mode_name]
                 rows.append({
                     "table": "table2", "dataset": ds_name, "mode": mode_name,
                     "beta": beta, "method": method,
-                    "best_loss": float(np.mean(losses)),
-                    "count_var": float(np.mean(cvars)),
+                    "best_loss": float(np.mean([c["best_loss"] for c in sub])),
+                    "count_var": float(np.mean([c["count_var"] for c in sub])),
                 })
     return rows
 

@@ -5,7 +5,34 @@ active set is an independent Bernoulli draw with a *dedicated* seed stream
 (independent of model-training randomness, as in Appendix C, so all methods
 see identical availability traces).
 
-Modes: IDL, MDF, LDF, YMF, YC, LN, SLN.
+Mode table (paper Table 1 rows -> formulas; beta defaults in parentheses):
+
+  ====  =============================  ==========================================
+  name  Table 1 row                    p_k(t)
+  ====  =============================  ==========================================
+  IDL   Ideal                          1
+  MDF   More-Data-First (beta=0.7)     n_k^beta / max_i n_i^beta
+  LDF   Less-Data-First (beta=0.7)     n_k^-beta / max_i n_i^-beta
+  YMF   Y-Max-First (beta=0.9)         beta * min_i{y_ki} / max_{c,j}{y_cj}
+                                         + (1 - beta)            (Gu et al. 2021)
+  YC    Y-Cycle (beta=0.9, T_p=20)     beta * 1[exists y in Y_k:
+                                         y/C <= phase(t) < (y+1)/C] + (1 - beta),
+                                         phase(t) = (1 + t mod T_p) / T_p
+  LN    Log-Normal (beta=0.5)          c_k / max_i c_i,
+                                         c ~ LogNormal(0, ln 1/(1-beta))
+  SLN   Sin-Log-Normal (beta=0.5;      clip(p_k^LN * (0.4 sin(2 pi
+          T_p=20 via make_mode,          (1 + t mod T_p)/T_p) + 0.5), 0, 1)
+          24 if built directly)
+  ====  =============================  ==========================================
+
+Every mode's probabilities are periodic in t (static modes have period 1), so
+the whole schedule is a dense ``(period, N)`` table.  That table — exposed via
+:meth:`AvailabilityMode.probs_table` — is the *source of truth*: it is a pure
+array consumable from jit-compiled code as ``table[t % period]`` (this is how
+``repro.fed.scan_engine`` draws availability on-device), while the numpy API
+``probs(t)`` / ``sample(t, rng)`` is a thin host-side wrapper over the same
+table.  See README.md "Availability modes" and DESIGN.md §5 for how the scan
+engine batches these tables over sweep cells.
 """
 from __future__ import annotations
 
@@ -13,10 +40,31 @@ import numpy as np
 
 
 class AvailabilityMode:
+    """Base class.  Subclasses implement ``_row(t)`` (the ``p_k(t)`` formula,
+    which must only depend on ``t % period``) and set ``period``; the base
+    class materializes the dense ``(period, N)`` probability table once and
+    serves both the numpy and the jit-side APIs from it."""
+
     name = "base"
+    period: int = 1
+
+    def _row(self, t: int) -> np.ndarray:
+        raise NotImplementedError
+
+    def probs_table(self) -> np.ndarray:
+        """The full periodic schedule as a pure ``(period, N)`` float array.
+
+        Jittable availability: ``p(t) = probs_table()[t % period]`` — pass
+        this array (plus ``period``) into device code; no host callback."""
+        if not hasattr(self, "_table"):
+            self._table = np.stack(
+                [np.asarray(self._row(t), np.float64)
+                 for t in range(self.period)])
+        return self._table
 
     def probs(self, t: int) -> np.ndarray:
-        raise NotImplementedError
+        """Per-client active probabilities for round t (numpy wrapper)."""
+        return self.probs_table()[t % self.period]
 
     def sample(self, t: int, rng: np.random.Generator) -> np.ndarray:
         """Boolean active mask for round t."""
@@ -34,7 +82,7 @@ class Ideal(AvailabilityMode):
     def __init__(self, n_clients: int):
         self.n = n_clients
 
-    def probs(self, t):
+    def _row(self, t):
         return np.ones(self.n)
 
 
@@ -46,7 +94,7 @@ class MoreDataFirst(AvailabilityMode):
         ns = np.asarray(data_sizes, float)
         self.p = ns ** beta / np.max(ns ** beta)
 
-    def probs(self, t):
+    def _row(self, t):
         return self.p
 
 
@@ -59,7 +107,7 @@ class LessDataFirst(AvailabilityMode):
         inv = ns ** (-beta)
         self.p = inv / np.max(inv)
 
-    def probs(self, t):
+    def _row(self, t):
         return self.p
 
 
@@ -71,7 +119,7 @@ class YMaxFirst(AvailabilityMode):
         gmax = max(max(s) for s in label_sets)
         self.p = np.array([beta * min(s) / max(gmax, 1) + (1 - beta) for s in label_sets])
 
-    def probs(self, t):
+    def _row(self, t):
         return self.p
 
 
@@ -85,8 +133,9 @@ class YCycle(AvailabilityMode):
         self.num_y = num_labels
         self.beta = beta
         self.tp = period
+        self.period = period
 
-    def probs(self, t):
+    def _row(self, t):
         phase = (1 + (t % self.tp)) / self.tp
         out = np.empty(len(self.label_sets))
         for k, s in enumerate(self.label_sets):
@@ -105,7 +154,7 @@ class LogNormal(AvailabilityMode):
         c = rng.lognormal(0.0, sigma, n_clients)
         self.p = c / c.max()
 
-    def probs(self, t):
+    def _row(self, t):
         return self.p
 
 
@@ -117,8 +166,9 @@ class SinLogNormal(LogNormal):
                  period: int = 24):
         super().__init__(n_clients, beta, seed)
         self.tp = period
+        self.period = period
 
-    def probs(self, t):
+    def _row(self, t):
         mod = 0.4 * np.sin(2 * np.pi * (1 + (t % self.tp)) / self.tp) + 0.5
         return np.clip(self.p * mod, 0.0, 1.0)
 

@@ -80,9 +80,15 @@ class PowerOfChoiceSampler(Sampler):
 
 
 # -------------------------------------------------------------------- FedGS
-@partial(jax.jit, static_argnames=("m", "max_sweeps"))
-def _fedgs_solve(q: jax.Array, avail: jax.Array, *, m: int, max_sweeps: int):
+def fedgs_solve(q: jax.Array, avail: jax.Array, *, m: int, max_sweeps: int):
     """Greedy + best-swap local search on  max s^T Q s,  |s| = m,  s <= avail.
+
+    Pure (unjitted) so it can be inlined into larger jit programs — the
+    per-round host path wraps it as ``_fedgs_solve`` below; the scan engine
+    (``repro.fed.scan_engine``) and the production dry-run
+    (``repro.launch.fedsim.graph_pipeline``) call it directly inside their
+    own jit scopes.  If fewer than ``m`` clients are available it selects all
+    of them (|S| = min(m, |A|)).
 
     q: (N, N) symmetric with diagonal = -z (counts penalty).
     Returns s (N,) bool.
@@ -96,8 +102,9 @@ def _fedgs_solve(q: jax.Array, avail: jax.Array, *, m: int, max_sweeps: int):
         gain = q.diagonal() + 2.0 * r      # marginal gain of adding k
         gain = jnp.where(s | ~avail, neg, gain)
         k = jnp.argmax(gain)
-        s = s.at[k].set(True)
-        r = r + q[k]
+        ok = gain[k] > neg / 2             # no addable client left => no-op
+        s = s.at[k].set(ok | s[k])
+        r = r + jnp.where(ok, q[k], 0.0)
         return (s, r), None
 
     s0 = jnp.zeros((n,), bool)
@@ -132,6 +139,64 @@ def _fedgs_solve(q: jax.Array, avail: jax.Array, *, m: int, max_sweeps: int):
     return s
 
 
+# jit'd entry point for the per-round host path (FedGSSampler.sample).
+_fedgs_solve = partial(jax.jit, static_argnames=("m", "max_sweeps"))(fedgs_solve)
+
+
+def fedgs_select(h: jax.Array, counts: jax.Array, avail: jax.Array,
+                 alpha: jax.Array, *, m: int, max_sweeps: int,
+                 m_target: int | None = None):
+    """Eq. 14/16 end-to-end: build Q from (H, counts) and run the solver.
+
+    Pure and float32 throughout — the ONE q-construction both the host
+    sampler and the scan engine (repro.fed.scan_engine) trace, so greedy
+    argmax near-ties resolve identically on both paths.  ``m`` is the solver
+    budget (min(M, |A_t|) on the host path); ``m_target`` is the M used in
+    the count-balance penalty z (defaults to ``m``).
+    """
+    n = h.shape[0]
+    mt = m if m_target is None else m_target
+    z = 2.0 * (counts - counts.mean() - mt / n) + 1.0
+    q = (alpha / n) * h - jnp.diag(z)
+    q = 0.5 * (q + q.T)                               # symmetrize (H should be)
+    return fedgs_solve(q.astype(jnp.float32), avail, m=m, max_sweeps=max_sweeps)
+
+
+_fedgs_select = partial(jax.jit, static_argnames=("m", "max_sweeps",
+                                                  "m_target"))(fedgs_select)
+
+
+# ------------------------------------------- device-side baseline sampling
+def gumbel_topk_select(key: jax.Array, log_weights: jax.Array,
+                       avail: jax.Array, m: int) -> jax.Array:
+    """Weighted sampling WITHOUT replacement among available clients, fully
+    on-device (Gumbel top-k): adding i.i.d. Gumbel noise to log-weights and
+    taking the top-m reproduces successive draws without replacement with
+    probabilities proportional to the weights.  With uniform weights this is
+    ``UniformSampler``; with ``log(data_sizes)`` it is ``MDSampler`` — the
+    jit-compatible counterparts used inside ``repro.fed.scan_engine``.
+
+    Returns s (N,) bool with exactly min(m, |avail|) True entries.
+    """
+    g = jax.random.gumbel(key, log_weights.shape, dtype=jnp.float32)
+    scores = jnp.where(avail, log_weights + g, -jnp.inf)
+    _, idx = jax.lax.top_k(scores, m)
+    valid = avail[idx]                      # fewer than m available -> drop pads
+    s = jnp.zeros(log_weights.shape, bool)
+    return s.at[idx].set(valid)
+
+
+def uniform_select(key, avail, m: int):
+    """Device-side UniformSampler: uniform without replacement among A_t."""
+    return gumbel_topk_select(key, jnp.zeros(avail.shape, jnp.float32), avail, m)
+
+
+def md_select(key, data_sizes, avail, m: int):
+    """Device-side MDSampler: without replacement, P(k) ∝ n_k, among A_t."""
+    w = jnp.log(jnp.maximum(data_sizes.astype(jnp.float32), 1e-12))
+    return gumbel_topk_select(key, w, avail, m)
+
+
 @dataclass
 class FedGSSampler(Sampler):
     """The paper's method.  alpha weighs graph dispersion vs count balance."""
@@ -163,14 +228,11 @@ class FedGSSampler(Sampler):
 
     def sample(self, *, avail, m, rng, counts=None, **_):
         assert self._h is not None, "call set_graph(H) first"
-        n = len(avail)
         m_eff = int(min(m, int(avail.sum())))
-        v = np.asarray(counts, np.float64)
-        z = 2.0 * (v - v.mean() - m / n) + 1.0
-        q = (self.alpha / n) * self._h - np.diag(z)
-        q = 0.5 * (q + q.T)                           # symmetrize (H should be)
-        s = _fedgs_solve(jnp.asarray(q, jnp.float32), jnp.asarray(avail),
-                         m=m_eff, max_sweeps=self.max_sweeps)
+        s = _fedgs_select(jnp.asarray(self._h),
+                          jnp.asarray(counts, jnp.float32),
+                          jnp.asarray(avail), jnp.float32(self.alpha),
+                          m=m_eff, max_sweeps=self.max_sweeps, m_target=m)
         return np.flatnonzero(np.asarray(s))
 
 

@@ -2,3 +2,6 @@ from repro.fed.models import logistic_regression, small_cnn, FedModel
 from repro.fed.client import make_local_trainer, make_loss_prober
 from repro.fed.server import aggregate
 from repro.fed.engine import FLConfig, FLEngine
+from repro.fed.scan_engine import (
+    ScanConfig, ScanEngine, ScanHistory, oracle_h, precompute_masks,
+)

@@ -1,0 +1,405 @@
+"""Fully jit-compiled federated simulation: scan-over-rounds, vmap-over-cells.
+
+``FLEngine.run`` (fed/engine.py) is a per-round Python loop: every round pays
+a dispatch + host<->device sync for the sampler, the trainer and the eval, and
+a sweep like Table 2 (samplers x availability modes x seeds) runs each cell
+serially.  This module moves the *entire* round loop onto the device:
+
+  one ``lax.scan`` step = availability draw -> sampler -> vmap'd local
+  training (E SGD steps) -> Eq. 18 aggregation -> count update -> eval,
+
+all with static shapes, and the scanned program is then ``vmap``-ed over a
+batch axis of *cells* — (seed, availability mode, FedGS alpha) triples — so a
+whole sweep row executes as ONE XLA program (DESIGN.md §5).
+
+Static-shape formulation
+  The sampler emits a boolean mask s (N,) with |s| = min(M, |A_t|); the M
+  sorted selected indices (padded with zero-weight slots when |A_t| < M) are
+  gathered so local training always runs on exactly M stacked clients, and
+  Eq. 18 weights ``n_k * valid_k`` zero out the pads.
+
+Seed streams (parity with FLEngine)
+  The training stream replicates FLEngine.run exactly: ``key_t = fold_in(
+  PRNGKey(seed), t)``, then ``_, sub = split(key_t)`` and per-client keys
+  ``split(sub, M)`` — so with the same sampled sets the parameter trajectory
+  matches the host engine to float32 round-off, PROVIDED every round has
+  |A_t| >= M: FLEngine splits ``split(sub, |S_t|)`` and threefry key prefixes
+  depend on the split count, so rounds where fewer than M clients are
+  available draw different local-training batches (still a valid simulation,
+  just not bit-parity — the parity tests assert the precondition).  Availability either comes
+  from host-precomputed masks (``precompute_masks`` replicates FLEngine's
+  numpy SeedSequence([avail_seed, t]) stream bit-exactly — the parity-test
+  path) or is drawn on-device from the mode's dense ``(period, N)``
+  probability table (``AvailabilityMode.probs_table``) with a dedicated jax
+  key stream.  Baseline samplers run on-device via Gumbel top-k
+  (``core.sampler.uniform_select`` / ``md_select``); FedGS reuses the same
+  deterministic ``fedgs_solve`` as the host path, so FedGS cells match the
+  host engine's sampled sets exactly.
+
+Dynamic 3DG
+  With ``graph_refresh_every > 0`` the 3DG is maintained *inside* the scan
+  (the ``graph_pipeline`` formulation from launch/fedsim.py): participants'
+  post-training probe embeddings update a carried (N, C) embedding table and
+  every K rounds cosine-similarity -> adjacency -> Floyd–Warshall -> finite
+  cap rebuild the carried H under ``lax.cond``.
+
+Typical use::
+
+    eng = ScanEngine(ds, model, ScanConfig(rounds=60, m=6, sampler="fedgs"))
+    cells = [eng.cell(seed=s, mode=mode, alpha=1.0, h=h) for s in (0, 1, 2)]
+    hists = eng.run_batch(cells)          # one compiled program, B cells
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.availability import AvailabilityMode
+from repro.core.sampler import fedgs_select, md_select, uniform_select
+from repro.data.fed_dataset import FedDataset
+from repro.fed.client import make_local_trainer
+from repro.fed.models import FedModel
+from repro.fed.server import aggregate
+from repro.kernels.ref import floyd_warshall_ref
+
+SAMPLERS = ("fedgs", "uniform", "md")
+
+
+@dataclass(frozen=True)
+class ScanConfig:
+    """Static (compile-time) configuration of the scanned program."""
+    rounds: int = 200
+    m: int = 3                     # sampled clients per round (static shape M)
+    local_steps: int = 10          # E
+    batch_size: int = 10
+    lr: float = 0.1
+    lr_decay: float = 0.998
+    prox_mu: float = 0.0
+    eval_every: int = 1            # in-scan eval cadence (NaN on off rounds)
+    sampler: str = "fedgs"         # fedgs | uniform | md (PoC: host engine only)
+    max_sweeps: int = 32           # FedGS local-search budget
+    # dynamic 3DG: rebuild H in-scan from participants' probe embeddings
+    # every K rounds (0 = static graph installed via the cell's ``h``)
+    graph_refresh_every: int = 0
+    graph_eps: float = 0.1
+    graph_sigma2: float = 0.01
+    probe_size: int = 64
+    probe_seed: int = 777
+
+    def __post_init__(self):
+        if self.sampler not in SAMPLERS:
+            raise ValueError(
+                f"scan engine supports {SAMPLERS}, not {self.sampler!r} "
+                "(Power-of-Choice needs a host loss probe; use FLEngine)")
+
+
+# --------------------------------------------------------------- host helpers
+def precompute_masks(mode: AvailabilityMode, rounds: int,
+                     avail_seed: int = 1234) -> np.ndarray:
+    """(rounds, N) bool availability trace, bit-identical to the stream
+    FLEngine.run draws from numpy SeedSequence([avail_seed, t])."""
+    rows = []
+    for t in range(rounds):
+        rng = np.random.default_rng(np.random.SeedSequence([avail_seed, t]))
+        rows.append(mode.sample(t, rng))
+    return np.stack(rows)
+
+
+def normalized_h(h: np.ndarray) -> np.ndarray:
+    """Finite-cap + [0, 1]-normalize a shortest-path matrix, exactly as
+    FedGSSampler.set_graph does (DESIGN.md assumption log)."""
+    from repro.core.graph import finite_cap
+    h = np.asarray(finite_cap(h), np.float64)
+    hmax = h.max()
+    if hmax > 0:
+        h = h / hmax
+    return h.astype(np.float32)
+
+
+def oracle_h(features: np.ndarray, *, eps: float = 0.1,
+             sigma2: float = 0.01) -> np.ndarray:
+    """Oracle 3DG -> normalized H (the scan-engine analogue of
+    FLEngine.install_oracle_graph)."""
+    from repro.core.graph import build_3dg
+    _, _, h = build_3dg(np.asarray(features), eps=eps, sigma2=sigma2)
+    return normalized_h(h)
+
+
+def stack_cells(cells: list[dict]) -> dict:
+    """Stack per-cell pytrees along a new leading batch axis, padding
+    availability tables to a common period (rows beyond a cell's period are
+    never indexed because lookups are ``table[t % period]``)."""
+    if "table" in cells[0]:
+        pmax = max(int(c["table"].shape[0]) for c in cells)
+        cells = [dict(c) for c in cells]
+        for c in cells:
+            p = int(c["table"].shape[0])
+            if p < pmax:
+                c["table"] = jnp.concatenate(
+                    [c["table"], jnp.zeros((pmax - p,) + c["table"].shape[1:],
+                                           c["table"].dtype)])
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *cells)
+
+
+# ------------------------------------------------------------------ histories
+@dataclass
+class ScanHistory:
+    """Device-side trajectory of one cell (full-round resolution; eval
+    entries are NaN on rounds skipped by ``eval_every``)."""
+    val_loss: np.ndarray       # (T,)
+    val_acc: np.ndarray        # (T,)
+    count_var: np.ndarray      # (T,)
+    sel: np.ndarray            # (T, M) sorted selected indices (padded)
+    valid: np.ndarray          # (T, M) pad mask (False = zero-weight slot)
+    counts: np.ndarray         # (N,) final participation counts
+
+    @property
+    def best_loss(self) -> float:
+        return float(np.nanmin(self.val_loss))
+
+    @property
+    def rounds(self) -> np.ndarray:
+        """Rounds with recorded eval."""
+        return np.flatnonzero(np.isfinite(self.val_loss))
+
+    def sampled(self, t: int) -> np.ndarray:
+        """The round-t sampled set (pads stripped)."""
+        return self.sel[t][self.valid[t]]
+
+
+# ---------------------------------------------------------------- the program
+def _build_simulate(ds: FedDataset, model: FedModel, cfg: ScanConfig,
+                    use_masks: bool):
+    """Closure-captures the (cell-shared) dataset and returns the pure
+    ``simulate(cell) -> traj`` program to be jit'd / vmap'd."""
+    n = int(ds.n_clients)
+    m = int(cfg.m)
+    xs = jnp.asarray(ds.x)
+    ys = jnp.asarray(ds.y)
+    sizes_i = jnp.asarray(ds.sizes)
+    sizes_f = jnp.asarray(ds.sizes, jnp.float32)
+    xv = jnp.asarray(ds.x_val)
+    yv = jnp.asarray(ds.y_val)
+    # host-side f64 schedule cast to f32: bit-identical to FLEngine's
+    # per-round ``jnp.float32(lr * decay ** t)``
+    lrs = jnp.asarray([np.float32(cfg.lr * cfg.lr_decay ** t)
+                       for t in range(cfg.rounds)])
+    trainer = make_local_trainer(model.loss, local_steps=cfg.local_steps,
+                                 batch_size=cfg.batch_size,
+                                 prox_mu=cfg.prox_mu)
+    dynamic = cfg.graph_refresh_every > 0
+    if dynamic:
+        # shared Gaussian probe batch (Eq. 12), engine-level constant —
+        # FLEngine re-draws it per run seed; the scan engine fixes probe_seed
+        # so one compiled program serves every cell (DESIGN.md §5)
+        rng = np.random.default_rng(cfg.probe_seed)
+        flat = np.asarray(ds.x_val, np.float64).reshape(len(ds.x_val), -1)
+        mu, cov = flat.mean(0), np.cov(flat.T) + 1e-4 * np.eye(flat.shape[1])
+        probe = rng.multivariate_normal(mu, cov, cfg.probe_size)
+        probe = jnp.asarray(
+            probe.reshape(cfg.probe_size, *ds.x_val.shape[1:]), jnp.float32)
+
+    eye = jnp.eye(n, dtype=bool)
+
+    def rebuild_h(emb):
+        """cos-sim -> [0,1] -> adjacency -> Floyd–Warshall -> finite cap, the
+        in-jit version of engine._rebuild_dynamic_graph / fedsim.graph_pipeline."""
+        u = emb / jnp.maximum(jnp.linalg.norm(emb, axis=1, keepdims=True), 1e-12)
+        v = jnp.maximum(u @ u.T, 0.0)
+        vn = (v - v.min()) / jnp.maximum(v.max() - v.min(), 1e-12)
+        r = jnp.where(eye, 0.0,
+                      jnp.where(vn >= cfg.graph_eps,
+                                jnp.exp(-vn / cfg.graph_sigma2), jnp.inf))
+        hfw = floyd_warshall_ref(r.astype(jnp.float32))
+        finite = jnp.isfinite(hfw)
+        cap = 2.0 * jnp.maximum(jnp.max(jnp.where(finite, hfw, -jnp.inf)), 1e-12)
+        h = jnp.where(eye, 0.0, jnp.where(finite, hfw, cap))
+        return h / jnp.maximum(h.max(), 1e-12)
+
+    def embed_mean(stacked):
+        return jax.vmap(lambda p: jnp.mean(model.embed(p, probe), 0))(stacked)
+
+    def select(s):
+        """Mask (N,) bool -> (sorted selected indices (M,), valid (M,))."""
+        order = jnp.argsort(jnp.where(s, jnp.arange(n), n + jnp.arange(n)))
+        sel = order[:m]
+        return sel, s[sel]
+
+    def simulate(cell):
+        key0 = cell["key"]
+        params0 = model.init(key0)
+        counts0 = jnp.zeros((n,), jnp.float32)
+
+        if dynamic:
+            # init: one all-clients probe round from a fresh model (the
+            # paper's everyone-available-at-init assumption), as in
+            # FLEngine.install_dynamic_graph
+            ikey = cell["init_key"]
+            stacked = trainer(model.init(ikey), xs, ys, sizes_i,
+                              jnp.float32(cfg.lr), jax.random.split(ikey, n))
+            emb0 = embed_mean(stacked)
+            h0 = rebuild_h(emb0)
+        else:
+            emb0 = jnp.zeros((1, 1), jnp.float32)
+            h0 = cell["h"]
+
+        def step(carry, sx):
+            params, counts, h, emb = carry
+            t, lr = sx["t"], sx["lr"]
+            key = jax.random.fold_in(key0, t)
+
+            # 1. availability A_t
+            if use_masks:
+                avail = sx["mask"]
+            else:
+                akey = jax.random.fold_in(cell["avail_key"], t)
+                p = cell["table"][jnp.mod(t, cell["period"])]
+                avail = jax.random.uniform(akey, (n,)) < p
+                forced = jax.random.randint(
+                    jax.random.fold_in(akey, 1), (), 0, n)
+                avail = avail | ((jnp.arange(n) == forced) & ~avail.any())
+
+            # 2. sampler: S_t subset of A_t, |S_t| = min(M, |A_t|)
+            if cfg.sampler == "fedgs":
+                s = fedgs_select(h, counts, avail, cell["alpha"],
+                                 m=m, max_sweeps=cfg.max_sweeps)
+            elif cfg.sampler == "uniform":
+                skey = jax.random.fold_in(cell["sampler_key"], t)
+                s = uniform_select(skey, avail, m)
+            else:
+                skey = jax.random.fold_in(cell["sampler_key"], t)
+                s = md_select(skey, sizes_f, avail, m)
+            sel, valid = select(s)
+
+            # 3. vmap'd local training on the M gathered clients
+            key, sub = jax.random.split(key)
+            local = trainer(params, xs[sel], ys[sel], sizes_i[sel], lr,
+                            jax.random.split(sub, m))
+
+            # 4. Eq. 18 aggregation (pads carry zero weight)
+            params = aggregate(local, sizes_f[sel] * valid)
+
+            # 5. count update v^{t+1}
+            counts = counts + s.astype(jnp.float32)
+
+            # dynamic 3DG: refresh participants' embeddings; rebuild every K
+            if dynamic:
+                e_sel = embed_mean(local)
+                emb = emb.at[sel].set(
+                    jnp.where(valid[:, None], e_sel, emb[sel]))
+                h = jax.lax.cond(
+                    (t + 1) % cfg.graph_refresh_every == 0,
+                    rebuild_h, lambda e: h, emb)
+
+            # 6. eval (cond-gated to the eval_every cadence)
+            def do_eval(_):
+                return model.loss(params, xv, yv), model.accuracy(params, xv, yv)
+
+            if cfg.eval_every == 1:
+                vl, va = do_eval(None)
+            else:
+                vl, va = jax.lax.cond(
+                    (jnp.mod(t, cfg.eval_every) == 0) | (t == cfg.rounds - 1),
+                    do_eval,
+                    lambda _: (jnp.float32(jnp.nan), jnp.float32(jnp.nan)),
+                    None)
+            cvar = jnp.sum((counts - counts.mean()) ** 2) / max(n - 1, 1)
+            out = {"val_loss": vl, "val_acc": va, "count_var": cvar,
+                   "sel": sel.astype(jnp.int32), "valid": valid}
+            return (params, counts, h, emb), out
+
+        sxs = {"t": jnp.arange(cfg.rounds), "lr": lrs}
+        if use_masks:
+            sxs["mask"] = cell["masks"]
+        (params, counts, _, _), traj = jax.lax.scan(
+            step, (params0, counts0, h0, emb0), sxs)
+        return {"params": params, "counts": counts, **traj}
+
+    return simulate
+
+
+# ------------------------------------------------------------------- engine
+class ScanEngine:
+    """Host-facing wrapper: builds cells, compiles the scanned program once,
+    and runs single cells or whole batched sweeps."""
+
+    def __init__(self, ds: FedDataset, model: FedModel, cfg: ScanConfig, *,
+                 use_masks: bool = False):
+        self.ds, self.model, self.cfg = ds, model, cfg
+        self.n = ds.n_clients
+        self.use_masks = use_masks
+        self._simulate = _build_simulate(ds, model, cfg, use_masks)
+        self._jit1 = None
+        self._jitB = None
+
+    # ------------------------------------------------------------- cells
+    def cell(self, *, seed: int = 0, mode: Optional[AvailabilityMode] = None,
+             masks: Optional[np.ndarray] = None, alpha: float = 1.0,
+             h: Optional[np.ndarray] = None, avail_seed: int = 1234,
+             sampler_seed: Optional[int] = None) -> dict:
+        """One sweep cell = (seed, availability, sampler params) pytree.
+
+        Mask path (``use_masks=True``): pass ``masks`` (rounds, N), e.g. from
+        ``precompute_masks`` for bit-exact FLEngine availability.  Device
+        path: pass ``mode``; its ``probs_table()`` is shipped to the device
+        and Bernoulli draws use the fold_in(avail_seed, t) jax stream.
+        """
+        c: dict = {"key": jax.random.PRNGKey(seed),
+                   "alpha": jnp.float32(alpha)}
+        if self.use_masks:
+            assert masks is not None and masks.shape == (self.cfg.rounds, self.n)
+            c["masks"] = jnp.asarray(masks, bool)
+        else:
+            assert mode is not None, "device-side availability needs a mode"
+            table = mode.probs_table()
+            c["table"] = jnp.asarray(table, jnp.float32)
+            c["period"] = jnp.int32(table.shape[0])
+            c["avail_key"] = jax.random.PRNGKey(avail_seed)
+        if self.cfg.sampler in ("uniform", "md"):
+            c["sampler_key"] = jax.random.PRNGKey(
+                seed + 0x5E1EC7 if sampler_seed is None else sampler_seed)
+        if self.cfg.graph_refresh_every > 0:
+            c["init_key"] = jax.random.PRNGKey(seed + 778)
+        elif self.cfg.sampler == "fedgs":
+            assert h is not None, "static FedGS cell needs a normalized H"
+            c["h"] = jnp.asarray(h, jnp.float32)
+        else:
+            c["h"] = jnp.zeros((1, 1), jnp.float32)
+        return c
+
+    # -------------------------------------------------------------- runs
+    def _to_history(self, out, i: Optional[int] = None) -> ScanHistory:
+        pick = (lambda x: np.asarray(x)) if i is None else \
+               (lambda x: np.asarray(x[i]))
+        return ScanHistory(val_loss=pick(out["val_loss"]),
+                           val_acc=pick(out["val_acc"]),
+                           count_var=pick(out["count_var"]),
+                           sel=pick(out["sel"]), valid=pick(out["valid"]),
+                           counts=pick(out["counts"]))
+
+    def run(self, cell: dict) -> ScanHistory:
+        """Execute one cell; the whole trajectory is a single device program."""
+        if self._jit1 is None:
+            self._jit1 = jax.jit(self._simulate)
+        out = jax.block_until_ready(self._jit1(cell))
+        self.params = out["params"]
+        return self._to_history(out)
+
+    def run_batch(self, cells: list[dict]) -> list[ScanHistory]:
+        """Execute B cells as ONE vmapped-and-scanned XLA program."""
+        if self._jitB is None:
+            self._jitB = jax.jit(jax.vmap(self._simulate))
+        out = jax.block_until_ready(self._jitB(stack_cells(cells)))
+        self.params = out["params"]           # (B, ...) stacked
+        return [self._to_history(out, i) for i in range(len(cells))]
+
+    def lower_batch(self, cells: list[dict]):
+        """Lower (without running) — for compile-time measurement."""
+        if self._jitB is None:
+            self._jitB = jax.jit(jax.vmap(self._simulate))
+        return self._jitB.lower(stack_cells(cells))

@@ -67,7 +67,7 @@ def round_step_factory(local_steps: int, batch: int):
 
 def graph_pipeline(feats, counts, avail, alpha, m_sel, max_sweeps: int = 32):
     """Server-side FedGS pipeline as ONE jit program: V -> R -> H -> solve."""
-    from repro.core.sampler import _fedgs_solve
+    from repro.core.sampler import fedgs_solve
     from repro.kernels.ref import floyd_warshall_ref
     n = feats.shape[0]
     v = feats @ feats.T
@@ -79,8 +79,8 @@ def graph_pipeline(feats, counts, avail, alpha, m_sel, max_sweeps: int = 32):
     h = jnp.where(jnp.isfinite(h), h, 2 * hmax) / jnp.maximum(2 * hmax, 1e-12)
     z = 2.0 * (counts - counts.mean() - m_sel / n) + 1.0
     q = (alpha / n) * h - jnp.diag(z)
-    return _fedgs_solve.__wrapped__(q.astype(jnp.float32), avail,
-                                    m=m_sel, max_sweeps=max_sweeps)
+    return fedgs_solve(q.astype(jnp.float32), avail,
+                       m=m_sel, max_sweeps=max_sweeps)
 
 
 def run(n_clients: int, *, multi_pod: bool, sample_frac: float = 0.1,

@@ -1,5 +1,8 @@
 """Hypothesis property tests on the system's invariants."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")       # optional dev dependency
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp
