@@ -92,17 +92,20 @@ def make_method(name: str, prox_mu_default: float = 0.01):
 
 
 def scan_method(name: str, prox_mu_default: float = 0.01):
-    """Method name -> (scan sampler kind, prox_mu, fedgs alpha), or None when
-    the method needs the host engine (Power-of-Choice probes losses)."""
+    """Method name -> (scan sampler kind, prox_mu, fedgs alpha).  Every
+    Table-2 method — including Power-of-Choice, whose loss probe now runs
+    in-scan — batches through ``run_row_batched``."""
     if name.startswith("FedGS"):
         return "fedgs", 0.0, float(name.split("(")[1].rstrip(")"))
     if name == "UniformSample":
         return "uniform", 0.0, 1.0
     if name == "MDSample":
         return "md", 0.0, 1.0
+    if name == "Power-of-Choice":
+        return "poc", 0.0, 1.0
     if name == "FedProx":
         return "md", prox_mu_default, 1.0
-    return None
+    raise ValueError(f"unknown method {name!r}")
 
 
 def run_row_batched(ds_name: str, mode_list, method: str, seeds, *,
@@ -111,10 +114,7 @@ def run_row_batched(ds_name: str, mode_list, method: str, seeds, *,
     one (dataset, method) — as ONE jit-compiled scan-over-rounds /
     vmap-over-cells program (repro.fed.scan_engine).  Returns one record per
     cell with the run_setting schema subset; cached per row on disk."""
-    kind = scan_method(method)
-    if kind is None:
-        raise ValueError(f"{method!r} is host-engine only (use run_setting)")
-    sampler_kind, prox, alpha = kind
+    sampler_kind, prox, alpha = scan_method(method)
     PAPER.mkdir(parents=True, exist_ok=True)
     tag = "quick" if quick else "full"
     mtag = "-".join(f"{m}{'' if b is None else b}" for m, b in mode_list)
@@ -149,9 +149,8 @@ def run_row_batched(ds_name: str, mode_list, method: str, seeds, *,
         mode = make_mode(mode_name, n_clients=ds.n_clients,
                          data_sizes=ds.sizes, label_sets=ds.label_sets(),
                          num_labels=ds.num_classes, beta=beta, seed=99)
-        # host-precomputed masks: every method (scan-batched or host-loop
-        # Power-of-Choice) sees the IDENTICAL availability trace, the
-        # Appendix C invariant FLEngine.run implements
+        # host-precomputed masks: every method sees the IDENTICAL
+        # availability trace, the Appendix C invariant FLEngine.run implements
         masks = precompute_masks(mode, cfg.rounds, fcfg.avail_seed)
         for seed in seeds:
             cells.append(eng.cell(seed=seed, masks=masks, alpha=alpha, h=h))

@@ -1,0 +1,87 @@
+"""Graph-pipeline bench: ref-vs-pallas ``build_h`` (the unified 3DG subsystem,
+core/graph_device.py) at datacenter client counts.
+
+On CPU the pallas backend runs in interpret mode — correctness-grade timing
+only (the BlockSpec tiling targets TPU); the ref column is the compiled jnp
+pipeline and is the CPU-meaningful number.  Each row records wall-clock per
+backend per N plus the cross-backend max abs error, and the whole run is
+dumped to ``benchmarks/results/BENCH_graph_pipeline.json`` so the perf
+trajectory of the graph path accumulates across PRs.
+
+  PYTHONPATH=src python -m benchmarks.graph_pipeline_bench [--full]
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph_device import GraphConfig, build_h
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results"
+BENCH_PATH = RESULTS / "BENCH_graph_pipeline.json"
+
+NS_QUICK = (128, 512, 1024)
+NS_FULL = (128, 512, 1024, 4096)     # 4096: O(N³) FW — minutes on CPU
+
+
+def _time(fn, reps: int = 1):
+    out = jax.block_until_ready(fn())        # compile + warm
+    t0 = time.time()
+    for _ in range(reps):
+        out = jax.block_until_ready(fn())
+    return (time.time() - t0) / reps, out
+
+
+def run(quick: bool = True) -> list[dict]:
+    rng = np.random.default_rng(0)
+    cfg = GraphConfig()
+    rows = []
+    for n in NS_QUICK if quick else NS_FULL:
+        d = 64
+        feats = jnp.asarray(rng.random((n, d)) + 0.1, jnp.float32)
+        fns = {b: jax.jit(lambda u, b=b: build_h(u, cfg, backend=b))
+               for b in ("ref", "pallas")}
+        outs = {}
+        row = {"table": "graph_pipeline", "n": n, "d": d}
+        for backend, fn in fns.items():
+            s, outs[backend] = _time(lambda fn=fn: fn(feats))
+            row[f"{backend}_ms"] = round(s * 1e3, 2)
+        row["max_err"] = float(np.max(np.abs(
+            np.asarray(outs["ref"]) - np.asarray(outs["pallas"]))))
+        rows.append(row)
+        print(f"[graph_pipeline] N={n}: ref {row['ref_ms']}ms  "
+              f"pallas {row['pallas_ms']}ms  err {row['max_err']:.2e}",
+              flush=True)
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    record = {"bench": "graph_pipeline",
+              "backend": jax.default_backend(),
+              "pallas_interpret": jax.default_backend() == "cpu",
+              "rows": rows}
+    BENCH_PATH.write_text(json.dumps(record, indent=1))
+    return rows
+
+
+def summarize(rows) -> list[str]:
+    out = ["", "== build_h ref vs pallas (wall-clock per backend per N) =="]
+    out.append(f"{'N':>6s} {'ref ms':>10s} {'pallas ms':>10s} {'max err':>10s}")
+    for r in rows:
+        out.append(f"{r['n']:6d} {r['ref_ms']:10.2f} {r['pallas_ms']:10.2f} "
+                   f"{r['max_err']:10.2e}")
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="include N=4096 (minutes of CPU Floyd–Warshall)")
+    args = ap.parse_args()
+    for line in summarize(run(quick=not args.full)):
+        print(line)

@@ -17,7 +17,7 @@ import time
 RESULTS = pathlib.Path(__file__).resolve().parent / "results"
 
 SECTIONS = ["table2", "fig4", "table3", "table4", "dynamic", "scaling",
-            "engine", "kernels", "roofline", "variants"]
+            "engine", "kernels", "graph", "roofline", "variants"]
 
 
 def _section(name: str, quick: bool):
@@ -37,6 +37,8 @@ def _section(name: str, quick: bool):
         from benchmarks import engine_bench as m
     elif name == "kernels":
         from benchmarks import kernel_bench as m
+    elif name == "graph":
+        from benchmarks import graph_pipeline_bench as m
     elif name == "roofline":
         from benchmarks import roofline as m
     elif name == "variants":

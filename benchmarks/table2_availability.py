@@ -4,23 +4,20 @@ FashionMNIST as class-Gaussian surrogates with the paper's partitioners).
 
 Since the scan engine landed, each (dataset, method) sweep ROW — all
 availability modes x all seeds — executes as ONE jit-compiled
-scan-over-rounds / vmap-over-cells program (``common.run_row_batched``);
-only Power-of-Choice (which probes per-client losses on the host) still goes
-through the per-cell ``FLEngine`` path.  Pass ``batched=False`` to force the
-legacy host loop everywhere.
+scan-over-rounds / vmap-over-cells program (``common.run_row_batched``),
+including Power-of-Choice, whose per-client loss probe now runs in-scan.
+Pass ``batched=False`` to force the legacy host loop everywhere.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import (
-    METHODS, MODES, run_row_batched, run_setting, scan_method,
-)
+from benchmarks.common import METHODS, MODES, run_row_batched, run_setting
 
 
 def _row_cells(ds_name, modes, method, seeds, quick, batched):
     """All (mode, seed) cell records of one sweep row."""
-    if batched and scan_method(method) is not None:
+    if batched:
         return run_row_batched(ds_name, modes, method, seeds, quick=quick)
     return [run_setting(ds_name, mode_name, beta, method,
                         quick=quick, seed=seed)

@@ -3,9 +3,12 @@
 # seven availability modes + fairness metrics + SSPP graph construction).
 from repro.core.availability import make_mode, ALL_MODES, AvailabilityMode
 from repro.core.graph import (
-    build_3dg, similarity_to_adjacency, shortest_paths, floyd_warshall_np,
+    build_3dg, similarity_to_adjacency, shortest_paths,
     oracle_similarity, update_cosine_similarity, functional_similarity,
     finite_cap, edge_f1, normalize_01,
+)
+from repro.core.graph_device import (
+    GraphConfig, build_h, cap_and_normalize, to_adjacency, minmax01, apsp,
 )
 from repro.core.sampler import (
     Sampler, UniformSampler, MDSampler, PowerOfChoiceSampler, FedGSSampler,

@@ -1,12 +1,11 @@
-"""3DG — Data-Distribution-Dependency Graph construction (paper §3.2).
+"""3DG — numpy-facing wrappers over the device-native pipeline.
 
-Pipeline: client feature vectors U -> similarity matrix V (normalized to
-[0,1]) -> adjacency R via
-    R_ij = 0                 if i == j
-    R_ij = exp(-V_ij/sigma²) if V_ij >= eps     (similar => short edge)
-    R_ij = inf               if V_ij <  eps     (no edge)
--> all-pairs shortest-path matrix H (Floyd–Warshall; the Pallas blocked
-kernel in ``repro.kernels`` accelerates this at datacenter client counts).
+The actual graph math (similarity -> adjacency -> Floyd–Warshall -> finite
+cap / normalize) lives in ONE place: ``repro.core.graph_device`` (stages,
+backend dispatch) backed by ``repro.kernels`` (Pallas) and
+``repro.kernels.ref`` (jnp oracle).  This module keeps the host-side
+conveniences: the similarity *sources* and numpy-in / numpy-out wrappers
+for the host engine, the benchmarks, and the graph-quality metrics.
 
 Similarity sources:
   * ``oracle_similarity``      — true label-distribution / feature dot products
@@ -23,30 +22,26 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core import graph_device as gd
+
 
 # ------------------------------------------------------------- similarities
 def normalize_01(v: np.ndarray) -> np.ndarray:
     """Paper Appendix C: min-max normalize similarities to [0, 1]."""
-    lo, hi = v.min(), v.max()
-    if hi - lo < 1e-12:
-        return np.zeros_like(v)
-    return (v - lo) / (hi - lo)
+    return np.asarray(gd.minmax01(jnp.asarray(v, jnp.float32)))
 
 
 def oracle_similarity(features: np.ndarray, *, kind: str = "dot") -> np.ndarray:
-    """features (N, d): label-distribution vectors (or flat local-optimum params)."""
-    u = np.asarray(features, np.float64)
-    if kind == "cosine":
-        u = u / np.maximum(np.linalg.norm(u, axis=1, keepdims=True), 1e-12)
-    v = u @ u.T
-    return normalize_01(v)
+    """features (N, d): label-distribution vectors (or flat local-optimum
+    params) -> normalized similarity."""
+    u = jnp.asarray(features, jnp.float32)
+    v = gd.dot_sim(u) if kind == "dot" else gd.cosine_sim(u, clamp=False)
+    return np.asarray(gd.minmax01(v))
 
 
 def update_cosine_similarity(updates: np.ndarray) -> np.ndarray:
     """Eq. 11: V_ij = max(cos(Δθ_i, Δθ_j), 0).  updates (N, P) flattened."""
-    u = np.asarray(updates, np.float64)
-    u = u / np.maximum(np.linalg.norm(u, axis=1, keepdims=True), 1e-12)
-    return np.maximum(u @ u.T, 0.0)
+    return np.asarray(gd.cosine_sim(jnp.asarray(updates, jnp.float32)))
 
 
 def functional_similarity(embeddings: np.ndarray) -> np.ndarray:
@@ -68,48 +63,31 @@ def probe_embeddings(apply_fn, client_params, probe: np.ndarray) -> np.ndarray:
 # --------------------------------------------------------------- adjacency
 def similarity_to_adjacency(v: np.ndarray, *, eps: float = 0.1,
                             sigma2: float = 0.01) -> np.ndarray:
-    """V -> R per the paper (inf = no edge).  Diagonal is 0."""
-    v = np.asarray(v, np.float64)
-    r = np.where(v >= eps, np.exp(-v / sigma2), np.inf)
-    np.fill_diagonal(r, 0.0)
-    return r
+    """Normalized V -> R per the paper (inf = no edge).  Diagonal is 0."""
+    return np.asarray(gd.to_adjacency(jnp.asarray(v, jnp.float32),
+                                      eps=eps, sigma2=sigma2))
 
 
-def floyd_warshall_np(r: np.ndarray) -> np.ndarray:
-    """Reference APSP (vectorized over k).  inf-safe."""
-    h = np.array(r, np.float64, copy=True)
-    n = h.shape[0]
-    for k in range(n):
-        np.minimum(h, h[:, k:k + 1] + h[k:k + 1, :], out=h)
-    return h
-
-
-def shortest_paths(r: np.ndarray, *, use_kernel: bool = False) -> np.ndarray:
-    """APSP dispatch: numpy reference or the Pallas blocked kernel."""
-    if use_kernel:
-        from repro.kernels.ops import floyd_warshall
-        return np.asarray(floyd_warshall(jnp.asarray(r, jnp.float32)))
-    return floyd_warshall_np(r)
+def shortest_paths(r: np.ndarray, *, backend: str = "ref") -> np.ndarray:
+    """APSP: the jnp reference closure or the Pallas blocked kernel."""
+    return np.asarray(gd.apsp(jnp.asarray(r, jnp.float32), backend=backend))
 
 
 def finite_cap(h: np.ndarray, scale: float = 2.0) -> np.ndarray:
     """Replace inf distances (disconnected pairs) with scale x max finite
     distance so the QUBO objective stays finite while still strongly
     preferring disconnected (= maximally dissimilar) pairs."""
-    finite = h[np.isfinite(h)]
-    cap = (finite.max() if finite.size else 1.0) * scale
-    out = np.where(np.isfinite(h), h, cap)
-    np.fill_diagonal(out, 0.0)
-    return out
+    return np.asarray(gd.cap_and_normalize(jnp.asarray(h, jnp.float32),
+                                           scale=scale, normalize=False))
 
 
 def build_3dg(features: np.ndarray, *, eps: float = 0.1, sigma2: float = 0.01,
-              sim_kind: str = "dot", use_kernel: bool = False):
+              sim_kind: str = "dot", backend: str = "ref"):
     """features -> (V, R, H).  The one-call oracle-3DG constructor."""
-    v = oracle_similarity(features, kind=sim_kind)
-    r = similarity_to_adjacency(v, eps=eps, sigma2=sigma2)
-    h = shortest_paths(r, use_kernel=use_kernel)
-    return v, r, h
+    cfg = gd.GraphConfig(eps=eps, sigma2=sigma2, similarity=sim_kind)
+    v, r, h = gd.build_3dg(jnp.asarray(features, jnp.float32), cfg,
+                           backend=backend)
+    return np.asarray(v), np.asarray(r), np.asarray(h)
 
 
 # --------------------------------------------------- graph-quality metrics

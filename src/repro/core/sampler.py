@@ -219,12 +219,8 @@ class FedGSSampler(Sampler):
         alpha in the paper's sweep.  Normalizing makes alpha trade the two
         objectives on comparable scales (DESIGN.md assumption log).
         """
-        from repro.core.graph import finite_cap
-        h = np.asarray(finite_cap(h), np.float64)
-        hmax = h.max()
-        if hmax > 0:
-            h = h / hmax
-        self._h = h.astype(np.float32)
+        from repro.core.graph_device import cap_and_normalize
+        self._h = np.asarray(cap_and_normalize(jnp.asarray(h, jnp.float32)))
 
     def sample(self, *, avail, m, rng, counts=None, **_):
         assert self._h is not None, "call set_graph(H) first"

@@ -78,7 +78,7 @@ class FLEngine:
     # ------------------------------------------------------------- 3DG setup
     def install_oracle_graph(self, features: Optional[np.ndarray] = None,
                              eps: float = 0.1, sigma2: float = 0.01,
-                             use_kernel: bool = False):
+                             backend: str = "ref"):
         """Build the oracle 3DG (label-distribution features by default,
         Appendix C) and hand H to a FedGS sampler."""
         if not isinstance(self.sampler, FedGSSampler):
@@ -86,7 +86,7 @@ class FLEngine:
         if features is None:
             features = self.ds.label_dist
         _, r, h = graph_mod.build_3dg(np.asarray(features), eps=eps,
-                                      sigma2=sigma2, use_kernel=use_kernel)
+                                      sigma2=sigma2, backend=backend)
         self.sampler.set_graph(h)
         return r
 
@@ -125,11 +125,11 @@ class FLEngine:
         self._rebuild_dynamic_graph()
 
     def _rebuild_dynamic_graph(self):
-        v = graph_mod.functional_similarity(self._emb)
-        r = graph_mod.similarity_to_adjacency(
-            graph_mod.normalize_01(v), eps=self._graph_eps,
-            sigma2=self._graph_sigma2)
-        self.sampler.set_graph(graph_mod.shortest_paths(r))
+        from repro.core.graph_device import GraphConfig, build_3dg
+        cfg = GraphConfig(eps=self._graph_eps, sigma2=self._graph_sigma2,
+                          similarity="functional")
+        _, _, h = build_3dg(jnp.asarray(self._emb, jnp.float32), cfg)
+        self.sampler.set_graph(np.asarray(h))
 
     def _update_dynamic_embeddings(self, sel, local_stacked):
         emb = np.asarray(graph_mod.probe_embeddings(

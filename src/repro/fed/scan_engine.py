@@ -32,16 +32,20 @@ Seed streams (parity with FLEngine)
   path) or is drawn on-device from the mode's dense ``(period, N)``
   probability table (``AvailabilityMode.probs_table``) with a dedicated jax
   key stream.  Baseline samplers run on-device via Gumbel top-k
-  (``core.sampler.uniform_select`` / ``md_select``); FedGS reuses the same
+  (``core.sampler.uniform_select`` / ``md_select``); Power-of-Choice draws
+  its d·m candidate set the same way, probes the global model's loss on each
+  candidate's local data in-scan, and keeps the top-m; FedGS reuses the same
   deterministic ``fedgs_solve`` as the host path, so FedGS cells match the
   host engine's sampled sets exactly.
 
 Dynamic 3DG
-  With ``graph_refresh_every > 0`` the 3DG is maintained *inside* the scan
-  (the ``graph_pipeline`` formulation from launch/fedsim.py): participants'
-  post-training probe embeddings update a carried (N, C) embedding table and
-  every K rounds cosine-similarity -> adjacency -> Floyd–Warshall -> finite
-  cap rebuild the carried H under ``lax.cond``.
+  With ``graph_refresh_every > 0`` the 3DG is maintained *inside* the scan:
+  participants' post-training probe embeddings update a carried (N, C)
+  embedding table and every K rounds ``core.graph_device.build_h`` (the one
+  shared functional-similarity -> adjacency -> Floyd–Warshall -> finite-cap
+  pipeline) rebuilds the carried H under ``lax.cond``.
+  ``ScanConfig.graph_backend="pallas"`` routes the rebuild's similarity
+  matmul and APSP through the tiled kernels for large-N sweeps.
 
 Typical use::
 
@@ -60,14 +64,18 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.availability import AvailabilityMode
-from repro.core.sampler import fedgs_select, md_select, uniform_select
+from repro.core.graph_device import (
+    BACKENDS, GraphConfig, build_h, cap_and_normalize,
+)
+from repro.core.sampler import (
+    fedgs_select, gumbel_topk_select, md_select, uniform_select,
+)
 from repro.data.fed_dataset import FedDataset
 from repro.fed.client import make_local_trainer
 from repro.fed.models import FedModel
 from repro.fed.server import aggregate
-from repro.kernels.ref import floyd_warshall_ref
 
-SAMPLERS = ("fedgs", "uniform", "md")
+SAMPLERS = ("fedgs", "uniform", "md", "poc")
 
 
 @dataclass(frozen=True)
@@ -81,21 +89,27 @@ class ScanConfig:
     lr_decay: float = 0.998
     prox_mu: float = 0.0
     eval_every: int = 1            # in-scan eval cadence (NaN on off rounds)
-    sampler: str = "fedgs"         # fedgs | uniform | md (PoC: host engine only)
+    sampler: str = "fedgs"         # fedgs | uniform | md | poc
     max_sweeps: int = 32           # FedGS local-search budget
+    # Power-of-Choice: d·m candidates by data size, in-scan loss probe
+    poc_d_factor: int = 2
+    poc_probe: int = 64            # loss-probe batch per candidate
     # dynamic 3DG: rebuild H in-scan from participants' probe embeddings
     # every K rounds (0 = static graph installed via the cell's ``h``)
     graph_refresh_every: int = 0
     graph_eps: float = 0.1
     graph_sigma2: float = 0.01
+    graph_backend: str = "ref"     # ref | pallas (dynamic-3DG rebuild path)
     probe_size: int = 64
     probe_seed: int = 777
 
     def __post_init__(self):
         if self.sampler not in SAMPLERS:
-            raise ValueError(
-                f"scan engine supports {SAMPLERS}, not {self.sampler!r} "
-                "(Power-of-Choice needs a host loss probe; use FLEngine)")
+            raise ValueError(f"scan engine supports {SAMPLERS}, "
+                             f"not {self.sampler!r}")
+        if self.graph_backend not in BACKENDS:
+            raise ValueError(f"graph_backend must be one of {BACKENDS}, "
+                             f"not {self.graph_backend!r}")
 
 
 # --------------------------------------------------------------- host helpers
@@ -111,23 +125,19 @@ def precompute_masks(mode: AvailabilityMode, rounds: int,
 
 
 def normalized_h(h: np.ndarray) -> np.ndarray:
-    """Finite-cap + [0, 1]-normalize a shortest-path matrix, exactly as
-    FedGSSampler.set_graph does (DESIGN.md assumption log)."""
-    from repro.core.graph import finite_cap
-    h = np.asarray(finite_cap(h), np.float64)
-    hmax = h.max()
-    if hmax > 0:
-        h = h / hmax
-    return h.astype(np.float32)
+    """Finite-cap + [0, 1]-normalize a shortest-path matrix — the SAME
+    ``graph_device.cap_and_normalize`` stage FedGSSampler.set_graph runs
+    (DESIGN.md assumption log)."""
+    return np.asarray(cap_and_normalize(jnp.asarray(h, jnp.float32)))
 
 
-def oracle_h(features: np.ndarray, *, eps: float = 0.1,
-             sigma2: float = 0.01) -> np.ndarray:
+def oracle_h(features: np.ndarray, *, eps: float = 0.1, sigma2: float = 0.01,
+             backend: str = "ref") -> np.ndarray:
     """Oracle 3DG -> normalized H (the scan-engine analogue of
     FLEngine.install_oracle_graph)."""
-    from repro.core.graph import build_3dg
-    _, _, h = build_3dg(np.asarray(features), eps=eps, sigma2=sigma2)
-    return normalized_h(h)
+    cfg = GraphConfig(eps=eps, sigma2=sigma2, similarity="dot")
+    return np.asarray(build_h(jnp.asarray(features, jnp.float32), cfg,
+                              backend=backend))
 
 
 def stack_cells(cells: list[dict]) -> dict:
@@ -204,31 +214,51 @@ def _build_simulate(ds: FedDataset, model: FedModel, cfg: ScanConfig,
         probe = jnp.asarray(
             probe.reshape(cfg.probe_size, *ds.x_val.shape[1:]), jnp.float32)
 
-    eye = jnp.eye(n, dtype=bool)
+    # the shared device-native 3DG pipeline (core/graph_device.py) — the same
+    # stages engine._rebuild_dynamic_graph / fedsim.graph_pipeline compose
+    gcfg = GraphConfig(eps=cfg.graph_eps, sigma2=cfg.graph_sigma2,
+                       similarity="functional")
 
     def rebuild_h(emb):
-        """cos-sim -> [0,1] -> adjacency -> Floyd–Warshall -> finite cap, the
-        in-jit version of engine._rebuild_dynamic_graph / fedsim.graph_pipeline."""
-        u = emb / jnp.maximum(jnp.linalg.norm(emb, axis=1, keepdims=True), 1e-12)
-        v = jnp.maximum(u @ u.T, 0.0)
-        vn = (v - v.min()) / jnp.maximum(v.max() - v.min(), 1e-12)
-        r = jnp.where(eye, 0.0,
-                      jnp.where(vn >= cfg.graph_eps,
-                                jnp.exp(-vn / cfg.graph_sigma2), jnp.inf))
-        hfw = floyd_warshall_ref(r.astype(jnp.float32))
-        finite = jnp.isfinite(hfw)
-        cap = 2.0 * jnp.maximum(jnp.max(jnp.where(finite, hfw, -jnp.inf)), 1e-12)
-        h = jnp.where(eye, 0.0, jnp.where(finite, hfw, cap))
-        return h / jnp.maximum(h.max(), 1e-12)
+        return build_h(emb, gcfg, backend=cfg.graph_backend)
 
     def embed_mean(stacked):
         return jax.vmap(lambda p: jnp.mean(model.embed(p, probe), 0))(stacked)
 
-    def select(s):
-        """Mask (N,) bool -> (sorted selected indices (M,), valid (M,))."""
+    def select_k(s, k):
+        """Mask (N,) bool -> (sorted selected indices (k,), valid (k,))."""
         order = jnp.argsort(jnp.where(s, jnp.arange(n), n + jnp.arange(n)))
-        sel = order[:m]
+        sel = order[:k]
         return sel, s[sel]
+
+    def select(s):
+        return select_k(s, m)
+
+    if cfg.sampler == "poc":
+        d_cand = int(min(n, max(m, cfg.poc_d_factor * m)))
+        log_sizes = jnp.log(jnp.maximum(sizes_f, 1e-12))
+
+        def probe_losses(params, idx, keys):
+            """Global-model loss on a probe batch of each candidate's local
+            data — the in-scan analogue of fed.client.make_loss_prober."""
+            def one(x, y, n_k, key):
+                b = jax.random.randint(key, (cfg.poc_probe,), 0,
+                                       jnp.maximum(n_k, 1))
+                return model.loss(params, x[b], y[b])
+            return jax.vmap(one)(xs[idx], ys[idx], sizes_i[idx], keys)
+
+        def poc_select(params, skey, avail):
+            """Cho et al. 2020 on-device: d·m candidates by data size
+            (Gumbel top-k), then keep the top-m highest-loss candidates."""
+            cand = gumbel_topk_select(skey, log_sizes, avail, d_cand)
+            cidx, cvalid = select_k(cand, d_cand)
+            losses = probe_losses(
+                params, cidx,
+                jax.random.split(jax.random.fold_in(skey, 1), d_cand))
+            _, kk = jax.lax.top_k(jnp.where(cvalid, losses, -jnp.inf), m)
+            # cidx entries are distinct, so invalid slots never overwrite a
+            # kept candidate
+            return jnp.zeros((n,), bool).at[cidx[kk]].set(cvalid[kk])
 
     def simulate(cell):
         key0 = cell["key"]
@@ -271,9 +301,12 @@ def _build_simulate(ds: FedDataset, model: FedModel, cfg: ScanConfig,
             elif cfg.sampler == "uniform":
                 skey = jax.random.fold_in(cell["sampler_key"], t)
                 s = uniform_select(skey, avail, m)
-            else:
+            elif cfg.sampler == "md":
                 skey = jax.random.fold_in(cell["sampler_key"], t)
                 s = md_select(skey, sizes_f, avail, m)
+            else:
+                skey = jax.random.fold_in(cell["sampler_key"], t)
+                s = poc_select(params, skey, avail)
             sel, valid = select(s)
 
             # 3. vmap'd local training on the M gathered clients
@@ -360,7 +393,7 @@ class ScanEngine:
             c["table"] = jnp.asarray(table, jnp.float32)
             c["period"] = jnp.int32(table.shape[0])
             c["avail_key"] = jax.random.PRNGKey(avail_seed)
-        if self.cfg.sampler in ("uniform", "md"):
+        if self.cfg.sampler in ("uniform", "md", "poc"):
             c["sampler_key"] = jax.random.PRNGKey(
                 seed + 0x5E1EC7 if sampler_seed is None else sampler_seed)
         if self.cfg.graph_refresh_every > 0:

@@ -2,8 +2,9 @@
 
 On CPU (this container) the kernels execute in ``interpret=True`` mode — the
 kernel body runs in Python, which validates correctness; on TPU they compile
-natively.  Wrappers handle padding to tile multiples and unpadding, so the
-callers (core/graph.py, models/attention.py) see clean shapes.
+natively.  Wrappers handle padding to tile multiples and unpadding in-trace,
+so the callers (core/graph_device.py's ``backend="pallas"`` dispatch,
+models/attention.py) see clean shapes.
 """
 from __future__ import annotations
 
@@ -73,15 +74,15 @@ def similarity_to_adjacency(v: jax.Array, *, eps: float, sigma2: float,
                             interpret: bool | None = None) -> jax.Array:
     """Fused min-max-normalize -> threshold -> exp(-V/σ²) epilogue.
 
-    Pad tiles are flagged with +inf similarity sentinels excluded from lo/hi;
-    pad rows/cols are sliced off before returning.
+    lo/hi are reduced from the raw UNPADDED v before padding, so zero-filled
+    pad tiles never skew the normalization; pad rows/cols are sliced off
+    before returning.
     """
     if interpret is None:
         interpret = _on_cpu()
     n = v.shape[0]
     lo = jnp.min(v)
     hi = jnp.max(v)
-    m = ((n + TILE_N - 1) // TILE_N) * TILE_N
     vp = _pad_to(v.astype(jnp.float32), TILE_N, (0, 1))
     scal = jnp.stack([lo, hi, jnp.float32(eps), jnp.float32(sigma2)]).reshape(1, 4)
     r = adjacency_pallas(vp, scal, interpret=interpret)

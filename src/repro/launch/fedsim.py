@@ -65,22 +65,20 @@ def round_step_factory(local_steps: int, batch: int):
     return round_step
 
 
-def graph_pipeline(feats, counts, avail, alpha, m_sel, max_sweeps: int = 32):
-    """Server-side FedGS pipeline as ONE jit program: V -> R -> H -> solve."""
-    from repro.core.sampler import fedgs_solve
-    from repro.kernels.ref import floyd_warshall_ref
-    n = feats.shape[0]
-    v = feats @ feats.T
-    vn = (v - v.min()) / jnp.maximum(v.max() - v.min(), 1e-12)
-    r = jnp.where(vn >= 0.1, jnp.exp(-vn / 0.01), jnp.inf)
-    r = r * (1 - jnp.eye(n)) + jnp.where(jnp.eye(n, dtype=bool), 0.0, 0.0)
-    h = floyd_warshall_ref(r)
-    hmax = jnp.nanmax(jnp.where(jnp.isfinite(h), h, -jnp.inf))
-    h = jnp.where(jnp.isfinite(h), h, 2 * hmax) / jnp.maximum(2 * hmax, 1e-12)
-    z = 2.0 * (counts - counts.mean() - m_sel / n) + 1.0
-    q = (alpha / n) * h - jnp.diag(z)
-    return fedgs_solve(q.astype(jnp.float32), avail,
-                       m=m_sel, max_sweeps=max_sweeps)
+def graph_pipeline(feats, counts, avail, alpha, m_sel, max_sweeps: int = 32,
+                   *, eps: float = 0.1, sigma2: float = 0.01,
+                   backend: str = "ref"):
+    """Server-side FedGS pipeline as ONE jit program: V -> R -> H -> solve.
+
+    Pure composition of the shared device-native 3DG stages
+    (``core.graph_device``) with the shared Q-construction + solver
+    (``core.sampler.fedgs_select``) — NaN-safe by construction.
+    """
+    from repro.core.graph_device import GraphConfig, build_h
+    from repro.core.sampler import fedgs_select
+    h = build_h(feats, GraphConfig(eps=eps, sigma2=sigma2), backend=backend)
+    return fedgs_select(h, counts, avail, jnp.float32(alpha),
+                        m=m_sel, max_sweeps=max_sweeps)
 
 
 def run(n_clients: int, *, multi_pod: bool, sample_frac: float = 0.1,

@@ -36,20 +36,21 @@ def test_floyd_warshall_matches_bruteforce(rng):
     r[rng.random((n, n)) < 0.5] = np.inf
     r = np.minimum(r, r.T)
     np.fill_diagonal(r, 0.0)
-    h = G.floyd_warshall_np(r)
+    h = G.shortest_paths(r)
     # brute force: O(n) rounds of min-plus until fixpoint
     want = r.copy()
     for _ in range(n):
         want = np.minimum(want, np.min(want[:, :, None] + want[None, :, :], axis=1))
-    assert np.allclose(h, want, equal_nan=True)
+    assert np.allclose(h, want, equal_nan=True, atol=1e-5)
 
 
 def test_shortest_paths_triangle_inequality(rng):
     r = rng.random((16, 16)) * 3
     np.fill_diagonal(r, 0)
-    h = G.floyd_warshall_np(r)
+    h = G.shortest_paths(r)
     for k in range(16):
-        assert np.all(h <= h[:, k:k + 1] + h[k:k + 1, :] + 1e-9)
+        # 1e-5 slack: the shared pipeline runs in float32 (DESIGN.md §9)
+        assert np.all(h <= h[:, k:k + 1] + h[k:k + 1, :] + 1e-5)
 
 
 def test_finite_cap():
@@ -93,4 +94,4 @@ def test_build_3dg_shapes(rng):
     assert v.shape == r.shape == h.shape == (9, 9)
     assert np.all(np.diag(h) == 0)
     # H is the min-plus closure: re-running FW changes nothing
-    assert np.allclose(G.floyd_warshall_np(h), h, equal_nan=True)
+    assert np.allclose(G.shortest_paths(h), h, equal_nan=True)

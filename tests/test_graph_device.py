@@ -1,0 +1,175 @@
+"""The unified device-native 3DG pipeline (core/graph_device.py):
+
+* backend parity — ``build_h(backend="pallas")`` ≡ ``build_h(backend="ref")``
+  ≡ the legacy float64 numpy pipeline (pinned verbatim below) at
+  non-tile-multiple N, including disconnected graphs and the all-equal
+  degenerate V;
+* the ``inf·0 -> NaN`` diagonal-hazard regression (ISSUE 2 satellite): the
+  shared ``to_adjacency`` must stay NaN-free when a row's normalized
+  self-similarity falls below eps;
+* traceability — the pipeline composes under jit, and the production
+  ``fedsim.graph_pipeline`` built on it returns a valid selection.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import graph_device as gd
+
+
+def _legacy_h(feats, eps=0.1, sigma2=0.01, scale=2.0):
+    """The pre-refactor core/graph.py float64 pipeline (dot similarity ->
+    minmax -> adjacency -> FW -> finite cap -> [0,1]), kept here verbatim as
+    the numerics oracle the unified f32 pipeline must match to 1e-5."""
+    u = np.asarray(feats, np.float64)
+    v = u @ u.T
+    lo, hi = v.min(), v.max()
+    vn = np.zeros_like(v) if hi - lo < 1e-12 else (v - lo) / (hi - lo)
+    r = np.where(vn >= eps, np.exp(-vn / sigma2), np.inf)
+    np.fill_diagonal(r, 0.0)
+    h = r.copy()
+    for k in range(len(h)):
+        np.minimum(h, h[:, k:k + 1] + h[k:k + 1, :], out=h)
+    finite = h[np.isfinite(h)]
+    cap = (finite.max() if finite.size else 1.0) * scale
+    h = np.where(np.isfinite(h), h, cap)
+    np.fill_diagonal(h, 0.0)
+    hmax = h.max()
+    return h / hmax if hmax > 0 else h
+
+
+def _clustered_feats(rng, n, d=6):
+    """Two orthogonal nonneg clusters -> disconnected cross-cluster pairs
+    (inf distances), exercising the finite-cap path."""
+    u = np.abs(rng.normal(size=(n, d))) + 0.3
+    u[: n // 2, d // 2:] = 0.0
+    u[n // 2:, : d // 2] = 0.0
+    return u
+
+
+# ---------------------------------------------------------- backend parity
+@pytest.mark.parametrize("n", [7, 100, 130])
+def test_backend_parity_dense(rng, n):
+    """pallas ≡ ref ≡ legacy numpy at non-tile-multiple N (1e-5)."""
+    feats = rng.random((n, 5)) + 0.1
+    want = _legacy_h(feats)
+    for backend in gd.BACKENDS:
+        got = np.asarray(gd.build_h(jnp.asarray(feats, jnp.float32),
+                                    backend=backend))
+        np.testing.assert_allclose(got, want, atol=1e-5,
+                                   err_msg=f"backend={backend}")
+
+
+@pytest.mark.parametrize("n", [7, 100, 130])
+def test_backend_parity_disconnected(rng, n):
+    """Disconnected graphs (inf distances): cap path agrees across backends
+    and with the legacy oracle; edge patterns match exactly."""
+    feats = _clustered_feats(rng, n)
+    want = _legacy_h(feats)
+    _, r_ref, h_ref = gd.build_3dg(jnp.asarray(feats, jnp.float32))
+    assert np.isinf(np.asarray(h_ref)).any(), "fixture must disconnect"
+    for backend in gd.BACKENDS:
+        _, r, _ = gd.build_3dg(jnp.asarray(feats, jnp.float32),
+                               backend=backend)
+        np.testing.assert_array_equal(np.isinf(np.asarray(r)),
+                                      np.isinf(np.asarray(r_ref)))
+        got = np.asarray(gd.build_h(jnp.asarray(feats, jnp.float32),
+                                    backend=backend))
+        assert np.isfinite(got).all()
+        np.testing.assert_allclose(got, want, atol=1e-5,
+                                   err_msg=f"backend={backend}")
+
+
+@pytest.mark.parametrize("n", [7, 130])
+def test_backend_parity_degenerate_v(n):
+    """All-equal similarity V: minmax collapses to 0, no edges survive, and
+    every backend returns the all-zero H (the legacy zeros contract)."""
+    v = jnp.full((n, n), 3.0, jnp.float32)
+    cfg = gd.GraphConfig(similarity="precomputed")
+    for backend in gd.BACKENDS:
+        h = np.asarray(gd.build_h(v, cfg, backend=backend))
+        assert not np.isnan(h).any()
+        np.testing.assert_array_equal(h, np.zeros((n, n), np.float32))
+
+
+def test_legacy_numpy_wrapper_matches_device(rng):
+    """core.graph.build_3dg is the same pipeline behind a numpy face."""
+    from repro.core.graph import build_3dg
+    feats = rng.random((23, 4))
+    v_np, r_np, h_np = build_3dg(feats)
+    v_d, r_d, h_d = gd.build_3dg(jnp.asarray(feats, jnp.float32))
+    np.testing.assert_array_equal(v_np, np.asarray(v_d))
+    np.testing.assert_array_equal(r_np, np.asarray(r_d))
+    np.testing.assert_array_equal(h_np, np.asarray(h_d))
+
+
+# ------------------------------------------------------ NaN-hazard regression
+def test_to_adjacency_diag_below_eps_no_nan():
+    """Regression for the ``r * (1 - eye)`` pattern: when a row's normalized
+    self-similarity falls below eps the no-edge entry is inf, and inf·0 on
+    the diagonal is NaN — the shared stage must mask with where(eye, 0, ·)."""
+    vn = np.array([[0.02, 0.9, 0.0],
+                   [0.9, 1.0, 0.0],
+                   [0.0, 0.0, 0.03]])          # rows 0/2: self-sim < eps
+    # the hazard pattern really does NaN on this input
+    with np.errstate(invalid="ignore"):
+        hazard = np.where(vn >= 0.1, np.exp(-vn / 0.01), np.inf) * (1 - np.eye(3))
+    assert np.isnan(np.diag(hazard)).any()
+    r = np.asarray(gd.to_adjacency(jnp.asarray(vn, jnp.float32)))
+    assert not np.isnan(r).any()
+    np.testing.assert_array_equal(np.diag(r), np.zeros(3))
+    assert np.isinf(r[0, 2]) and np.isfinite(r[0, 1])
+
+
+def test_build_h_low_self_similarity_features_no_nan(rng):
+    """End to end: nonneg features with a near-zero row push that row's
+    normalized self-similarity below eps; H must stay NaN-free on both
+    backends (previously fedsim.graph_pipeline produced NaN here)."""
+    feats = np.abs(rng.normal(size=(12, 4))) + 0.5
+    feats[3] = 1e-3
+    for backend in gd.BACKENDS:
+        vn, r, h_raw = gd.build_3dg(jnp.asarray(feats, jnp.float32),
+                                    backend=backend)
+        assert float(vn[3, 3]) < 0.1, "fixture must trip the hazard"
+        h = gd.cap_and_normalize(h_raw)
+        for arr in (r, h_raw, h):
+            assert not np.isnan(np.asarray(arr)).any()
+
+
+# ------------------------------------------------------------- traceability
+def test_stages_compose_under_jit(rng):
+    feats = jnp.asarray(rng.random((9, 5)), jnp.float32)
+    cfg = gd.GraphConfig(eps=0.2, sigma2=0.05, finite_cap_scale=3.0)
+    eager = gd.build_h(feats, cfg)
+    jitted = jax.jit(lambda u: gd.build_h(u, cfg))(feats)
+    # XLA fusion may reorder the matmul/exp pipeline by an ulp
+    np.testing.assert_allclose(np.asarray(eager), np.asarray(jitted),
+                               atol=1e-6)
+
+
+def test_cap_and_normalize_matches_sampler_set_graph(rng):
+    """FedGSSampler.set_graph and scan_engine.normalized_h are the SAME
+    stage: one cap/normalize implementation serves both layers."""
+    from repro.core.sampler import FedGSSampler
+    from repro.fed.scan_engine import normalized_h
+    h = rng.random((15, 15)) * 4
+    h[h > 3.2] = np.inf
+    np.fill_diagonal(h, 0.0)
+    s = FedGSSampler(alpha=1.0)
+    s.set_graph(h)
+    np.testing.assert_array_equal(s._h, normalized_h(h))
+
+
+def test_fedsim_graph_pipeline_selects_m(rng):
+    """The production dry-run pipeline (shared stages + shared solver) jits
+    and returns a valid |S| = m selection with no NaN-poisoned scores."""
+    from repro.launch.fedsim import graph_pipeline
+    n, m = 16, 4
+    feats = jnp.asarray(np.abs(rng.normal(size=(n, 6))) + 0.2, jnp.float32)
+    counts = jnp.zeros((n,), jnp.float32)
+    avail = jnp.ones((n,), bool)
+    s = np.asarray(jax.jit(
+        lambda f, c, a: graph_pipeline(f, c, a, 1.0, m, 8))(feats, counts, avail))
+    assert s.sum() == m

@@ -54,7 +54,7 @@ def test_adjacency_epilogue(rng, eps, sigma2):
 def test_build_3dg_kernel_end_to_end(rng):
     from repro.core.graph import build_3dg
     feats = rng.random((40, 16)).astype(np.float32)
-    _, _, h_np = build_3dg(feats, eps=0.1, sigma2=0.01, use_kernel=False)
+    _, _, h_np = build_3dg(feats, eps=0.1, sigma2=0.01, backend="ref")
     v, r, h_k = ops.build_3dg_kernel(jnp.asarray(feats), eps=0.1, sigma2=0.01)
     mask = np.isfinite(h_np)
     np.testing.assert_allclose(np.asarray(h_k)[mask], h_np[mask], atol=1e-3,

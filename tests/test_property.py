@@ -47,14 +47,15 @@ def test_solver_invariants(q, m, seed):
 @given(sym_matrix(3, 10))
 def test_fw_fixpoint_and_triangle(r):
     """FW is idempotent and satisfies the triangle inequality."""
-    h = G.floyd_warshall_np(r)
-    h2 = G.floyd_warshall_np(h)
+    h = G.shortest_paths(r)
+    h2 = G.shortest_paths(h)
     assert np.allclose(h, h2, equal_nan=True)
     n = len(h)
+    # 1e-5 slack: the shared pipeline runs in float32 (DESIGN.md §9)
     for k in range(n):
-        assert np.all(h <= h[:, k:k + 1] + h[k:k + 1, :] + 1e-9)
+        assert np.all(h <= h[:, k:k + 1] + h[k:k + 1, :] + 1e-5)
     # distances never exceed direct edges
-    assert np.all(h <= r + 1e-9)
+    assert np.all(h <= r + 1e-5)
 
 
 @settings(max_examples=30, deadline=None)

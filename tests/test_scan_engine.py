@@ -135,6 +135,101 @@ def test_dynamic_3dg_refresh_in_scan(synthetic_ds):
     assert sh.val_loss[-1] < sh.val_loss[0]
 
 
+def test_poc_selection_invariants(synthetic_ds):
+    """In-scan Power-of-Choice: S_t subset of A_t, |S_t| = min(M, |A_t|),
+    counts track the selections (the host-loop fallback is gone)."""
+    ds = synthetic_ds
+    rounds, m = 12, 6
+    mode = _mode("LN", ds)
+    masks = precompute_masks(mode, rounds, avail_seed=5)
+    eng = ScanEngine(ds, logistic_regression(),
+                     _scan_cfg(rounds, m, sampler="poc"), use_masks=True)
+    sh = eng.run(eng.cell(seed=0, masks=masks))
+    for t in range(rounds):
+        sel = sh.sampled(t)
+        avail = np.flatnonzero(masks[t])
+        assert set(sel) <= set(avail)
+        assert len(sel) == min(m, len(avail))
+    assert sh.counts.sum() == sum(min(m, int(masks[t].sum()))
+                                  for t in range(rounds))
+    assert np.isfinite(sh.val_loss).all()
+
+
+def test_poc_learns(synthetic_ds):
+    """Sanity: the in-scan PoC trajectory decreases validation loss."""
+    ds = synthetic_ds
+    eng = ScanEngine(ds, logistic_regression(),
+                     _scan_cfg(16, 6, sampler="poc"))
+    sh = eng.run(eng.cell(seed=0, mode=_mode("IDL", ds)))
+    assert sh.val_loss[-1] < sh.val_loss[0]
+
+
+def test_poc_keeps_top_m_loss_candidates(synthetic_ds):
+    """Round-0 exact replication of the device PoC path: the kept set must
+    equal the top-m probed-loss subset of the Gumbel candidate draw (an
+    inverted top-k — keeping the LOWEST-loss candidates — would still learn,
+    so this pins the selection rule itself)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.sampler import gumbel_topk_select
+
+    ds = synthetic_ds
+    n, m = ds.n_clients, 6
+    cfg = _scan_cfg(1, m, sampler="poc")
+    eng = ScanEngine(ds, logistic_regression(), cfg, use_masks=True)
+    cell = eng.cell(seed=4, masks=np.ones((1, n), bool))
+    sh = eng.run(cell)
+
+    # replicate the in-scan draw + probe with the same key streams
+    model = logistic_regression()
+    params = model.init(cell["key"])
+    d = min(n, max(m, cfg.poc_d_factor * m))
+    skey = jax.random.fold_in(cell["sampler_key"], 0)
+    logw = jnp.log(jnp.maximum(jnp.asarray(ds.sizes, jnp.float32), 1e-12))
+    cand = np.asarray(gumbel_topk_select(skey, logw,
+                                         jnp.ones((n,), bool), d))
+    cidx = np.argsort(np.where(cand, np.arange(n), n + np.arange(n)))[:d]
+    keys = jax.random.split(jax.random.fold_in(skey, 1), d)
+    xs, ys = jnp.asarray(ds.x), jnp.asarray(ds.y)
+    losses = []
+    for i, k in zip(cidx, keys):
+        b = jax.random.randint(k, (cfg.poc_probe,), 0,
+                               max(int(ds.sizes[i]), 1))
+        losses.append(float(model.loss(params, xs[i][b], ys[i][b])))
+    want = np.sort(cidx[np.argsort(-np.asarray(losses), kind="stable")[:m]])
+    np.testing.assert_array_equal(sh.sampled(0), want)
+
+
+def test_poc_batches_in_run_batch(synthetic_ds):
+    """PoC cells vmap-batch like every other sampler (Table 2 acceptance)."""
+    ds = synthetic_ds
+    eng = ScanEngine(ds, logistic_regression(),
+                     _scan_cfg(8, 6, sampler="poc"))
+    cells = [eng.cell(seed=s, mode=_mode("LN", ds), avail_seed=50 + s)
+             for s in range(2)]
+    batch = eng.run_batch(cells)
+    for cell, b in zip(cells, batch):
+        single = eng.run(cell)
+        np.testing.assert_array_equal(b.sel, single.sel)
+        np.testing.assert_allclose(b.val_loss, single.val_loss, atol=2e-6)
+
+
+def test_dynamic_3dg_pallas_backend(synthetic_ds):
+    """ScanConfig.graph_backend="pallas" routes the in-scan rebuild through
+    the tiled kernels (interpret mode on CPU) and matches the ref backend."""
+    ds = synthetic_ds
+    hists = {}
+    for backend in ("ref", "pallas"):
+        eng = ScanEngine(ds, logistic_regression(),
+                         _scan_cfg(6, 6, sampler="fedgs",
+                                   graph_refresh_every=3,
+                                   graph_backend=backend))
+        hists[backend] = eng.run(eng.cell(seed=0, mode=_mode("LN", ds)))
+    np.testing.assert_array_equal(hists["ref"].sel, hists["pallas"].sel)
+    np.testing.assert_allclose(hists["ref"].val_loss,
+                               hists["pallas"].val_loss, atol=1e-5)
+
+
 def test_eval_every_cadence(synthetic_ds):
     """eval_every > 1 leaves NaN on off rounds, records the last round."""
     ds = synthetic_ds
