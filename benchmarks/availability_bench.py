@@ -1,0 +1,117 @@
+"""Availability-scenario bench: batched scan-engine throughput per scenario
+family (core/availability_device.py).
+
+For every family — the legacy periodic table plus the four stateful
+processes (Gilbert–Elliott churn, cluster outages, non-stationary drift,
+deadline stragglers) — a (family x seeds) batch runs through
+``ScanEngine.run_batch`` and we record batched rounds/sec.  Because every
+family compiles to the SAME ``lax.switch`` program, all per-family rows
+after the first reuse one compiled executable, and the final MIXED row runs
+one cell of EVERY family in a single program — the mixed-scenario batching
+the subsystem exists for.  The run is dumped to
+``benchmarks/results/BENCH_availability.json`` so the scenario-axis perf
+trajectory accumulates across PRs (CI runs the quick pass).
+
+  PYTHONPATH=src python -m benchmarks.availability_bench [--full]
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+import jax
+
+from repro.core.availability import make_mode
+from repro.data.synthetic import make_synthetic
+from repro.fed.models import logistic_regression
+from repro.fed.scan_engine import ScanConfig, ScanEngine
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results"
+BENCH_PATH = RESULTS / "BENCH_availability.json"
+
+SEEDS = (0, 1, 2)
+
+
+def _processes(ds, rounds):
+    """One representative process per scenario family."""
+    from benchmarks.common import make_scenario
+    table = make_mode("LN", n_clients=ds.n_clients, beta=0.5, seed=99).process()
+    procs = {"TABLE(LN)": table}
+    for name in ("GE", "CLUSTER", "DRIFT", "DEADLINE"):
+        procs[name] = make_scenario(name, ds, rounds=rounds, seed=99)
+    return procs
+
+
+def run(quick: bool = True) -> list[dict]:
+    n = 30 if quick else 100
+    rounds = 25 if quick else 60
+    ds = make_synthetic(n_clients=n, alpha=0.5, beta=0.5, seed=0)
+    cfg = ScanConfig(rounds=rounds, m=max(1, n // 5), local_steps=10,
+                     batch_size=10, lr=0.1, eval_every=5, sampler="uniform",
+                     max_sweeps=16)
+    eng = ScanEngine(ds, logistic_regression(), cfg)
+    procs = _processes(ds, rounds)
+
+    rows = []
+
+    def bench(label, cells):
+        t0 = time.time()
+        hists = eng.run_batch(cells)         # may include the one-off compile
+        total_s = time.time() - t0
+        t0 = time.time()
+        hists = eng.run_batch(cells)         # steady state
+        run_s = time.time() - t0
+        part = float(np.mean([h.counts.sum() / (rounds * cfg.m)
+                              for h in hists]))
+        row = {"table": "availability_bench", "family": label,
+               "n_clients": n, "rounds": rounds, "cells": len(cells),
+               "total_s": round(total_s, 3), "run_s": round(run_s, 3),
+               "rounds_per_s": round(rounds * len(cells) / max(run_s, 1e-9), 1),
+               "sel_fill": round(part, 3),    # |S_t| / M fill factor
+               "best_loss_mean": round(float(np.mean([h.best_loss
+                                                      for h in hists])), 4)}
+        rows.append(row)
+        print(f"[availability_bench] {label:11s}: {row['rounds_per_s']:8.1f} "
+              f"batched rounds/s ({len(cells)} cells, steady "
+              f"{row['run_s']:.3f}s)", flush=True)
+
+    for label, proc in procs.items():
+        bench(label, [eng.cell(seed=s, process=proc, avail_seed=40 + s)
+                      for s in SEEDS])
+    # the headline: one cell of EVERY family in ONE vmapped program
+    bench("MIXED", [eng.cell(seed=i, process=proc, avail_seed=40 + i)
+                    for i, proc in enumerate(procs.values())])
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    record = {"bench": "availability", "backend": jax.default_backend(),
+              "n_clients": n, "rounds": rounds, "sampler": cfg.sampler,
+              "rows": rows}
+    BENCH_PATH.write_text(json.dumps(record, indent=1))
+    return rows
+
+
+def summarize(rows) -> list[str]:
+    out = ["", "== availability scenarios: batched scan throughput per "
+           "family (one shared program) =="]
+    out.append(f"{'family':>11s} {'cells':>6s} {'rounds/s':>9s} "
+               f"{'steady s':>9s} {'w/ compile':>11s} {'fill':>6s} "
+               f"{'best loss':>10s}")
+    for r in rows:
+        out.append(f"{r['family']:>11s} {r['cells']:6d} "
+                   f"{r['rounds_per_s']:9.1f} {r['run_s']:9.3f} "
+                   f"{r['total_s']:11.3f} {r['sel_fill']:6.3f} "
+                   f"{r['best_loss_mean']:10.4f}")
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="N=100 clients, 60 rounds")
+    args = ap.parse_args()
+    for line in summarize(run(quick=not args.full)):
+        print(line)

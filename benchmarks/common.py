@@ -13,6 +13,7 @@ import time
 import numpy as np
 
 from repro.core.availability import make_mode
+from repro.core.availability_device import ALL_SCENARIOS, make_process
 from repro.core.sampler import FedGSSampler, make_sampler
 from repro.fed.engine import FLConfig, FLEngine
 from repro.fed.models import logistic_regression, small_cnn
@@ -37,6 +38,10 @@ MODES = {
     "cifar": [("IDL", None), ("LN", 0.5), ("SLN", 0.5), ("LDF", 0.7), ("MDF", 0.7)],
     "fashion": [("IDL", None), ("YMF", 0.9), ("YC", 0.9)],
 }
+
+# beyond-paper stateful scenario families (core/availability_device.py) —
+# the extended availability axis of table2/availability_bench
+SCENARIOS = list(ALL_SCENARIOS)          # GE, CLUSTER, DRIFT, DEADLINE
 
 METHODS = ["UniformSample", "MDSample", "Power-of-Choice", "FedProx",
            "FedGS(0.0)", "FedGS(0.5)", "FedGS(1.0)", "FedGS(2.0)", "FedGS(5.0)"]
@@ -108,21 +113,14 @@ def scan_method(name: str, prox_mu_default: float = 0.01):
     raise ValueError(f"unknown method {name!r}")
 
 
-def run_row_batched(ds_name: str, mode_list, method: str, seeds, *,
-                    quick: bool = True, force: bool = False) -> list[dict]:
-    """One whole Table-2 sweep row — every (availability mode x seed) cell of
-    one (dataset, method) — as ONE jit-compiled scan-over-rounds /
-    vmap-over-cells program (repro.fed.scan_engine).  Returns one record per
-    cell with the run_setting schema subset; cached per row on disk."""
+def _scan_row_setup(ds_name: str, method: str, quick: bool, use_masks: bool):
+    """The cached (dataset, engine, configs, H, alpha) of one batched sweep
+    row — the ONE setup path ``run_row_batched`` (mask cells) and
+    ``run_scenario_row_batched`` (process cells) share, so the two benchmark
+    paths cannot drift apart.  Engines cache per (dataset, quick, config,
+    use_masks); jit caches live per engine, so rows reuse compiled
+    programs."""
     sampler_kind, prox, alpha = scan_method(method)
-    PAPER.mkdir(parents=True, exist_ok=True)
-    tag = "quick" if quick else "full"
-    mtag = "-".join(f"{m}{'' if b is None else b}" for m, b in mode_list)
-    key = f"scanrow__{ds_name}__{method}__{mtag}__s{'-'.join(map(str, seeds))}__{tag}"
-    path = PAPER / (key.replace("(", "").replace(")", "").replace(".", "_") + ".json")
-    if path.exists() and not force:
-        return json.loads(path.read_text())
-
     dk = (ds_name, quick)
     if dk not in _DS_CACHE:
         _DS_CACHE[dk] = (make_dataset(ds_name, quick), make_model(ds_name))
@@ -134,9 +132,9 @@ def run_row_batched(ds_name: str, mode_list, method: str, seeds, *,
                      lr=fcfg.lr, lr_decay=fcfg.lr_decay, prox_mu=prox,
                      eval_every=fcfg.eval_every, sampler=sampler_kind,
                      max_sweeps=32)
-    ck = (ds_name, quick, cfg)
+    ck = (ds_name, quick, cfg, use_masks)
     if ck not in _ENGINE_CACHE:
-        _ENGINE_CACHE[ck] = ScanEngine(ds, model, cfg, use_masks=True)
+        _ENGINE_CACHE[ck] = ScanEngine(ds, model, cfg, use_masks=use_masks)
     eng = _ENGINE_CACHE[ck]
     h = None
     if sampler_kind == "fedgs":
@@ -144,6 +142,25 @@ def run_row_batched(ds_name: str, mode_list, method: str, seeds, *,
             feats = ds.opt_params if ds_name == "synthetic" else ds.label_dist
             _H_CACHE[dk] = oracle_h(np.asarray(feats))
         h = _H_CACHE[dk]
+    return ds, eng, cfg, fcfg, h, alpha
+
+
+def run_row_batched(ds_name: str, mode_list, method: str, seeds, *,
+                    quick: bool = True, force: bool = False) -> list[dict]:
+    """One whole Table-2 sweep row — every (availability mode x seed) cell of
+    one (dataset, method) — as ONE jit-compiled scan-over-rounds /
+    vmap-over-cells program (repro.fed.scan_engine).  Returns one record per
+    cell with the run_setting schema subset; cached per row on disk."""
+    PAPER.mkdir(parents=True, exist_ok=True)
+    tag = "quick" if quick else "full"
+    mtag = "-".join(f"{m}{'' if b is None else b}" for m, b in mode_list)
+    key = f"scanrow__{ds_name}__{method}__{mtag}__s{'-'.join(map(str, seeds))}__{tag}"
+    path = PAPER / (key.replace("(", "").replace(")", "").replace(".", "_") + ".json")
+    if path.exists() and not force:
+        return json.loads(path.read_text())
+
+    ds, eng, cfg, fcfg, h, alpha = _scan_row_setup(ds_name, method, quick,
+                                                   use_masks=True)
     cells, meta = [], []
     for mode_name, beta in mode_list:
         mode = make_mode(mode_name, n_clients=ds.n_clients,
@@ -159,6 +176,15 @@ def run_row_batched(ds_name: str, mode_list, method: str, seeds, *,
     hists = eng.run_batch(cells)
     wall = round(time.time() - t0, 1)
 
+    recs = _scan_records(meta, hists, ds_name, method, quick, cfg.rounds, wall)
+    path.write_text(json.dumps(recs))
+    print(f"[bench] {key}: {len(recs)} cells in one batched program ({wall}s)",
+          flush=True)
+    return recs
+
+
+def _scan_records(meta, hists, ds_name, method, quick, rounds, wall):
+    """Per-cell run_setting-schema records of one batched scan row."""
     from repro.core.fairness import count_variance, count_range, gini
     recs = []
     for (mode_name, beta, seed), hist in zip(meta, hists):
@@ -172,15 +198,58 @@ def run_row_batched(ds_name: str, mode_list, method: str, seeds, *,
             "count_range": count_range(hist.counts),
             "gini": gini(hist.counts),
             "counts": hist.counts.tolist(),
-            "rounds": cfg.rounds,
+            "rounds": rounds,
             "loss_curve": hist.val_loss[hist.rounds].tolist(),
             "curve_rounds": hist.rounds.tolist(),
             "wall_s": wall,                 # whole batched row, shared
             "engine": "scan",
         })
+    return recs
+
+
+def make_scenario(name: str, ds, *, rounds: int, seed: int = 0):
+    """One stateful availability scenario (``SCENARIOS``) for a dataset —
+    the scan-engine process counterpart of ``make_mode``.  DRIFT ramps from
+    the dataset's MDF table to its LDF table over the run."""
+    return make_process(name, n_clients=ds.n_clients, data_sizes=ds.sizes,
+                        label_sets=ds.label_sets(), num_labels=ds.num_classes,
+                        rounds=rounds, seed=seed)
+
+
+def run_scenario_row_batched(ds_name: str, scenario_list, method: str, seeds,
+                             *, quick: bool = True,
+                             force: bool = False) -> list[dict]:
+    """The scenario-axis analogue of ``run_row_batched``: every
+    (scenario family x seed) cell of one (dataset, method) as ONE batched
+    scan program.  Availability is drawn on-device by the stateful
+    processes (no finite mask table exists for them), so cells use the
+    ``use_masks=False`` engine; heterogeneous families batch through the
+    same program (``availability_device.proc_step`` lax.switch)."""
+    PAPER.mkdir(parents=True, exist_ok=True)
+    tag = "quick" if quick else "full"
+    stag = "-".join(scenario_list)
+    key = f"scanscen__{ds_name}__{method}__{stag}__s{'-'.join(map(str, seeds))}__{tag}"
+    path = PAPER / (key.replace("(", "").replace(")", "").replace(".", "_") + ".json")
+    if path.exists() and not force:
+        return json.loads(path.read_text())
+
+    ds, eng, cfg, fcfg, h, alpha = _scan_row_setup(ds_name, method, quick,
+                                                   use_masks=False)
+    cells, meta = [], []
+    for scen in scenario_list:
+        process = make_scenario(scen, ds, rounds=cfg.rounds, seed=99)
+        for seed in seeds:
+            cells.append(eng.cell(seed=seed, process=process, alpha=alpha,
+                                  h=h, avail_seed=fcfg.avail_seed))
+            meta.append((scen, None, seed))
+    t0 = time.time()
+    hists = eng.run_batch(cells)
+    wall = round(time.time() - t0, 1)
+
+    recs = _scan_records(meta, hists, ds_name, method, quick, cfg.rounds, wall)
     path.write_text(json.dumps(recs))
-    print(f"[bench] {key}: {len(recs)} cells in one batched program ({wall}s)",
-          flush=True)
+    print(f"[bench] {key}: {len(recs)} scenario cells in one batched program "
+          f"({wall}s)", flush=True)
     return recs
 
 

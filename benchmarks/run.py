@@ -17,7 +17,8 @@ import time
 RESULTS = pathlib.Path(__file__).resolve().parent / "results"
 
 SECTIONS = ["table2", "fig4", "table3", "table4", "dynamic", "scaling",
-            "engine", "kernels", "graph", "roofline", "variants"]
+            "engine", "availability", "kernels", "graph", "roofline",
+            "variants"]
 
 
 def _section(name: str, quick: bool):
@@ -35,6 +36,8 @@ def _section(name: str, quick: bool):
         from benchmarks import sampler_scaling as m
     elif name == "engine":
         from benchmarks import engine_bench as m
+    elif name == "availability":
+        from benchmarks import availability_bench as m
     elif name == "kernels":
         from benchmarks import kernel_bench as m
     elif name == "graph":

@@ -7,12 +7,21 @@ availability modes x all seeds — executes as ONE jit-compiled
 scan-over-rounds / vmap-over-cells program (``common.run_row_batched``),
 including Power-of-Choice, whose per-client loss probe now runs in-scan.
 Pass ``batched=False`` to force the legacy host loop everywhere.
+
+Beyond the paper: ``scenarios=True`` (CLI ``--scenarios``) extends the
+availability axis with the stateful scenario families — Gilbert–Elliott
+churn, cluster outages, drift, deadlines (``core/availability_device``) —
+as extra Synthetic columns, each (method x family x seed) sweep again one
+batched device program (``common.run_scenario_row_batched``).
 """
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import METHODS, MODES, run_row_batched, run_setting
+from benchmarks.common import (
+    METHODS, MODES, SCENARIOS, run_row_batched, run_scenario_row_batched,
+    run_setting,
+)
 
 
 def _row_cells(ds_name, modes, method, seeds, quick, batched):
@@ -24,7 +33,13 @@ def _row_cells(ds_name, modes, method, seeds, quick, batched):
             for mode_name, beta in modes for seed in seeds]
 
 
-def run(quick: bool = True, seeds=None, batched: bool = True) -> list[dict]:
+def run(quick: bool = True, seeds=None, batched: bool = True,
+        scenarios: bool = False) -> list[dict]:
+    if scenarios and not batched:
+        # the stateful families draw availability in-scan; there is no host
+        # mask table to replay, so a host-loop scenario column cannot exist
+        raise ValueError("scenario columns run only through the batched "
+                         "scan engine; drop scenarios=True or batched=False")
     rows = []
     for ds_name, modes in MODES.items():
         # paper averages 3 seeds; logreg on Synthetic is cheap enough to do so
@@ -32,7 +47,13 @@ def run(quick: bool = True, seeds=None, batched: bool = True) -> list[dict]:
         ds_seeds = seeds or ((0, 1, 2) if ds_name == "synthetic" else (0,))
         for method in METHODS:
             cells = _row_cells(ds_name, modes, method, ds_seeds, quick, batched)
-            for mode_name, beta in modes:
+            if scenarios and ds_name == "synthetic":
+                cells = cells + run_scenario_row_batched(
+                    ds_name, SCENARIOS, method, ds_seeds, quick=quick)
+                modes_out = modes + [(s, None) for s in SCENARIOS]
+            else:
+                modes_out = modes
+            for mode_name, beta in modes_out:
                 sub = [c for c in cells if c["mode"] == mode_name]
                 rows.append({
                     "table": "table2", "dataset": ds_name, "mode": mode_name,
@@ -65,5 +86,11 @@ def summarize(rows) -> list[str]:
 
 
 if __name__ == "__main__":
-    for line in summarize(run()):
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scenarios", action="store_true",
+                    help="extend the Synthetic columns with the stateful "
+                         "scenario families (GE/CLUSTER/DRIFT/DEADLINE)")
+    args = ap.parse_args()
+    for line in summarize(run(scenarios=args.scenarios)):
         print(line)

@@ -1,7 +1,15 @@
 # The paper's primary contribution: FedGS — graph-based client sampling
 # with arbitrary client availability (3DG + APSP + QUBO sampler + the
 # seven availability modes + fairness metrics + SSPP graph construction).
-from repro.core.availability import make_mode, ALL_MODES, AvailabilityMode
+from repro.core.availability import (
+    make_mode, ALL_MODES, AvailabilityMode, ProcessMode, host_draw,
+    host_trace,
+)
+from repro.core.availability_device import (
+    ALL_SCENARIOS, AvailabilityProcess, TableProcess, GilbertElliott,
+    ClusterOutage, DriftProcess, DeadlineProcess, make_process, proc_draw,
+    proc_step, device_trace,
+)
 from repro.core.graph import (
     build_3dg, similarity_to_adjacency, shortest_paths,
     oracle_similarity, update_cosine_similarity, functional_similarity,

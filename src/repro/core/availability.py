@@ -18,6 +18,8 @@ Mode table (paper Table 1 rows -> formulas; beta defaults in parentheses):
   YC    Y-Cycle (beta=0.9, T_p=20)     beta * 1[exists y in Y_k:
                                          y/C <= phase(t) < (y+1)/C] + (1 - beta),
                                          phase(t) = (1 + t mod T_p) / T_p
+                                         (last band closed at phase = 1.0,
+                                          hit at t = T_p - 1)
   LN    Log-Normal (beta=0.5)          c_k / max_i c_i,
                                          c ~ LogNormal(0, ln 1/(1-beta))
   SLN   Sin-Log-Normal (beta=0.5;      clip(p_k^LN * (0.4 sin(2 pi
@@ -26,17 +28,32 @@ Mode table (paper Table 1 rows -> formulas; beta defaults in parentheses):
   ====  =============================  ==========================================
 
 Every mode's probabilities are periodic in t (static modes have period 1), so
-the whole schedule is a dense ``(period, N)`` table.  That table — exposed via
-:meth:`AvailabilityMode.probs_table` — is the *source of truth*: it is a pure
-array consumable from jit-compiled code as ``table[t % period]`` (this is how
-``repro.fed.scan_engine`` draws availability on-device), while the numpy API
-``probs(t)`` / ``sample(t, rng)`` is a thin host-side wrapper over the same
-table.  See README.md "Availability modes" and DESIGN.md §5 for how the scan
-engine batches these tables over sweep cells.
+the whole schedule is a dense ``(period, N)`` table — which makes each mode
+one trivial instance of the device-native availability-scenario subsystem
+(``repro.core.availability_device``): :meth:`AvailabilityMode.process`
+wraps the table as a ``TableProcess``, the stateless member of the process
+family the scan engine carries through ``lax.scan``.  This module is the
+thin numpy FACE over that subsystem (mirroring ``core/graph.py`` over
+``core/graph_device.py``): the mode classes construct the f64 tables from
+host data (sizes, label sets), while the draw itself — Bernoulli + the
+force-one-active floor — delegates to the SHARED helpers
+(``sample_bernoulli_np`` here, ``bernoulli_nonempty`` in the scan), and
+:func:`host_draw` / :func:`host_trace` are the ONE host wrapper both
+``FLEngine.run`` and ``scan_engine.precompute_masks`` route through, so
+host-vs-scan mask parity is structural.  Stateful scenario families
+(Gilbert–Elliott churn, cluster outages, drift, deadlines) get the same
+host face through :class:`ProcessMode`.  See README.md "Availability
+scenarios" and DESIGN.md §5/§10.
 """
 from __future__ import annotations
 
 import numpy as np
+
+import jax
+
+from repro.core.availability_device import (
+    _STEP_SALT, AvailabilityProcess, TableProcess, sample_bernoulli_np,
+)
 
 
 class AvailabilityMode:
@@ -67,12 +84,17 @@ class AvailabilityMode:
         return self.probs_table()[t % self.period]
 
     def sample(self, t: int, rng: np.random.Generator) -> np.ndarray:
-        """Boolean active mask for round t."""
-        p = self.probs(t)
-        a = rng.random(p.shape) < p
-        if not a.any():                     # guarantee at least one active client
-            a[int(rng.integers(len(a)))] = True
-        return a
+        """Boolean active mask for round t — the shared Bernoulli +
+        force-one-active draw (availability_device.sample_bernoulli_np)."""
+        return sample_bernoulli_np(self.probs(t), rng)
+
+    def process(self) -> TableProcess:
+        """This mode as a device-native ``AvailabilityProcess`` (the f64
+        table is kept on the process for the host face's bit-parity; the
+        device params cast to float32)."""
+        if not hasattr(self, "_process"):
+            self._process = TableProcess(self.probs_table(), name=self.name)
+        return self._process
 
 
 class Ideal(AvailabilityMode):
@@ -139,7 +161,13 @@ class YCycle(AvailabilityMode):
         phase = (1 + (t % self.tp)) / self.tp
         out = np.empty(len(self.label_sets))
         for k, s in enumerate(self.label_sets):
-            hit = any(y / self.num_y <= phase < (y + 1) / self.num_y for y in s)
+            # label bands are half-open [y/C, (y+1)/C) except the LAST band,
+            # which closes at 1.0: phase hits exactly 1.0 at t = T_p - 1, and
+            # an all-open top band would match no label there, silently
+            # dropping every client to the 1 - beta floor once per cycle
+            hit = any(y / self.num_y <= phase
+                      and (phase < (y + 1) / self.num_y or y + 1 == self.num_y)
+                      for y in s)
             out[k] = self.beta * float(hit) + (1 - self.beta)
         return out
 
@@ -196,3 +224,73 @@ def make_mode(name: str, *, n_clients: int, data_sizes=None, label_sets=None,
 
 
 ALL_MODES = ("IDL", "MDF", "LDF", "YMF", "YC", "LN", "SLN")
+
+
+# ----------------------------------------------------------- host face
+class ProcessMode:
+    """Numpy face over ANY ``AvailabilityProcess`` — duck-types the
+    ``probs(t)`` / ``sample(t, rng)`` API that ``FLEngine`` and
+    ``precompute_masks`` consume, so the stateful scenario families run on
+    the host path too.
+
+    Stateless families (table, drift) serve exact float64 probabilities via
+    ``process.host_probs``; stateful families replay the DEVICE probability
+    stream (same init/step keys as a scan cell with this ``avail_seed``, so
+    the latent chain trajectory is identical host-vs-scan; only the
+    Bernoulli backend differs — numpy here, threefry in-scan, the same split
+    the seven legacy modes already have, DESIGN.md assumption log #7/#10).
+    Rows are cached, so replay is deterministic and order-independent."""
+
+    def __init__(self, process: AvailabilityProcess, avail_seed: int = 1234):
+        self.process = process
+        self.name = getattr(process, "name", process.family)
+        self.avail_seed = avail_seed        # host_draw checks it matches
+        self._key = jax.random.PRNGKey(avail_seed)
+        self._state = process.init(self._key)
+        self._rows: list[np.ndarray] = []
+
+    def probs(self, t: int) -> np.ndarray:
+        hp = self.process.host_probs(t)
+        if hp is not None:
+            return np.asarray(hp, np.float64)
+        while len(self._rows) <= t:
+            tt = len(self._rows)
+            akey = jax.random.fold_in(self._key, tt)
+            p, self._state = self.process.step(
+                self._state, jax.random.fold_in(akey, _STEP_SALT), tt)
+            self._rows.append(np.asarray(p, np.float64))
+        return self._rows[t]
+
+    def sample(self, t: int, rng: np.random.Generator) -> np.ndarray:
+        return sample_bernoulli_np(self.probs(t), rng)
+
+
+def host_round_rng(avail_seed: int, t: int) -> np.random.Generator:
+    """The per-round numpy availability stream — ``SeedSequence([seed, t])``,
+    independent of model-training randomness (Appendix C)."""
+    return np.random.default_rng(np.random.SeedSequence([avail_seed, t]))
+
+
+def host_draw(mode, t: int, avail_seed: int = 1234) -> np.ndarray:
+    """ONE round's host-side availability mask.  The single wrapper BOTH
+    ``FLEngine.run`` and ``scan_engine.precompute_masks`` call, so the masks
+    the scan engine replays are bit-identical to the host engine's draws by
+    construction.  ``mode`` is anything with ``sample(t, rng)`` — an
+    ``AvailabilityMode`` or a ``ProcessMode``.
+
+    A ``ProcessMode`` bakes its LATENT-stream seed at construction; drawing
+    it under a different Bernoulli seed would produce a trace matching
+    neither device run, so a mismatch is an error, not a silent skew."""
+    mode_seed = getattr(mode, "avail_seed", None)
+    if mode_seed is not None and mode_seed != avail_seed:
+        raise ValueError(
+            f"availability seed mismatch: the ProcessMode was built with "
+            f"avail_seed={mode_seed} but host_draw was asked for "
+            f"avail_seed={avail_seed}; the latent process stream and the "
+            f"Bernoulli stream must share one seed for host<->scan parity")
+    return mode.sample(t, host_round_rng(avail_seed, t))
+
+
+def host_trace(mode, rounds: int, avail_seed: int = 1234) -> np.ndarray:
+    """(rounds, N) bool availability trace via :func:`host_draw`."""
+    return np.stack([host_draw(mode, t, avail_seed) for t in range(rounds)])

@@ -1,0 +1,544 @@
+"""Device-native availability-scenario subsystem.
+
+The paper's central claim is robustness "under arbitrary client
+availability", but the seven Table-1 modes (core/availability.py) are all
+*stateless periodic* probability tables — the scenarios that actually stress
+a sampler are stateful: Markov-correlated on/off churn (Rodio et al.),
+non-stationary participation drift (Ribero et al.), regional outages,
+deadline-dropped stragglers.  This module makes availability a first-class
+process abstraction, mirroring the PR-2 graph unification
+(core/graph_device.py): ONE pure, jit/vmap/scan-traceable implementation
+that the scan engine carries through ``lax.scan``, the host engine wraps in
+numpy (core/availability.py::ProcessMode), and the benchmarks sweep batched.
+
+An :class:`AvailabilityProcess` is
+
+    ``init(key) -> state``                                 (eager, host)
+    ``draw(state, key, t) -> (avail bool (N,), state)``    (pure, traceable)
+
+where ``draw`` = a per-family probability ``step`` (where any stateful
+transition randomness is consumed) followed by the SHARED Bernoulli +
+force-one-active draw (:func:`bernoulli_nonempty` — the one helper both the
+host ``AvailabilityMode.sample`` and the scan engine use, DESIGN.md
+assumption log #7/#10).
+
+Scenario families (``FAMILIES`` — the ``lax.switch`` branch index every
+process compiles to, so cells of DIFFERENT families batch through one
+``ScanEngine.run_batch`` program):
+
+  ======== ======================= ========================================
+  family   class                   p_k(t)
+  ======== ======================= ========================================
+  table    TableProcess            table[t % P, k]            (the seven
+                                   legacy Table-1 modes, stateless)
+  markov   GilbertElliott          table[t % P, k] * (p_good if chain k on
+                                   else p_bad); per-client 2-state Markov
+                                   chain, mean sojourns = 1/p_fail, 1/p_rec
+  cluster  ClusterOutage           table[t % P, k] * (1 if region c(k) up
+                                   else floor); per-REGION 2-state chain —
+                                   shared regional failures => correlated
+                                   availability inside a cluster
+  drift    DriftProcess            (1-w(t)) A[t % P, k] + w(t) B[t % P, k];
+                                   w = ramp clip((t-t0)/(t1-t0), 0, 1) or
+                                   regime switch (t // T_sw) % 2 — the
+                                   non-stationary schedule, stateless
+  deadline DeadlineProcess         table[t % P, k] * 1[l_k(t) <= deadline];
+                                   l_k AR(1) log-latency state — available
+                                   but straggling clients are dropped
+  ======== ======================= ========================================
+
+The runtime representation is a uniform *params* pytree (family index,
+tables, packed ``theta`` knobs, per-client ``cluster``/``aux`` vectors) plus
+a uniform *state* pytree (``onoff``, ``latency``), so heterogeneous
+scenarios stack along a vmap batch axis (``scan_engine.stack_cells``).
+
+Seed-stream convention (DESIGN.md assumption log #10): per round the caller
+derives ``akey = fold_in(avail_key, t)``; the Bernoulli uses ``akey``
+itself, force-one uses ``fold_in(akey, 1)`` (bit-compatible with the PR-1
+scan stream for the table family), and stateful transitions use
+``fold_in(akey, 2)``.  ``init`` consumes the raw ``avail_key`` — never a
+``fold_in(·, t)`` key, so init and round draws cannot collide.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+FAMILIES = ("table", "markov", "cluster", "drift", "deadline")
+ALL_SCENARIOS = ("GE", "CLUSTER", "DRIFT", "DEADLINE")   # make_process names
+
+THETA_DIM = 6          # packed per-family scalar knobs (see _step_* readers)
+_STEP_SALT = 2         # fold_in salt of the state-transition key stream
+
+
+# ----------------------------------------------------- shared draw helpers
+def ensure_nonempty(avail: jax.Array, key: jax.Array) -> jax.Array:
+    """Force >= 1 active client (device side): if the mask is empty, turn on
+    one uniformly-drawn client.  The jit/vmap-traceable counterpart of
+    :func:`ensure_nonempty_np` — the ONE force-one rule both paths share."""
+    n = avail.shape[-1]
+    forced = jax.random.randint(key, (), 0, n)
+    return avail | ((jnp.arange(n) == forced) & ~avail.any())
+
+
+def bernoulli_nonempty(key: jax.Array, p: jax.Array) -> jax.Array:
+    """Bernoulli(p) availability mask with the force-one floor.  Key layout:
+    the Bernoulli consumes ``key`` itself, the force draw ``fold_in(key, 1)``
+    — bit-compatible with the scan engine's original table draw."""
+    avail = jax.random.uniform(key, p.shape) < p
+    return ensure_nonempty(avail, jax.random.fold_in(key, 1))
+
+
+def ensure_nonempty_np(avail: np.ndarray, rng: np.random.Generator) -> np.ndarray:
+    """Host-side force-one: same rule, numpy stream.  ``rng.integers`` is
+    consumed ONLY when the mask is empty — bit-parity with the legacy
+    ``AvailabilityMode.sample`` (and so with FLEngine traces)."""
+    if not avail.any():
+        avail = avail.copy()
+        avail[int(rng.integers(len(avail)))] = True
+    return avail
+
+
+def sample_bernoulli_np(p: np.ndarray, rng: np.random.Generator) -> np.ndarray:
+    """Host-side Bernoulli + force-one — the draw ``AvailabilityMode.sample``
+    and ``ProcessMode.sample`` both delegate to."""
+    return ensure_nonempty_np(rng.random(p.shape) < p, rng)
+
+
+# ------------------------------------------------------- per-family steps
+# Each branch: (params, state, key, t) -> (p (N,) f32, new state).  All
+# branches return the SAME pytree structure so lax.switch can dispatch on a
+# traced (per-cell, vmap-batched) family index.
+def _base_row(params: dict, t: jax.Array) -> jax.Array:
+    return params["table"][jnp.mod(t, params["period"])]
+
+
+def _step_table(params, state, key, t):
+    return _base_row(params, t), state
+
+
+def _step_markov(params, state, key, t):
+    p_fail, p_recover = params["theta"][0], params["theta"][1]
+    p_good, p_bad = params["theta"][2], params["theta"][3]
+    on = state["onoff"] > 0.5
+    u = jax.random.uniform(key, on.shape)
+    on = jnp.where(on, u >= p_fail, u < p_recover)
+    p = _base_row(params, t) * jnp.where(on, p_good, p_bad)
+    return p, {**state, "onoff": on.astype(jnp.float32)}
+
+
+def _step_cluster(params, state, key, t):
+    p_fail, p_recover, floor = (params["theta"][0], params["theta"][1],
+                                params["theta"][2])
+    up = state["onoff"] > 0.5                 # slot g = region g (pad unused)
+    u = jax.random.uniform(key, up.shape)
+    up = jnp.where(up, u >= p_fail, u < p_recover)
+    gate = jnp.where(up[params["cluster"]], 1.0, floor)
+    return _base_row(params, t) * gate, {**state,
+                                         "onoff": up.astype(jnp.float32)}
+
+
+def _step_drift(params, state, key, t):
+    t0, t1, sw = params["theta"][0], params["theta"][1], params["theta"][2]
+    tf = t.astype(jnp.float32)
+    w_ramp = jnp.clip((tf - t0) / jnp.maximum(t1 - t0, 1.0), 0.0, 1.0)
+    w_switch = jnp.mod(jnp.floor(tf / jnp.maximum(sw, 1.0)), 2.0)
+    w = jnp.where(sw > 0, w_switch, w_ramp)
+    row = jnp.mod(t, params["period"])
+    p = (1.0 - w) * params["table"][row] + w * params["table_b"][row]
+    return p, state
+
+
+def _step_deadline(params, state, key, t):
+    rho, sigma, deadline = (params["theta"][0], params["theta"][1],
+                            params["theta"][2])
+    mu = params["aux"]
+    lat = rho * state["latency"] + (1.0 - rho) * mu \
+        + sigma * jax.random.normal(key, mu.shape)
+    p = _base_row(params, t) * (lat <= deadline)
+    return p, {**state, "latency": lat}
+
+
+_STEPS = (_step_table, _step_markov, _step_cluster, _step_drift,
+          _step_deadline)
+
+
+def proc_step(params: dict, state: dict, key: jax.Array, t: jax.Array):
+    """Per-round availability probabilities of ANY family: ``lax.switch``
+    on the cell's family index (under vmap this lowers to a select over all
+    branches — availability math is negligible next to local training, so
+    mixed-family batches cost nothing extra that matters).
+
+    Returns ``(p (N,) float32, new state)``."""
+    t = jnp.asarray(t, jnp.int32)
+    return jax.lax.switch(params["family"],
+                          [lambda s, k, tt, f=f: f(params, s, k, tt)
+                           for f in _STEPS],
+                          state, key, t)
+
+
+def proc_draw(params: dict, state: dict, key: jax.Array, t: jax.Array):
+    """The full per-round draw: family step (transition randomness on
+    ``fold_in(key, 2)``) then the shared Bernoulli + force-one on ``key`` /
+    ``fold_in(key, 1)``.  Returns ``(avail bool (N,), new state)``."""
+    p, state = proc_step(params, state, jax.random.fold_in(key, _STEP_SALT), t)
+    return bernoulli_nonempty(key, p), state
+
+
+# ------------------------------------------------------------ the processes
+def _ones_table(n: int) -> np.ndarray:
+    return np.ones((1, n), np.float64)
+
+
+def _as_table(table, n: Optional[int] = None) -> np.ndarray:
+    t = np.atleast_2d(np.asarray(table, np.float64))
+    if n is not None and t.shape[1] != n:
+        raise ValueError(f"table has {t.shape[1]} clients, expected {n}")
+    return t
+
+
+@dataclass
+class AvailabilityProcess:
+    """Base class.  Subclasses set ``family`` and fill the params/state
+    fields they use; everything else takes the neutral defaults so every
+    process compiles to the SAME pytree shapes (the mixed-batch invariant).
+
+    ``params()``/``init(key)`` are eager host-side constructors of the
+    runtime pytrees; ``draw``/``step`` are the pure traceable entry points
+    (single-process convenience over :func:`proc_draw`/:func:`proc_step`,
+    guaranteed identical because they ARE the switch path)."""
+
+    family = "table"
+    name = "process"
+
+    def __post_init__(self):
+        self._params = None
+
+    # -- runtime pytrees ---------------------------------------------------
+    def _table(self) -> np.ndarray:
+        raise NotImplementedError
+
+    def _table_b(self) -> np.ndarray:
+        return np.zeros_like(self._table())
+
+    def _theta(self) -> np.ndarray:
+        return np.zeros(THETA_DIM)
+
+    def _cluster_ids(self) -> np.ndarray:
+        return np.zeros(self.n_clients, np.int32)
+
+    def _aux(self) -> np.ndarray:
+        return np.zeros(self.n_clients)
+
+    @property
+    def n_clients(self) -> int:
+        return self._table().shape[1]
+
+    def params(self) -> dict:
+        """The cell-ready param pytree (float32 on device, like every other
+        cell array; the f64 source tables stay host-side for the numpy
+        face's bit-parity — DESIGN.md assumption log #10)."""
+        if self._params is None:
+            table = self._table()
+            theta = np.zeros(THETA_DIM, np.float32)
+            th = np.asarray(self._theta(), np.float32)
+            theta[:th.shape[0]] = th
+            self._params = {
+                "family": jnp.int32(FAMILIES.index(self.family)),
+                "table": jnp.asarray(table, jnp.float32),
+                "table_b": jnp.asarray(self._table_b(), jnp.float32),
+                "period": jnp.int32(table.shape[0]),
+                "theta": jnp.asarray(theta),
+                "cluster": jnp.asarray(self._cluster_ids(), jnp.int32),
+                "aux": jnp.asarray(self._aux(), jnp.float32),
+            }
+        return self._params
+
+    def init(self, key: jax.Array) -> dict:
+        """Initial carried state (stationary draw where one exists)."""
+        n = self.n_clients
+        return {"onoff": jnp.ones((n,), jnp.float32),
+                "latency": jnp.zeros((n,), jnp.float32)}
+
+    # -- traceable entry points -------------------------------------------
+    def step(self, state, key, t):
+        return proc_step(self.params(), state, key, t)
+
+    def draw(self, state, key, t):
+        return proc_draw(self.params(), state, key, t)
+
+    # -- host face hook ----------------------------------------------------
+    def host_probs(self, t: int) -> Optional[np.ndarray]:
+        """Exact float64 probabilities for STATELESS families (the host
+        face uses them for bit-parity with legacy traces); stateful families
+        return None and the host face replays the device prob stream."""
+        return None
+
+
+@dataclass
+class TableProcess(AvailabilityProcess):
+    """The seven legacy Table-1 modes: a dense periodic ``(P, N)``
+    probability table (``AvailabilityMode.probs_table()``), stateless."""
+    table: np.ndarray
+    name: str = "table"
+
+    family = "table"
+
+    def __post_init__(self):
+        super().__post_init__()
+        self.table = _as_table(self.table)
+
+    def _table(self):
+        return self.table
+
+    def host_probs(self, t):
+        return self.table[t % self.table.shape[0]]
+
+
+@dataclass
+class GilbertElliott(AvailabilityProcess):
+    """Per-client Gilbert–Elliott on/off Markov chains (correlated-in-time
+    availability, Rodio et al.): chain k flips on->off w.p. ``1/mean_on``
+    and off->on w.p. ``1/mean_off`` each round; availability probability is
+    ``base * p_good`` while on and ``base * p_bad`` while off.  Stationary
+    participation = base * (pi_on p_good + (1-pi_on) p_bad) with
+    pi_on = mean_on / (mean_on + mean_off)."""
+    n: int
+    mean_on: float = 8.0          # mean on-sojourn (rounds) = 1 / p_fail
+    mean_off: float = 4.0         # mean off-sojourn (rounds) = 1 / p_recover
+    p_good: float = 1.0
+    p_bad: float = 0.0
+    base_table: Optional[np.ndarray] = None
+    name: str = "markov"
+
+    family = "markov"
+
+    def _table(self):
+        return (_ones_table(self.n) if self.base_table is None
+                else _as_table(self.base_table, self.n))
+
+    def _theta(self):
+        return np.array([1.0 / max(self.mean_on, 1.0),
+                         1.0 / max(self.mean_off, 1.0),
+                         self.p_good, self.p_bad])
+
+    @property
+    def pi_on(self) -> float:
+        return self.mean_on / (self.mean_on + self.mean_off)
+
+    def init(self, key):
+        state = super().init(key)
+        on = jax.random.uniform(key, (self.n,)) < self.pi_on
+        return {**state, "onoff": on.astype(jnp.float32)}
+
+
+@dataclass
+class ClusterOutage(AvailabilityProcess):
+    """Block-correlated outages: clients are grouped into regions, each
+    region carries ONE up/down Markov chain (P(up->down) = p_fail,
+    P(down->up) = p_recover); a down region multiplies its clients'
+    availability by ``floor``.  Clients of one region fail together —
+    the cross-client correlation structure no periodic table expresses."""
+    n: int
+    n_clusters: int = 4
+    p_fail: float = 0.1
+    p_recover: float = 0.3
+    floor: float = 0.05
+    cluster: Optional[np.ndarray] = None    # (N,) region ids; default rr
+    base_table: Optional[np.ndarray] = None
+    name: str = "cluster"
+
+    family = "cluster"
+
+    def _table(self):
+        return (_ones_table(self.n) if self.base_table is None
+                else _as_table(self.base_table, self.n))
+
+    def _theta(self):
+        return np.array([self.p_fail, self.p_recover, self.floor])
+
+    def _cluster_ids(self):
+        if self.cluster is not None:
+            return np.asarray(self.cluster, np.int32)
+        return (np.arange(self.n) % self.n_clusters).astype(np.int32)
+
+    @property
+    def pi_up(self) -> float:
+        return self.p_recover / (self.p_fail + self.p_recover)
+
+    def init(self, key):
+        state = super().init(key)
+        # region chains live in the first n_clusters slots of the (N,) state
+        up = jax.random.uniform(key, (self.n,)) < self.pi_up
+        return {**state, "onoff": up.astype(jnp.float32)}
+
+
+@dataclass
+class DriftProcess(AvailabilityProcess):
+    """Non-stationary drift (Ribero et al.-style time-varying
+    participation): interpolate between two periodic tables A and B —
+    ``w(t) = clip((t - t0)/(t1 - t0), 0, 1)`` (ramp; t0 = t1 gives a hard
+    shift) or, with ``switch_period > 0``, a regime switch
+    ``w(t) = (t // T_sw) % 2``.  Stateless but aperiodic: NO finite
+    ``(period, N)`` table represents it."""
+    table_a: np.ndarray
+    table_b: np.ndarray
+    t0: float = 0.0
+    t1: float = 100.0
+    switch_period: int = 0
+    name: str = "drift"
+
+    family = "drift"
+
+    def __post_init__(self):
+        super().__post_init__()
+        a, b = _as_table(self.table_a), _as_table(self.table_b)
+        if a.shape[1] != b.shape[1]:
+            raise ValueError("table_a / table_b client counts differ")
+        # tile both to the common (lcm) period so one row index serves both
+        p = int(np.lcm(a.shape[0], b.shape[0]))
+        self.table_a = np.tile(a, (p // a.shape[0], 1))
+        self.table_b = np.tile(b, (p // b.shape[0], 1))
+
+    def _table(self):
+        return self.table_a
+
+    def _table_b(self):
+        return self.table_b
+
+    def _theta(self):
+        return np.array([self.t0, self.t1, float(self.switch_period)])
+
+    def weight(self, t: int) -> float:
+        if self.switch_period > 0:
+            return float((t // self.switch_period) % 2)
+        return float(np.clip((t - self.t0) / max(self.t1 - self.t0, 1.0),
+                             0.0, 1.0))
+
+    def host_probs(self, t):
+        w = self.weight(t)
+        row = t % self.table_a.shape[0]
+        return (1.0 - w) * self.table_a[row] + w * self.table_b[row]
+
+
+@dataclass
+class DeadlineProcess(AvailabilityProcess):
+    """Deadline-constrained participation: client k carries an AR(1)
+    latency state ``l' = rho l + (1 - rho) mu_k + sigma eps`` and is dropped
+    (even when its base availability fires) whenever ``l' > deadline`` —
+    available-but-straggling clients never make the round.  Stationarily
+    ``l_k ~ N(mu_k, sigma^2 / (1 - rho^2))``, so the participation rate is
+    ``base_k * Phi((deadline - mu_k) / sd)``."""
+    n: int
+    deadline: float = 1.0
+    rho: float = 0.8
+    sigma: float = 0.2
+    mu: Optional[np.ndarray] = None      # (N,) mean latencies; default U[.5, 1.5]
+    base_table: Optional[np.ndarray] = None
+    mu_seed: int = 0
+    name: str = "deadline"
+
+    family = "deadline"
+
+    def _table(self):
+        return (_ones_table(self.n) if self.base_table is None
+                else _as_table(self.base_table, self.n))
+
+    def _theta(self):
+        return np.array([self.rho, self.sigma, self.deadline])
+
+    def _mu(self) -> np.ndarray:
+        if self.mu is not None:
+            return np.asarray(self.mu, np.float64)
+        rng = np.random.default_rng(self.mu_seed)
+        return rng.uniform(0.5, 1.5, self.n)
+
+    def _aux(self):
+        return self._mu()
+
+    @property
+    def stationary_sd(self) -> float:
+        return self.sigma / np.sqrt(max(1.0 - self.rho ** 2, 1e-12))
+
+    def stationary_rate(self) -> np.ndarray:
+        """Analytic per-client participation probability (base x Phi)."""
+        z = (self.deadline - self._mu()) / max(self.stationary_sd, 1e-12)
+        phi = np.asarray(jax.scipy.stats.norm.cdf(jnp.asarray(z)))
+        return self._table().mean(0) * phi
+
+    def init(self, key):
+        state = super().init(key)
+        mu = jnp.asarray(self._mu(), jnp.float32)
+        lat = mu + self.stationary_sd * jax.random.normal(key, mu.shape)
+        return {**state, "latency": lat}
+
+
+# ------------------------------------------------------------------ factory
+def make_process(name: str, *, n_clients: int, data_sizes=None,
+                 label_sets=None, num_labels: int = 10,
+                 beta: Optional[float] = None, seed: int = 0,
+                 period: int = 20, rounds: int = 100,
+                 **kw) -> AvailabilityProcess:
+    """Scenario names -> processes.  The seven legacy Table-1 mode names
+    build a :class:`TableProcess` (via ``core.availability.make_mode``);
+    the new families:
+
+      GE        per-client Gilbert–Elliott chains (kw: mean_on, mean_off, …)
+      CLUSTER   regional-outage chains           (kw: n_clusters, p_fail, …)
+      DRIFT     MDF -> LDF ramp over ``rounds`` (falls back to a
+                0.9 -> 0.25 flat ramp without data_sizes; kw override all)
+      DEADLINE  AR(1) straggler latencies        (kw: deadline, rho, sigma)
+    """
+    uname = name.upper()
+    if uname == "GE":
+        return GilbertElliott(n_clients, **kw)
+    if uname == "CLUSTER":
+        kw.setdefault("n_clusters", max(2, n_clients // 10))
+        return ClusterOutage(n_clients, **kw)
+    if uname == "DRIFT":
+        if "table_a" not in kw:
+            from repro.core.availability import make_mode
+            if data_sizes is not None:
+                kw["table_a"] = make_mode(
+                    "MDF", n_clients=n_clients,
+                    data_sizes=data_sizes).probs_table()
+                kw["table_b"] = make_mode(
+                    "LDF", n_clients=n_clients,
+                    data_sizes=data_sizes).probs_table()
+            else:
+                kw["table_a"] = np.full((1, n_clients), 0.9)
+                kw["table_b"] = np.full((1, n_clients), 0.25)
+        kw.setdefault("t0", 0.0)
+        kw.setdefault("t1", float(rounds))
+        return DriftProcess(**kw)
+    if uname == "DEADLINE":
+        kw.setdefault("mu_seed", seed)
+        return DeadlineProcess(n_clients, **kw)
+    from repro.core.availability import make_mode
+    return make_mode(name, n_clients=n_clients, data_sizes=data_sizes,
+                     label_sets=label_sets, num_labels=num_labels, beta=beta,
+                     seed=seed, period=period).process()
+
+
+# ------------------------------------------------------------- trace utility
+def device_trace(process: AvailabilityProcess, rounds: int,
+                 avail_seed: int = 1234) -> np.ndarray:
+    """(rounds, N) bool availability trace drawn entirely on-device with the
+    scan engine's key convention (init on the raw key, round draws on
+    ``fold_in(key, t)``) — the device counterpart of
+    ``availability.host_trace`` and the empirical-frequency test harness."""
+    params = process.params()
+    key = jax.random.PRNGKey(avail_seed)
+    state0 = process.init(key)
+
+    def step(state, t):
+        avail, state = proc_draw(params, state, jax.random.fold_in(key, t), t)
+        return state, avail
+
+    _, trace = jax.lax.scan(step, state0, jnp.arange(rounds))
+    return np.asarray(trace)

@@ -46,17 +46,29 @@ class UniformSampler(Sampler):
         return np.sort(rng.choice(idx, size=m, replace=False))
 
 
+def _size_weights(w: np.ndarray, k: int) -> np.ndarray | None:
+    """Normalized data-size weights for a without-replacement draw of k, or
+    None (= uniform fallback) when the weights are degenerate: all zero
+    (``w / w.sum()`` would be NaN and ``rng.choice`` would raise) or with
+    fewer than k nonzero entries (``rng.choice`` cannot fill k slots from a
+    zero-mass support)."""
+    s = w.sum()
+    if s <= 0 or np.count_nonzero(w) < k:
+        return None
+    return w / s
+
+
 class MDSampler(Sampler):
     """Li et al. 2020: probability proportional to local data size (with
     replacement in theory; we draw without replacement by weight, the common
-    implementation), among available clients."""
+    implementation), among available clients.  Degenerate all-zero data
+    sizes fall back to uniform (``_size_weights``)."""
     name = "MDSample"
 
     def sample(self, *, avail, m, rng, data_sizes=None, **_):
         idx = np.flatnonzero(avail)
         m = min(m, len(idx))
-        w = np.asarray(data_sizes, float)[idx]
-        w = w / w.sum()
+        w = _size_weights(np.asarray(data_sizes, float)[idx], m)
         return np.sort(rng.choice(idx, size=m, replace=False, p=w))
 
 
@@ -73,8 +85,8 @@ class PowerOfChoiceSampler(Sampler):
         idx = np.flatnonzero(avail)
         m = min(m, len(idx))
         d = min(len(idx), max(m, self.d_factor * m))
-        w = np.asarray(data_sizes, float)[idx]
-        cand = rng.choice(idx, size=d, replace=False, p=w / w.sum())
+        w = _size_weights(np.asarray(data_sizes, float)[idx], d)
+        cand = rng.choice(idx, size=d, replace=False, p=w)
         order = np.argsort(-np.asarray(losses)[cand])
         return np.sort(cand[order[:m]])
 
@@ -192,7 +204,14 @@ def uniform_select(key, avail, m: int):
 
 
 def md_select(key, data_sizes, avail, m: int):
-    """Device-side MDSampler: without replacement, P(k) ∝ n_k, among A_t."""
+    """Device-side MDSampler: without replacement, P(k) ∝ n_k, among A_t.
+
+    The ``maximum(·, 1e-12)`` floor is the degenerate-weight guard: all-zero
+    data sizes give EQUAL (finite) log-weights — uniform sampling — instead
+    of the NaNs a ``w / w.sum()`` normalization would produce, and
+    zero-size clients keep a finite score so they can still fill the mask
+    when fewer than m positive-size clients are available (the host
+    ``MDSampler``/Power-of-Choice guard is ``_size_weights``)."""
     w = jnp.log(jnp.maximum(data_sizes.astype(jnp.float32), 1e-12))
     return gumbel_topk_select(key, w, avail, m)
 

@@ -18,7 +18,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.availability import AvailabilityMode
+from repro.core.availability import AvailabilityMode, host_draw
 from repro.core.sampler import Sampler, FedGSSampler
 from repro.core import graph as graph_mod
 from repro.data.fed_dataset import FedDataset
@@ -171,10 +171,12 @@ class FLEngine:
 
         for t in range(start_round, cfg.rounds):
             rng = np.random.default_rng(np.random.SeedSequence([cfg.seed, t]))
-            avail_rng = np.random.default_rng(
-                np.random.SeedSequence([cfg.avail_seed, t]))
             key = jax.random.fold_in(key0, t)
-            avail = self.mode.sample(t, avail_rng)
+            # the ONE shared host availability wrapper — the same call
+            # precompute_masks stacks, so scan-engine mask cells replay this
+            # engine's availability bit-exactly (works for AvailabilityMode
+            # and ProcessMode scenario families alike)
+            avail = host_draw(self.mode, t, cfg.avail_seed)
             losses = None
             if self._prober is not None:
                 key, sub = jax.random.split(key)

@@ -27,11 +27,17 @@ Seed streams (parity with FLEngine)
   depend on the split count, so rounds where fewer than M clients are
   available draw different local-training batches (still a valid simulation,
   just not bit-parity — the parity tests assert the precondition).  Availability either comes
-  from host-precomputed masks (``precompute_masks`` replicates FLEngine's
-  numpy SeedSequence([avail_seed, t]) stream bit-exactly — the parity-test
-  path) or is drawn on-device from the mode's dense ``(period, N)``
-  probability table (``AvailabilityMode.probs_table``) with a dedicated jax
-  key stream.  Baseline samplers run on-device via Gumbel top-k
+  from host-precomputed masks (``precompute_masks`` = the shared host
+  wrapper ``availability.host_trace``, bit-identical to FLEngine's numpy
+  SeedSequence([avail_seed, t]) stream — the parity-test path) or is drawn
+  on-device by an ``AvailabilityProcess``
+  (``core.availability_device``): the cell carries the process params +
+  carried state, the scan body calls the one shared ``proc_draw`` (family
+  step -> Bernoulli -> force-one), and because every family compiles to the
+  same ``lax.switch`` program, cells of DIFFERENT scenario families —
+  legacy periodic tables, Gilbert–Elliott churn, cluster outages, drift,
+  deadlines — vmap-batch through one ``run_batch`` program.  Baseline
+  samplers run on-device via Gumbel top-k
   (``core.sampler.uniform_select`` / ``md_select``); Power-of-Choice draws
   its d·m candidate set the same way, probes the global model's loss on each
   candidate's local data in-scan, and keeps the top-m; FedGS reuses the same
@@ -63,7 +69,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.availability import AvailabilityMode
+from repro.core.availability import AvailabilityMode, host_trace
+from repro.core.availability_device import AvailabilityProcess, proc_draw
 from repro.core.graph_device import (
     BACKENDS, GraphConfig, build_h, cap_and_normalize,
 )
@@ -113,15 +120,13 @@ class ScanConfig:
 
 
 # --------------------------------------------------------------- host helpers
-def precompute_masks(mode: AvailabilityMode, rounds: int,
-                     avail_seed: int = 1234) -> np.ndarray:
+def precompute_masks(mode, rounds: int, avail_seed: int = 1234) -> np.ndarray:
     """(rounds, N) bool availability trace, bit-identical to the stream
-    FLEngine.run draws from numpy SeedSequence([avail_seed, t])."""
-    rows = []
-    for t in range(rounds):
-        rng = np.random.default_rng(np.random.SeedSequence([avail_seed, t]))
-        rows.append(mode.sample(t, rng))
-    return np.stack(rows)
+    FLEngine.run draws — both route through the ONE host wrapper
+    ``availability.host_draw`` / ``host_trace``.  ``mode`` is anything with
+    ``sample(t, rng)``: an ``AvailabilityMode`` or a ``ProcessMode`` over a
+    stateful scenario family."""
+    return host_trace(mode, rounds, avail_seed)
 
 
 def normalized_h(h: np.ndarray) -> np.ndarray:
@@ -141,18 +146,22 @@ def oracle_h(features: np.ndarray, *, eps: float = 0.1, sigma2: float = 0.01,
 
 
 def stack_cells(cells: list[dict]) -> dict:
-    """Stack per-cell pytrees along a new leading batch axis, padding
-    availability tables to a common period (rows beyond a cell's period are
-    never indexed because lookups are ``table[t % period]``)."""
-    if "table" in cells[0]:
-        pmax = max(int(c["table"].shape[0]) for c in cells)
-        cells = [dict(c) for c in cells]
+    """Stack per-cell pytrees along a new leading batch axis, zero-padding
+    the availability-process tables to a common period (rows beyond a
+    cell's own period are never indexed because lookups are
+    ``table[t % period]``) — this is what lets cells of different scenario
+    families, with different table periods, batch into ONE program."""
+    if "proc" in cells[0]:
+        pmax = max(int(c["proc"]["table"].shape[0]) for c in cells)
+        cells = [dict(c, proc=dict(c["proc"])) for c in cells]
         for c in cells:
-            p = int(c["table"].shape[0])
-            if p < pmax:
-                c["table"] = jnp.concatenate(
-                    [c["table"], jnp.zeros((pmax - p,) + c["table"].shape[1:],
-                                           c["table"].dtype)])
+            for k in ("table", "table_b"):
+                tab = c["proc"][k]
+                p = int(tab.shape[0])
+                if p < pmax:
+                    c["proc"][k] = jnp.concatenate(
+                        [tab, jnp.zeros((pmax - p,) + tab.shape[1:],
+                                        tab.dtype)])
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *cells)
 
 
@@ -279,20 +288,19 @@ def _build_simulate(ds: FedDataset, model: FedModel, cfg: ScanConfig,
             h0 = cell["h"]
 
         def step(carry, sx):
-            params, counts, h, emb = carry
+            params, counts, h, emb, pstate = carry
             t, lr = sx["t"], sx["lr"]
             key = jax.random.fold_in(key0, t)
 
-            # 1. availability A_t
+            # 1. availability A_t — the shared device-native process draw
+            # (core/availability_device.proc_draw: family step -> Bernoulli
+            # -> force-one); the process state rides the scan carry
             if use_masks:
                 avail = sx["mask"]
             else:
-                akey = jax.random.fold_in(cell["avail_key"], t)
-                p = cell["table"][jnp.mod(t, cell["period"])]
-                avail = jax.random.uniform(akey, (n,)) < p
-                forced = jax.random.randint(
-                    jax.random.fold_in(akey, 1), (), 0, n)
-                avail = avail | ((jnp.arange(n) == forced) & ~avail.any())
+                avail, pstate = proc_draw(
+                    cell["proc"], pstate,
+                    jax.random.fold_in(cell["avail_key"], t), t)
 
             # 2. sampler: S_t subset of A_t, |S_t| = min(M, |A_t|)
             if cfg.sampler == "fedgs":
@@ -344,13 +352,14 @@ def _build_simulate(ds: FedDataset, model: FedModel, cfg: ScanConfig,
             cvar = jnp.sum((counts - counts.mean()) ** 2) / max(n - 1, 1)
             out = {"val_loss": vl, "val_acc": va, "count_var": cvar,
                    "sel": sel.astype(jnp.int32), "valid": valid}
-            return (params, counts, h, emb), out
+            return (params, counts, h, emb, pstate), out
 
         sxs = {"t": jnp.arange(cfg.rounds), "lr": lrs}
         if use_masks:
             sxs["mask"] = cell["masks"]
-        (params, counts, _, _), traj = jax.lax.scan(
-            step, (params0, counts0, h0, emb0), sxs)
+        pstate0 = cell.get("proc_state", {})
+        (params, counts, _, _, _), traj = jax.lax.scan(
+            step, (params0, counts0, h0, emb0, pstate0), sxs)
         return {"params": params, "counts": counts, **traj}
 
     return simulate
@@ -372,6 +381,7 @@ class ScanEngine:
 
     # ------------------------------------------------------------- cells
     def cell(self, *, seed: int = 0, mode: Optional[AvailabilityMode] = None,
+             process: Optional[AvailabilityProcess] = None,
              masks: Optional[np.ndarray] = None, alpha: float = 1.0,
              h: Optional[np.ndarray] = None, avail_seed: int = 1234,
              sampler_seed: Optional[int] = None) -> dict:
@@ -379,8 +389,12 @@ class ScanEngine:
 
         Mask path (``use_masks=True``): pass ``masks`` (rounds, N), e.g. from
         ``precompute_masks`` for bit-exact FLEngine availability.  Device
-        path: pass ``mode``; its ``probs_table()`` is shipped to the device
-        and Bernoulli draws use the fold_in(avail_seed, t) jax stream.
+        path: pass ``process`` (any ``AvailabilityProcess`` scenario family)
+        or ``mode`` (a legacy Table-1 mode, wrapped as its ``TableProcess``);
+        the cell carries the process params + initial state
+        (``init(PRNGKey(avail_seed))``) and per-round draws use the
+        ``fold_in(avail_seed, t)`` jax stream.  Cells of different scenario
+        families batch together in ``run_batch``.
         """
         c: dict = {"key": jax.random.PRNGKey(seed),
                    "alpha": jnp.float32(alpha)}
@@ -388,11 +402,13 @@ class ScanEngine:
             assert masks is not None and masks.shape == (self.cfg.rounds, self.n)
             c["masks"] = jnp.asarray(masks, bool)
         else:
-            assert mode is not None, "device-side availability needs a mode"
-            table = mode.probs_table()
-            c["table"] = jnp.asarray(table, jnp.float32)
-            c["period"] = jnp.int32(table.shape[0])
+            if process is None:
+                assert mode is not None, \
+                    "device-side availability needs a process or a mode"
+                process = mode.process()
             c["avail_key"] = jax.random.PRNGKey(avail_seed)
+            c["proc"] = process.params()
+            c["proc_state"] = process.init(c["avail_key"])
         if self.cfg.sampler in ("uniform", "md", "poc"):
             c["sampler_key"] = jax.random.PRNGKey(
                 seed + 0x5E1EC7 if sampler_seed is None else sampler_seed)

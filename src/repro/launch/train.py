@@ -25,7 +25,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import INPUT_SHAPES
 from repro.configs.registry import get_config
-from repro.core.availability import make_mode
+from repro.core.availability import ProcessMode, make_mode
+from repro.core.availability_device import ALL_SCENARIOS, make_process
 from repro.core.sampler import make_sampler, FedGSSampler
 from repro.core import graph as graph_mod
 from repro.core.fairness import count_variance
@@ -56,7 +57,10 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=3e-3)
-    ap.add_argument("--mode", default="LN")
+    ap.add_argument("--mode", default="LN",
+                    help="Table-1 availability mode (IDL/MDF/LDF/YMF/YC/LN/"
+                         "SLN) or a stateful scenario family "
+                         "(GE/CLUSTER/DRIFT/DEADLINE)")
     ap.add_argument("--sampler", default="fedgs")
     ap.add_argument("--alpha", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
@@ -82,9 +86,17 @@ def main(argv=None):
     if isinstance(sampler, FedGSSampler):
         _, _, h = graph_mod.build_3dg(feats, eps=0.1, sigma2=0.01)
         sampler.set_graph(h)
-    mode = make_mode(args.mode, n_clients=n, data_sizes=sizes,
-                     label_sets=[set(np.argsort(-feats[k])[:3].tolist()) for k in range(n)],
-                     num_labels=vocab)
+    if args.mode.upper() in ALL_SCENARIOS:
+        # stateful scenario families (GE / CLUSTER / DRIFT / DEADLINE) get
+        # the same host face as the Table-1 modes via ProcessMode
+        mode = ProcessMode(make_process(args.mode, n_clients=n,
+                                        data_sizes=sizes, rounds=args.rounds,
+                                        seed=args.seed),
+                           avail_seed=args.seed + 1234)
+    else:
+        mode = make_mode(args.mode, n_clients=n, data_sizes=sizes,
+                         label_sets=[set(np.argsort(-feats[k])[:3].tolist()) for k in range(n)],
+                         num_labels=vocab)
 
     # ---- model + local trainer -------------------------------------------
     key = jax.random.PRNGKey(args.seed)

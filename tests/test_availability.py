@@ -65,6 +65,39 @@ def test_ycycle_periodic(label_sets):
     assert m.probs(0).min() >= 0.1 - 1e-12
 
 
+def test_ycycle_last_round_phase_boundary():
+    """Regression: at t = T_p - 1 the phase is exactly 1.0; the last label
+    band must be closed there (an all-open band matched no label, silently
+    dropping EVERY client to the 1 - beta floor once per cycle)."""
+    num_y, beta, tp = 10, 0.9, 20
+    label_sets = [{num_y - 1}, {0}, {3, num_y - 1}]
+    m = YCycle(label_sets, num_labels=num_y, beta=beta, period=tp)
+    p = m.probs(tp - 1)
+    # clients holding the top label are active at phase 1.0 ...
+    assert p[0] == pytest.approx(beta + (1 - beta))
+    assert p[2] == pytest.approx(beta + (1 - beta))
+    # ... clients without it stay on the floor
+    assert p[1] == pytest.approx(1 - beta)
+    # with every label held by some client, every round activates its
+    # band's clients — before the fix t = T_p - 1 collapsed the WHOLE
+    # population to the floor
+    full = YCycle([{y} for y in range(num_y)], num_labels=num_y,
+                  beta=beta, period=tp)
+    for t in range(tp):
+        assert full.probs(t).max() == pytest.approx(1.0), f"t={t}"
+
+
+def test_ycycle_interior_bands_stay_half_open():
+    """The fix only touches the top band: an interior boundary phase
+    activates the band it OPENS (y/C <= phase), not the one it closes."""
+    num_y, beta, tp = 10, 0.9, 20
+    m = YCycle([{4}, {5}], num_labels=num_y, beta=beta, period=tp)
+    # phase(t=9) = 10/20 = 0.5 = 5/10: band 5 opens, band 4 closed
+    p = m.probs(9)
+    assert p[0] == pytest.approx(1 - beta)
+    assert p[1] == pytest.approx(1.0)
+
+
 def test_lognormal_static_and_seeded():
     a = LogNormal(30, beta=0.5, seed=7)
     b = LogNormal(30, beta=0.5, seed=7)

@@ -1,0 +1,295 @@
+"""The device-native availability-scenario subsystem
+(core/availability_device.py):
+
+* legacy parity — the seven Table-1 modes reproduce BIT-IDENTICAL traces
+  through the new process path: ``precompute_masks`` (= the shared host
+  wrapper) vs an inline re-implementation of the seed's numpy draw, and the
+  ``ProcessMode(TableProcess)`` face vs the mode itself;
+* shared force-one helper — jax and numpy implementations agree;
+* empirical frequencies — each stateful family matches its stationary /
+  scheduled distribution (Gilbert–Elliott, cluster outage incl. the
+  within-region correlation no periodic table expresses, drift schedule,
+  deadline stragglers);
+* mixed-family ``run_batch`` — one vmapped program sweeps cells of ALL
+  scenario families at once and equals the per-cell runs.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.availability import (
+    ALL_MODES, ProcessMode, host_trace, make_mode,
+)
+from repro.core.availability_device import (
+    ClusterOutage, DeadlineProcess, DriftProcess, GilbertElliott,
+    TableProcess, bernoulli_nonempty, device_trace, ensure_nonempty,
+    ensure_nonempty_np, make_process, proc_draw, proc_step,
+)
+from repro.fed.models import logistic_regression
+from repro.fed.scan_engine import ScanConfig, ScanEngine, precompute_masks
+
+
+def _mode(name, ds, seed=7):
+    return make_mode(name, n_clients=ds.n_clients, data_sizes=ds.sizes,
+                     label_sets=ds.label_sets(), num_labels=ds.num_classes,
+                     seed=seed)
+
+
+# ------------------------------------------------------------ legacy parity
+def _legacy_trace(mode, rounds, avail_seed):
+    """The seed repo's precompute_masks / AvailabilityMode.sample, inlined
+    as an independent oracle: numpy SeedSequence([avail_seed, t]) stream,
+    f64 table Bernoulli, force-one via rng.integers only when empty."""
+    rows = []
+    for t in range(rounds):
+        rng = np.random.default_rng(np.random.SeedSequence([avail_seed, t]))
+        p = mode.probs_table()[t % mode.period]
+        a = rng.random(p.shape) < p
+        if not a.any():
+            a[int(rng.integers(len(a)))] = True
+        rows.append(a)
+    return np.stack(rows)
+
+
+@pytest.mark.parametrize("name", ALL_MODES)
+def test_legacy_modes_bit_identical(synthetic_ds, name):
+    """Shared-wrapper path AND ProcessMode(TableProcess) path both reproduce
+    the legacy availability stream bit for bit."""
+    mode = _mode(name, synthetic_ds)
+    want = _legacy_trace(mode, 40, avail_seed=1234)
+    np.testing.assert_array_equal(precompute_masks(mode, 40, 1234), want)
+    pm = ProcessMode(mode.process(), avail_seed=1234)
+    np.testing.assert_array_equal(precompute_masks(pm, 40, 1234), want)
+
+
+def test_table_process_device_probs_match_table(synthetic_ds):
+    """The device-side table family serves exactly probs_table (f32 cast)."""
+    mode = _mode("SLN", synthetic_ds)
+    proc = mode.process()
+    params, state = proc.params(), proc.init(jax.random.PRNGKey(0))
+    for t in (0, 3, 25, 100):
+        p, state = proc_step(params, state, jax.random.PRNGKey(t), t)
+        np.testing.assert_array_equal(
+            np.asarray(p), mode.probs(t).astype(np.float32))
+
+
+# ------------------------------------------------------- force-one helper
+def test_ensure_nonempty_parity():
+    """The jax and numpy force-one helpers implement the SAME rule: empty
+    mask -> exactly one client on; non-empty mask -> untouched."""
+    n = 11
+    some = np.zeros(n, bool)
+    some[4] = True
+    # non-empty: identity on both paths (and numpy consumes NO rng draws)
+    rng = np.random.default_rng(0)
+    s0 = rng.bit_generator.state
+    np.testing.assert_array_equal(ensure_nonempty_np(some, rng), some)
+    assert rng.bit_generator.state == s0
+    np.testing.assert_array_equal(
+        np.asarray(ensure_nonempty(jnp.asarray(some), jax.random.PRNGKey(0))),
+        some)
+    # empty: exactly one forced, uniformly across clients on both paths
+    hits_np = np.zeros(n)
+    hits_j = np.zeros(n)
+    for i in range(200):
+        a = ensure_nonempty_np(np.zeros(n, bool), np.random.default_rng(i))
+        assert a.sum() == 1
+        hits_np[np.flatnonzero(a)[0]] += 1
+        b = np.asarray(ensure_nonempty(jnp.zeros(n, bool),
+                                       jax.random.PRNGKey(i)))
+        assert b.sum() == 1
+        hits_j[np.flatnonzero(b)[0]] += 1
+    assert hits_np.min() > 0 and hits_j.min() > 0
+
+
+def test_bernoulli_nonempty_never_empty():
+    p = jnp.zeros(9)
+    for i in range(20):
+        a = np.asarray(bernoulli_nonempty(jax.random.PRNGKey(i), p))
+        assert a.sum() == 1
+
+
+# ------------------------------------------- stationary / scheduled freqs
+def test_gilbert_elliott_stationary_and_sojourn():
+    ge = GilbertElliott(80, mean_on=8.0, mean_off=4.0)
+    tr = device_trace(ge, 800, avail_seed=3)
+    # stationary participation = pi_on (p_good=1, p_bad=0, base=1)
+    assert abs(tr.mean() - ge.pi_on) < 0.04
+    # mean on-sojourn ~ mean_on: count run lengths of the on-state
+    runs = []
+    for k in range(tr.shape[1]):
+        col = tr[:, k].astype(int)
+        edges = np.flatnonzero(np.diff(col))
+        lengths = np.diff(np.concatenate([[0], edges + 1, [len(col)]]))
+        vals = np.concatenate([[col[0]], col[edges + 1]])
+        runs.extend(lengths[vals == 1].tolist())
+    assert abs(np.mean(runs) - ge.mean_on) / ge.mean_on < 0.3
+
+
+def test_cluster_outage_correlated_within_region():
+    cl = ClusterOutage(60, n_clusters=4, p_fail=0.1, p_recover=0.3, floor=0.0)
+    tr = device_trace(cl, 600, avail_seed=5)
+    assert abs(tr.mean() - cl.pi_up) < 0.05
+    ids = np.asarray(cl._cluster_ids())
+    c = np.corrcoef(tr.T.astype(float))
+    n = tr.shape[1]
+    same = np.mean([c[i, j] for i in range(n) for j in range(i + 1, n)
+                    if ids[i] == ids[j]])
+    diff = np.mean([c[i, j] for i in range(n) for j in range(i + 1, n)
+                    if ids[i] != ids[j]])
+    # a region fails as a block: within-region correlation ~1, across ~0
+    assert same > 0.9
+    assert abs(diff) < 0.2
+
+
+def test_drift_ramp_schedule():
+    n = 50
+    dr = DriftProcess(np.full((1, n), 0.9), np.full((1, n), 0.2),
+                      t0=100, t1=400)
+    tr = device_trace(dr, 500, avail_seed=7)
+    assert abs(tr[:100].mean() - 0.9) < 0.05       # pre-ramp: table A
+    assert abs(tr[450:].mean() - 0.2) < 0.05       # post-ramp: table B
+    mid = tr[240:260].mean()                       # halfway: interpolated
+    assert 0.4 < mid < 0.7
+    # exact scheduled probabilities through the host face (f64, stateless)
+    pm = ProcessMode(dr)
+    np.testing.assert_allclose(pm.probs(250), np.full(n, 0.55))
+    np.testing.assert_allclose(pm.probs(0), np.full(n, 0.9))
+
+
+def test_drift_regime_switch():
+    n = 40
+    dr = DriftProcess(np.full((1, n), 0.9), np.full((1, n), 0.1),
+                      switch_period=25)
+    tr = device_trace(dr, 100, avail_seed=9)
+    assert tr[:25].mean() > 0.8                    # regime A
+    assert tr[25:50].mean() < 0.2                  # regime B
+    assert tr[50:75].mean() > 0.8                  # back to A
+
+
+def test_deadline_stationary_rate():
+    dl = DeadlineProcess(80, deadline=1.0, rho=0.8, sigma=0.2, mu_seed=1)
+    tr = device_trace(dl, 800, avail_seed=11)
+    want = dl.stationary_rate()
+    # population mean matches the analytic base * Phi((D - mu)/sd)
+    assert abs(tr.mean() - want.mean()) < 0.04
+    # per-client: clients with mu far below the deadline ~always make it,
+    # far above ~never
+    emp = tr.mean(0)
+    mu = dl._mu()
+    assert emp[mu < 0.6].mean() > 0.9
+    assert emp[mu > 1.4].mean() < 0.1
+    # tighter deadline -> strictly fewer participants
+    tight = DeadlineProcess(80, deadline=0.7, rho=0.8, sigma=0.2, mu_seed=1)
+    assert device_trace(tight, 800, avail_seed=11).mean() < tr.mean()
+
+
+def test_stateful_families_stay_in_range(synthetic_ds):
+    """Every factory scenario emits probabilities in [0, 1]."""
+    ds = synthetic_ds
+    for name in ("GE", "CLUSTER", "DRIFT", "DEADLINE"):
+        proc = make_process(name, n_clients=ds.n_clients,
+                            data_sizes=ds.sizes, rounds=50, seed=3)
+        params = proc.params()
+        state = proc.init(jax.random.PRNGKey(0))
+        for t in range(30):
+            p, state = proc_step(params, state, jax.random.PRNGKey(t), t)
+            p = np.asarray(p)
+            assert np.all(p >= 0) and np.all(p <= 1), name
+
+
+def test_host_face_matches_device_latent_stream():
+    """ProcessMode replays the SAME latent chain trajectory a scan cell
+    draws: the probability rows agree (the Bernoulli backends differ by
+    design — numpy vs threefry, DESIGN.md assumption log #10)."""
+    ge = GilbertElliott(20, mean_on=5, mean_off=5)
+    pm = ProcessMode(ge, avail_seed=77)
+    params = ge.params()
+    key = jax.random.PRNGKey(77)
+    state = ge.init(key)
+    from repro.core.availability_device import _STEP_SALT
+    for t in range(15):
+        p, state = proc_step(
+            params, state,
+            jax.random.fold_in(jax.random.fold_in(key, t), _STEP_SALT), t)
+        np.testing.assert_allclose(pm.probs(t), np.asarray(p), atol=1e-7)
+
+
+# ------------------------------------------------------ mixed-family batch
+def test_mixed_families_run_batch(synthetic_ds):
+    """ONE vmapped scan program sweeps cells of every scenario family, and
+    equals the per-cell runs (sel, counts, losses)."""
+    ds = synthetic_ds
+    eng = ScanEngine(ds, logistic_regression(),
+                     ScanConfig(rounds=8, m=6, local_steps=5, batch_size=10,
+                                lr=0.1, eval_every=1, sampler="uniform",
+                                max_sweeps=16))
+    procs = [
+        _mode("LN", ds).process(),
+        GilbertElliott(ds.n_clients, mean_on=6, mean_off=3),
+        ClusterOutage(ds.n_clients, n_clusters=3, floor=0.1),
+        make_process("DRIFT", n_clients=ds.n_clients, data_sizes=ds.sizes,
+                     rounds=8),
+        DeadlineProcess(ds.n_clients, deadline=1.2),
+    ]
+    cells = [eng.cell(seed=i, process=p, avail_seed=60 + i)
+             for i, p in enumerate(procs)]
+    batch = eng.run_batch(cells)
+    assert all(np.isfinite(h.val_loss).all() for h in batch)
+    for cell, b in zip(cells, batch):
+        single = eng.run(cell)
+        np.testing.assert_array_equal(b.sel, single.sel)
+        np.testing.assert_array_equal(b.counts, single.counts)
+        np.testing.assert_allclose(b.val_loss, single.val_loss, atol=2e-6)
+
+
+def test_mixed_families_with_fedgs(synthetic_ds):
+    """FedGS sweeps the scenario axis too (the paper's sampler under the
+    stateful availability the paper could not express)."""
+    from repro.fed.scan_engine import oracle_h
+    ds = synthetic_ds
+    h = oracle_h(ds.opt_params)
+    eng = ScanEngine(ds, logistic_regression(),
+                     ScanConfig(rounds=8, m=6, local_steps=5, batch_size=10,
+                                lr=0.1, eval_every=1, sampler="fedgs",
+                                max_sweeps=16))
+    cells = [eng.cell(seed=i, process=p, h=h, alpha=1.0, avail_seed=80 + i)
+             for i, p in enumerate(
+                 [GilbertElliott(ds.n_clients, mean_on=6, mean_off=3),
+                  DeadlineProcess(ds.n_clients, deadline=1.0)])]
+    hists = eng.run_batch(cells)
+    for sh in hists:
+        assert np.isfinite(sh.val_loss).all()
+        assert sh.counts.sum() > 0
+
+
+def test_host_draw_rejects_mismatched_process_seed():
+    """A ProcessMode bakes its latent-stream seed; drawing it under a
+    DIFFERENT Bernoulli seed would yield a trace matching neither device
+    run — host_draw refuses instead of silently skewing."""
+    pm = ProcessMode(GilbertElliott(10, mean_on=4, mean_off=4), avail_seed=7)
+    with pytest.raises(ValueError, match="seed mismatch"):
+        precompute_masks(pm, 5, avail_seed=8)
+    assert precompute_masks(pm, 5, avail_seed=7).shape == (5, 10)
+
+
+def test_flengine_runs_a_stateful_scenario(synthetic_ds):
+    """The host engine accepts a ProcessMode scenario and its masks replay
+    bit-exactly through precompute_masks (the shared host wrapper)."""
+    from repro.core.sampler import UniformSampler
+    from repro.fed.engine import FLConfig, FLEngine
+    ds = synthetic_ds
+    proc = GilbertElliott(ds.n_clients, mean_on=6, mean_off=3)
+    cfg = FLConfig(rounds=6, sample_frac=0.2, local_steps=2, batch_size=5,
+                   lr=0.1, eval_every=2, seed=1)
+    eng = FLEngine(ds, logistic_regression(), UniformSampler(),
+                   ProcessMode(proc, avail_seed=cfg.avail_seed), cfg)
+    hist = eng.run()
+    assert np.isfinite(hist.val_loss).all()
+    masks = precompute_masks(ProcessMode(proc, avail_seed=cfg.avail_seed),
+                             cfg.rounds, cfg.avail_seed)
+    # counts consistency: each round FLEngine selected within those masks
+    for t, sel in zip(hist.rounds, hist.sampled):
+        assert set(sel) <= set(np.flatnonzero(masks[t]))

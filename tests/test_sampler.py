@@ -131,3 +131,48 @@ def test_make_sampler_factory():
     assert isinstance(make_sampler("fedgs", alpha=2.0), FedGSSampler)
     with pytest.raises(ValueError):
         make_sampler("nope")
+
+
+def test_md_sampler_degenerate_sizes_fall_back_to_uniform(rng):
+    """All-zero data sizes used to NaN out w / w.sum(); now a uniform draw."""
+    s = MDSampler()
+    sel = s.sample(avail=np.ones(12, bool), m=4, rng=rng,
+                   data_sizes=np.zeros(12))
+    assert len(sel) == 4 and len(set(sel)) == 4
+    # partial degeneracy: fewer nonzero-size availables than m also falls
+    # back (rng.choice cannot fill m slots from a zero-mass support)
+    sizes = np.zeros(12)
+    sizes[0] = 5.0
+    sel = s.sample(avail=np.ones(12, bool), m=4, rng=rng, data_sizes=sizes)
+    assert len(sel) == 4
+
+
+def test_poc_sampler_degenerate_sizes_fall_back_to_uniform(rng):
+    s = PowerOfChoiceSampler(d_factor=2)
+    losses = np.arange(12, dtype=float)
+    sel = s.sample(avail=np.ones(12, bool), m=3, rng=rng,
+                   data_sizes=np.zeros(12), losses=losses)
+    assert len(sel) == 3
+    # selection rule still applies on the uniform candidate set
+    assert np.mean(losses[sel]) >= np.mean(losses) - 6
+
+
+def test_md_select_degenerate_sizes_device():
+    """Device-side MD: the log-floor makes all-zero sizes EQUAL weights
+    (uniform Gumbel top-k), never NaN; zero-size clients still fill the
+    mask when needed."""
+    import jax
+    from repro.core.sampler import md_select
+    avail = jnp.ones(10, bool)
+    s = np.asarray(md_select(jax.random.PRNGKey(0),
+                             jnp.zeros(10), avail, 4))
+    assert s.sum() == 4
+    # mixed: the single positive-size client is effectively always taken,
+    # zero-size clients complete the quota
+    sizes = jnp.zeros(10).at[7].set(100.0)
+    hits = np.zeros(10)
+    for i in range(50):
+        s = np.asarray(md_select(jax.random.PRNGKey(i), sizes, avail, 3))
+        assert s.sum() == 3
+        hits += s
+    assert hits[7] == 50

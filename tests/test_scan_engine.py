@@ -88,7 +88,8 @@ def test_stack_cells_pads_tables(synthetic_ds):
     cells = [eng.cell(seed=0, mode=_mode("LN", ds)),       # period 1
              eng.cell(seed=1, mode=_mode("YC", ds))]       # period 20
     stacked = stack_cells(cells)
-    assert stacked["table"].shape[:2] == (2, 20)
+    assert stacked["proc"]["table"].shape[:2] == (2, 20)
+    assert stacked["proc"]["table_b"].shape[:2] == (2, 20)
     hists = eng.run_batch(cells)
     assert all(np.isfinite(h.val_loss).all() for h in hists)
 
