@@ -22,5 +22,10 @@ from repro.core.sampler import (
     Sampler, UniformSampler, MDSampler, PowerOfChoiceSampler, FedGSSampler,
     make_sampler,
 )
+from repro.core.sampler_device import (
+    SamplerProcess, UniformProcess, MDProcess, PoCProcess, FedGSProcess,
+    make_sampler_process, make_sampler_step, fedgs_select, fedgs_solve,
+    gumbel_topk_select, uniform_select, md_select,
+)
 from repro.core.fairness import count_variance, count_range, gini
 from repro.core.sspp import secure_dot, secure_similarity_matrix

@@ -1,4 +1,5 @@
-"""Client samplers: FedGS (Eq. 16–17) + the paper's baselines.
+"""Client samplers — the thin HOST face over the device-native sampler
+subsystem (``core/sampler_device.py``, DESIGN.md §11).
 
 FedGS solves, each round t:
     max_{s in {0,1}^|A_t|}  s^T ( alpha/N * H_A  -  diag(z_A) ) s
@@ -6,11 +7,17 @@ FedGS solves, each round t:
 with z_k = 2 (v_k^{t-1} - vbar^{t-1} - M/N) + 1  (long-term-bias penalty from
 the count-variance objective, Eq. 7/14).
 
-The problem is a p-dispersion variant (NP-hard).  The paper bounds solver
-wall-clock; we use a deterministic, fully vectorized greedy + best-swap local
-search with a fixed sweep budget (`max_sweeps`) — jit-compatible (static
-shapes, masks for availability) and TPU-lowerable.  A local optimum "already
-brings non-trivial improvement" (paper §3.3), which our experiments confirm.
+The problem is a p-dispersion variant (NP-hard); the deterministic greedy +
+best-swap local search lives in ``sampler_device.fedgs_solve`` with a
+``ref | pallas`` backend (tiled kernels for large N).  The baseline host
+classes below no longer duplicate selection logic in numpy: each draws ONE
+key from the caller's numpy stream (so per-round SeedSequence rngs keep
+checkpoint-resume exactness) and delegates to the same device selects the
+scan engine traces — ``uniform_select`` / ``md_select`` / the Gumbel
+candidate draw.  All samplers see only the available set A_t (immediate
+availability, as in the paper) and return SORTED selected indices; an empty
+A_t returns an empty int array (previously ``rng.choice`` raised on the
+empty support).
 """
 from __future__ import annotations
 
@@ -20,7 +27,24 @@ import numpy as np
 
 import jax
 import jax.numpy as jnp
-from functools import partial
+
+# Back-compat re-exports: the device implementations moved to
+# core/sampler_device.py; every pre-existing import path keeps working.
+from repro.core.sampler_device import (      # noqa: F401
+    BACKENDS, FAMILIES, SamplerProcess, UniformProcess, MDProcess,
+    PoCProcess, FedGSProcess, fedgs_select, fedgs_solve, gumbel_topk_select,
+    log_size_weights, make_sampler_process, make_sampler_step, md_select,
+    select_k, uniform_select, _fedgs_select, _fedgs_solve,
+)
+
+_EMPTY = np.zeros(0, np.int64)
+
+
+def _draw_key(rng: np.random.Generator) -> jax.Array:
+    """One jax key per draw from the caller's numpy stream — deterministic
+    given ``rng``, so FLEngine's per-round SeedSequence([seed, t]) rngs keep
+    the run Markov in (params, counts, t) (checkpoint-resume exactness)."""
+    return jax.random.PRNGKey(int(rng.integers(2 ** 31 - 1)))
 
 
 # ----------------------------------------------------------------- baselines
@@ -37,44 +61,40 @@ class Sampler:
 
 
 class UniformSampler(Sampler):
-    """McMahan et al. 2017: uniform without replacement among available."""
+    """McMahan et al. 2017: uniform without replacement among available —
+    the host face of ``sampler_device.uniform_select``."""
     name = "UniformSample"
 
     def sample(self, *, avail, m, rng, **_):
-        idx = np.flatnonzero(avail)
-        m = min(m, len(idx))
-        return np.sort(rng.choice(idx, size=m, replace=False))
-
-
-def _size_weights(w: np.ndarray, k: int) -> np.ndarray | None:
-    """Normalized data-size weights for a without-replacement draw of k, or
-    None (= uniform fallback) when the weights are degenerate: all zero
-    (``w / w.sum()`` would be NaN and ``rng.choice`` would raise) or with
-    fewer than k nonzero entries (``rng.choice`` cannot fill k slots from a
-    zero-mass support)."""
-    s = w.sum()
-    if s <= 0 or np.count_nonzero(w) < k:
-        return None
-    return w / s
+        avail = np.asarray(avail, bool)
+        if not avail.any():
+            return _EMPTY
+        m = int(min(m, avail.sum()))
+        s = uniform_select(_draw_key(rng), jnp.asarray(avail), m)
+        return np.flatnonzero(np.asarray(s))
 
 
 class MDSampler(Sampler):
     """Li et al. 2020: probability proportional to local data size (with
     replacement in theory; we draw without replacement by weight, the common
-    implementation), among available clients.  Degenerate all-zero data
-    sizes fall back to uniform (``_size_weights``)."""
+    implementation), among available clients — the host face of
+    ``sampler_device.md_select``, whose log-weight floor handles degenerate
+    all-zero data sizes as a uniform draw."""
     name = "MDSample"
 
     def sample(self, *, avail, m, rng, data_sizes=None, **_):
-        idx = np.flatnonzero(avail)
-        m = min(m, len(idx))
-        w = _size_weights(np.asarray(data_sizes, float)[idx], m)
-        return np.sort(rng.choice(idx, size=m, replace=False, p=w))
+        avail = np.asarray(avail, bool)
+        if not avail.any():
+            return _EMPTY
+        m = int(min(m, avail.sum()))
+        s = md_select(_draw_key(rng), jnp.asarray(data_sizes, jnp.float32),
+                      jnp.asarray(avail), m)
+        return np.flatnonzero(np.asarray(s))
 
 
 class PowerOfChoiceSampler(Sampler):
-    """Cho et al. 2020: sample a candidate set by data size, then keep the
-    top-m highest local loss."""
+    """Cho et al. 2020: sample a candidate set by data size (the shared
+    Gumbel top-k draw), then keep the top-m highest local loss."""
     name = "Power-of-Choice"
     needs_losses = True
 
@@ -82,151 +102,36 @@ class PowerOfChoiceSampler(Sampler):
         self.d_factor = d_factor
 
     def sample(self, *, avail, m, rng, data_sizes=None, losses=None, **_):
-        idx = np.flatnonzero(avail)
-        m = min(m, len(idx))
-        d = min(len(idx), max(m, self.d_factor * m))
-        w = _size_weights(np.asarray(data_sizes, float)[idx], d)
-        cand = rng.choice(idx, size=d, replace=False, p=w)
-        order = np.argsort(-np.asarray(losses)[cand])
+        avail = np.asarray(avail, bool)
+        if not avail.any():
+            return _EMPTY
+        m = int(min(m, avail.sum()))
+        d = int(min(avail.sum(), max(m, self.d_factor * m)))
+        cand_mask = gumbel_topk_select(
+            _draw_key(rng), log_size_weights(data_sizes),
+            jnp.asarray(avail), d)
+        cand = np.flatnonzero(np.asarray(cand_mask))
+        order = np.argsort(-np.asarray(losses, float)[cand], kind="stable")
         return np.sort(cand[order[:m]])
-
-
-# -------------------------------------------------------------------- FedGS
-def fedgs_solve(q: jax.Array, avail: jax.Array, *, m: int, max_sweeps: int):
-    """Greedy + best-swap local search on  max s^T Q s,  |s| = m,  s <= avail.
-
-    Pure (unjitted) so it can be inlined into larger jit programs — the
-    per-round host path wraps it as ``_fedgs_solve`` below; the scan engine
-    (``repro.fed.scan_engine``) and the production dry-run
-    (``repro.launch.fedsim.graph_pipeline``) call it directly inside their
-    own jit scopes.  If fewer than ``m`` clients are available it selects all
-    of them (|S| = min(m, |A|)).
-
-    q: (N, N) symmetric with diagonal = -z (counts penalty).
-    Returns s (N,) bool.
-    """
-    n = q.shape[0]
-    neg = jnp.float32(-1e18)
-
-    # ---------------- greedy construction --------------------------------
-    def greedy_step(carry, _):
-        s, r = carry                       # s: (N,) bool, r_k = sum_{i in S} Q_ik
-        gain = q.diagonal() + 2.0 * r      # marginal gain of adding k
-        gain = jnp.where(s | ~avail, neg, gain)
-        k = jnp.argmax(gain)
-        ok = gain[k] > neg / 2             # no addable client left => no-op
-        s = s.at[k].set(ok | s[k])
-        r = r + jnp.where(ok, q[k], 0.0)
-        return (s, r), None
-
-    s0 = jnp.zeros((n,), bool)
-    r0 = jnp.zeros((n,), jnp.float32)
-    (s, r), _ = jax.lax.scan(greedy_step, (s0, r0), None, length=m)
-
-    # ---------------- best-swap local search -----------------------------
-    diag = q.diagonal()
-
-    def sweep(carry, _):
-        s, r = carry
-        # delta(i -> j) = -2 r_i + Q_ii + 2 (r_j - Q_ij) + Q_jj
-        out_term = (-2.0 * r + diag)                          # (N,) for i in S
-        in_term = (2.0 * r + diag)                            # (N,) for j notin S
-        delta = out_term[:, None] + in_term[None, :] - 2.0 * q
-        delta = jnp.where(s[:, None], delta, neg)             # i must be in S
-        delta = jnp.where((~s & avail)[None, :], delta, neg)  # j must be addable
-        flat = jnp.argmax(delta)
-        i, j = flat // n, flat % n
-        best = delta[i, j]
-
-        def do_swap(args):
-            s, r = args
-            s2 = s.at[i].set(False).at[j].set(True)
-            r2 = r - q[i] + q[j]
-            return s2, r2
-
-        s, r = jax.lax.cond(best > 1e-9, do_swap, lambda a: a, (s, r))
-        return (s, r), best
-
-    (s, r), _ = jax.lax.scan(sweep, (s, r), None, length=max_sweeps)
-    return s
-
-
-# jit'd entry point for the per-round host path (FedGSSampler.sample).
-_fedgs_solve = partial(jax.jit, static_argnames=("m", "max_sweeps"))(fedgs_solve)
-
-
-def fedgs_select(h: jax.Array, counts: jax.Array, avail: jax.Array,
-                 alpha: jax.Array, *, m: int, max_sweeps: int,
-                 m_target: int | None = None):
-    """Eq. 14/16 end-to-end: build Q from (H, counts) and run the solver.
-
-    Pure and float32 throughout — the ONE q-construction both the host
-    sampler and the scan engine (repro.fed.scan_engine) trace, so greedy
-    argmax near-ties resolve identically on both paths.  ``m`` is the solver
-    budget (min(M, |A_t|) on the host path); ``m_target`` is the M used in
-    the count-balance penalty z (defaults to ``m``).
-    """
-    n = h.shape[0]
-    mt = m if m_target is None else m_target
-    z = 2.0 * (counts - counts.mean() - mt / n) + 1.0
-    q = (alpha / n) * h - jnp.diag(z)
-    q = 0.5 * (q + q.T)                               # symmetrize (H should be)
-    return fedgs_solve(q.astype(jnp.float32), avail, m=m, max_sweeps=max_sweeps)
-
-
-_fedgs_select = partial(jax.jit, static_argnames=("m", "max_sweeps",
-                                                  "m_target"))(fedgs_select)
-
-
-# ------------------------------------------- device-side baseline sampling
-def gumbel_topk_select(key: jax.Array, log_weights: jax.Array,
-                       avail: jax.Array, m: int) -> jax.Array:
-    """Weighted sampling WITHOUT replacement among available clients, fully
-    on-device (Gumbel top-k): adding i.i.d. Gumbel noise to log-weights and
-    taking the top-m reproduces successive draws without replacement with
-    probabilities proportional to the weights.  With uniform weights this is
-    ``UniformSampler``; with ``log(data_sizes)`` it is ``MDSampler`` — the
-    jit-compatible counterparts used inside ``repro.fed.scan_engine``.
-
-    Returns s (N,) bool with exactly min(m, |avail|) True entries.
-    """
-    g = jax.random.gumbel(key, log_weights.shape, dtype=jnp.float32)
-    scores = jnp.where(avail, log_weights + g, -jnp.inf)
-    _, idx = jax.lax.top_k(scores, m)
-    valid = avail[idx]                      # fewer than m available -> drop pads
-    s = jnp.zeros(log_weights.shape, bool)
-    return s.at[idx].set(valid)
-
-
-def uniform_select(key, avail, m: int):
-    """Device-side UniformSampler: uniform without replacement among A_t."""
-    return gumbel_topk_select(key, jnp.zeros(avail.shape, jnp.float32), avail, m)
-
-
-def md_select(key, data_sizes, avail, m: int):
-    """Device-side MDSampler: without replacement, P(k) ∝ n_k, among A_t.
-
-    The ``maximum(·, 1e-12)`` floor is the degenerate-weight guard: all-zero
-    data sizes give EQUAL (finite) log-weights — uniform sampling — instead
-    of the NaNs a ``w / w.sum()`` normalization would produce, and
-    zero-size clients keep a finite score so they can still fill the mask
-    when fewer than m positive-size clients are available (the host
-    ``MDSampler``/Power-of-Choice guard is ``_size_weights``)."""
-    w = jnp.log(jnp.maximum(data_sizes.astype(jnp.float32), 1e-12))
-    return gumbel_topk_select(key, w, avail, m)
 
 
 @dataclass
 class FedGSSampler(Sampler):
-    """The paper's method.  alpha weighs graph dispersion vs count balance."""
+    """The paper's method.  alpha weighs graph dispersion vs count balance;
+    ``solver_backend`` dispatches the Eq. 16 solve (``ref`` | ``pallas`` —
+    bit-identical selected sets, tiled kernels for large N)."""
     alpha: float = 1.0
     max_sweeps: int = 64
+    solver_backend: str = "ref"
 
     name = "FedGS"
 
     def __post_init__(self):
         self.name = f"FedGS(alpha={self.alpha})"
         self._h = None
+        if self.solver_backend not in BACKENDS:
+            raise ValueError(f"solver_backend must be one of {BACKENDS}, "
+                             f"not {self.solver_backend!r}")
 
     def set_graph(self, h: np.ndarray):
         """Install the (finite-capped) shortest-path matrix H.
@@ -247,7 +152,8 @@ class FedGSSampler(Sampler):
         s = _fedgs_select(jnp.asarray(self._h),
                           jnp.asarray(counts, jnp.float32),
                           jnp.asarray(avail), jnp.float32(self.alpha),
-                          m=m_eff, max_sweeps=self.max_sweeps, m_target=m)
+                          m=m_eff, max_sweeps=self.max_sweeps, m_target=m,
+                          backend=self.solver_backend)
         return np.flatnonzero(np.asarray(s))
 
 

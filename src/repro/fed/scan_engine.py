@@ -36,13 +36,15 @@ Seed streams (parity with FLEngine)
   step -> Bernoulli -> force-one), and because every family compiles to the
   same ``lax.switch`` program, cells of DIFFERENT scenario families —
   legacy periodic tables, Gilbert–Elliott churn, cluster outages, drift,
-  deadlines — vmap-batch through one ``run_batch`` program.  Baseline
-  samplers run on-device via Gumbel top-k
-  (``core.sampler.uniform_select`` / ``md_select``); Power-of-Choice draws
-  its d·m candidate set the same way, probes the global model's loss on each
-  candidate's local data in-scan, and keeps the top-m; FedGS reuses the same
-  deterministic ``fedgs_solve`` as the host path, so FedGS cells match the
-  host engine's sampled sets exactly.
+  deadlines — vmap-batch through one ``run_batch`` program.  The SAMPLER is
+  the same kind of per-cell switch (``core.sampler_device``): each cell
+  carries a ``SamplerProcess`` params pytree + in-scan state, and the one
+  ``make_sampler_step`` program dispatches Uniform / MD (Gumbel top-k),
+  Power-of-Choice (d·m Gumbel candidates + in-scan loss probe + top-m
+  keep) and FedGS (the deterministic ``fedgs_solve``, so FedGS cells match
+  the host engine's sampled sets exactly; ``ScanConfig.solver_backend``
+  routes the Eq. 16 solve through the tiled Pallas kernels) — so
+  MIXED-SAMPLER cell batches execute as one XLA program too.
 
 Dynamic 3DG
   With ``graph_refresh_every > 0`` the 3DG is maintained *inside* the scan:
@@ -74,15 +76,16 @@ from repro.core.availability_device import AvailabilityProcess, proc_draw
 from repro.core.graph_device import (
     BACKENDS, GraphConfig, build_h, cap_and_normalize,
 )
-from repro.core.sampler import (
-    fedgs_select, gumbel_topk_select, md_select, uniform_select,
+from repro.core.sampler_device import (
+    FAMILIES, SamplerProcess, make_sampler_process, make_sampler_step,
+    select_k,
 )
 from repro.data.fed_dataset import FedDataset
 from repro.fed.client import make_local_trainer
 from repro.fed.models import FedModel
 from repro.fed.server import aggregate
 
-SAMPLERS = ("fedgs", "uniform", "md", "poc")
+SAMPLERS = FAMILIES            # ("fedgs", "uniform", "md", "poc")
 
 
 @dataclass(frozen=True)
@@ -107,6 +110,7 @@ class ScanConfig:
     graph_eps: float = 0.1
     graph_sigma2: float = 0.01
     graph_backend: str = "ref"     # ref | pallas (dynamic-3DG rebuild path)
+    solver_backend: str = "ref"    # ref | pallas (FedGS Eq. 16 solve)
     probe_size: int = 64
     probe_seed: int = 777
 
@@ -114,9 +118,10 @@ class ScanConfig:
         if self.sampler not in SAMPLERS:
             raise ValueError(f"scan engine supports {SAMPLERS}, "
                              f"not {self.sampler!r}")
-        if self.graph_backend not in BACKENDS:
-            raise ValueError(f"graph_backend must be one of {BACKENDS}, "
-                             f"not {self.graph_backend!r}")
+        for knob in ("graph_backend", "solver_backend"):
+            if getattr(self, knob) not in BACKENDS:
+                raise ValueError(f"{knob} must be one of {BACKENDS}, "
+                                 f"not {getattr(self, knob)!r}")
 
 
 # --------------------------------------------------------------- host helpers
@@ -234,40 +239,29 @@ def _build_simulate(ds: FedDataset, model: FedModel, cfg: ScanConfig,
     def embed_mean(stacked):
         return jax.vmap(lambda p: jnp.mean(model.embed(p, probe), 0))(stacked)
 
-    def select_k(s, k):
-        """Mask (N,) bool -> (sorted selected indices (k,), valid (k,))."""
-        order = jnp.argsort(jnp.where(s, jnp.arange(n), n + jnp.arange(n)))
-        sel = order[:k]
-        return sel, s[sel]
-
     def select(s):
         return select_k(s, m)
 
-    if cfg.sampler == "poc":
-        d_cand = int(min(n, max(m, cfg.poc_d_factor * m)))
-        log_sizes = jnp.log(jnp.maximum(sizes_f, 1e-12))
+    d_cand = int(min(n, max(m, cfg.poc_d_factor * m)))
 
-        def probe_losses(params, idx, keys):
-            """Global-model loss on a probe batch of each candidate's local
-            data — the in-scan analogue of fed.client.make_loss_prober."""
-            def one(x, y, n_k, key):
-                b = jax.random.randint(key, (cfg.poc_probe,), 0,
-                                       jnp.maximum(n_k, 1))
-                return model.loss(params, x[b], y[b])
-            return jax.vmap(one)(xs[idx], ys[idx], sizes_i[idx], keys)
+    def probe_losses(inputs, idx, keys):
+        """Global-model loss on a probe batch of each candidate's local
+        data — the in-scan analogue of fed.client.make_loss_prober (the
+        PoC branch of the sampler switch calls this)."""
+        params = inputs["params"]
 
-        def poc_select(params, skey, avail):
-            """Cho et al. 2020 on-device: d·m candidates by data size
-            (Gumbel top-k), then keep the top-m highest-loss candidates."""
-            cand = gumbel_topk_select(skey, log_sizes, avail, d_cand)
-            cidx, cvalid = select_k(cand, d_cand)
-            losses = probe_losses(
-                params, cidx,
-                jax.random.split(jax.random.fold_in(skey, 1), d_cand))
-            _, kk = jax.lax.top_k(jnp.where(cvalid, losses, -jnp.inf), m)
-            # cidx entries are distinct, so invalid slots never overwrite a
-            # kept candidate
-            return jnp.zeros((n,), bool).at[cidx[kk]].set(cvalid[kk])
+        def one(x, y, n_k, key):
+            b = jax.random.randint(key, (cfg.poc_probe,), 0,
+                                   jnp.maximum(n_k, 1))
+            return model.loss(params, x[b], y[b])
+        return jax.vmap(one)(xs[idx], ys[idx], sizes_i[idx], keys)
+
+    # the ONE sampler step — lax.switch over the cell's family index, so
+    # cells of DIFFERENT samplers batch through one run_batch program
+    # (core/sampler_device.make_sampler_step)
+    sampler_step = make_sampler_step(
+        n, m, max_sweeps=cfg.max_sweeps, d_cand=d_cand,
+        probe_losses=probe_losses, solver_backend=cfg.solver_backend)
 
     def simulate(cell):
         key0 = cell["key"]
@@ -288,7 +282,7 @@ def _build_simulate(ds: FedDataset, model: FedModel, cfg: ScanConfig,
             h0 = cell["h"]
 
         def step(carry, sx):
-            params, counts, h, emb, pstate = carry
+            params, counts, h, emb, pstate, sstate = carry
             t, lr = sx["t"], sx["lr"]
             key = jax.random.fold_in(key0, t)
 
@@ -302,19 +296,13 @@ def _build_simulate(ds: FedDataset, model: FedModel, cfg: ScanConfig,
                     cell["proc"], pstate,
                     jax.random.fold_in(cell["avail_key"], t), t)
 
-            # 2. sampler: S_t subset of A_t, |S_t| = min(M, |A_t|)
-            if cfg.sampler == "fedgs":
-                s = fedgs_select(h, counts, avail, cell["alpha"],
-                                 m=m, max_sweeps=cfg.max_sweeps)
-            elif cfg.sampler == "uniform":
-                skey = jax.random.fold_in(cell["sampler_key"], t)
-                s = uniform_select(skey, avail, m)
-            elif cfg.sampler == "md":
-                skey = jax.random.fold_in(cell["sampler_key"], t)
-                s = md_select(skey, sizes_f, avail, m)
-            else:
-                skey = jax.random.fold_in(cell["sampler_key"], t)
-                s = poc_select(params, skey, avail)
+            # 2. sampler: S_t subset of A_t, |S_t| = min(M, |A_t|) — the
+            # switch step dispatches on the cell's family; the sampler
+            # state rides the scan carry like the availability state
+            skey = jax.random.fold_in(cell["sampler_key"], t)
+            s, sstate = sampler_step(
+                cell["sampler"], sstate, skey,
+                {"h": h, "counts": counts, "params": params}, avail, t)
             sel, valid = select(s)
 
             # 3. vmap'd local training on the M gathered clients
@@ -352,14 +340,15 @@ def _build_simulate(ds: FedDataset, model: FedModel, cfg: ScanConfig,
             cvar = jnp.sum((counts - counts.mean()) ** 2) / max(n - 1, 1)
             out = {"val_loss": vl, "val_acc": va, "count_var": cvar,
                    "sel": sel.astype(jnp.int32), "valid": valid}
-            return (params, counts, h, emb, pstate), out
+            return (params, counts, h, emb, pstate, sstate), out
 
         sxs = {"t": jnp.arange(cfg.rounds), "lr": lrs}
         if use_masks:
             sxs["mask"] = cell["masks"]
         pstate0 = cell.get("proc_state", {})
-        (params, counts, _, _, _), traj = jax.lax.scan(
-            step, (params0, counts0, h0, emb0, pstate0), sxs)
+        sstate0 = cell.get("sampler_state", {})
+        (params, counts, _, _, _, _), traj = jax.lax.scan(
+            step, (params0, counts0, h0, emb0, pstate0, sstate0), sxs)
         return {"params": params, "counts": counts, **traj}
 
     return simulate
@@ -384,7 +373,8 @@ class ScanEngine:
              process: Optional[AvailabilityProcess] = None,
              masks: Optional[np.ndarray] = None, alpha: float = 1.0,
              h: Optional[np.ndarray] = None, avail_seed: int = 1234,
-             sampler_seed: Optional[int] = None) -> dict:
+             sampler_seed: Optional[int] = None,
+             sampler_process: Optional[SamplerProcess] = None) -> dict:
         """One sweep cell = (seed, availability, sampler params) pytree.
 
         Mask path (``use_masks=True``): pass ``masks`` (rounds, N), e.g. from
@@ -395,9 +385,15 @@ class ScanEngine:
         (``init(PRNGKey(avail_seed))``) and per-round draws use the
         ``fold_in(avail_seed, t)`` jax stream.  Cells of different scenario
         families batch together in ``run_batch``.
+
+        The SAMPLER is a per-cell choice too: ``sampler_process`` (any
+        ``core.sampler_device.SamplerProcess``; defaults to the engine-level
+        ``cfg.sampler`` family with this cell's ``alpha``) compiles to a
+        ``lax.switch`` index, so cells of different samplers batch through
+        one ``run_batch`` program.  Because every branch traces, EVERY cell
+        carries the full (N, N) ``h`` (zeros when no FedGS cell needs it).
         """
-        c: dict = {"key": jax.random.PRNGKey(seed),
-                   "alpha": jnp.float32(alpha)}
+        c: dict = {"key": jax.random.PRNGKey(seed)}
         if self.use_masks:
             assert masks is not None and masks.shape == (self.cfg.rounds, self.n)
             c["masks"] = jnp.asarray(masks, bool)
@@ -409,16 +405,21 @@ class ScanEngine:
             c["avail_key"] = jax.random.PRNGKey(avail_seed)
             c["proc"] = process.params()
             c["proc_state"] = process.init(c["avail_key"])
-        if self.cfg.sampler in ("uniform", "md", "poc"):
-            c["sampler_key"] = jax.random.PRNGKey(
-                seed + 0x5E1EC7 if sampler_seed is None else sampler_seed)
+        sproc = sampler_process if sampler_process is not None else \
+            make_sampler_process(self.cfg.sampler, alpha=alpha,
+                                 d_factor=self.cfg.poc_d_factor)
+        c["sampler"] = sproc.params(data_sizes=self.ds.sizes)
+        c["sampler_key"] = jax.random.PRNGKey(
+            seed + 0x5E1EC7 if sampler_seed is None else sampler_seed)
+        c["sampler_state"] = sproc.init(c["sampler_key"])
         if self.cfg.graph_refresh_every > 0:
             c["init_key"] = jax.random.PRNGKey(seed + 778)
-        elif self.cfg.sampler == "fedgs":
-            assert h is not None, "static FedGS cell needs a normalized H"
+        elif h is not None:
             c["h"] = jnp.asarray(h, jnp.float32)
         else:
-            c["h"] = jnp.zeros((1, 1), jnp.float32)
+            assert sproc.family != "fedgs", \
+                "static FedGS cell needs a normalized H"
+            c["h"] = jnp.zeros((self.n, self.n), jnp.float32)
         return c
 
     # -------------------------------------------------------------- runs

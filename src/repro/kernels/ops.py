@@ -18,6 +18,10 @@ from repro.kernels.floyd_warshall import floyd_warshall_pallas, TILE
 from repro.kernels.pairwise_similarity import (
     similarity_pallas, adjacency_pallas, TILE_N, TILE_K,
 )
+from repro.kernels.solver import (
+    NEG, SWAP_TM, SWAP_TN, TILE_Q, TILE_V,
+    masked_argmax_pallas, qbuild_pallas, swap_gain_pallas,
+)
 from repro.kernels.window_attention import window_attention_pallas
 
 
@@ -96,6 +100,68 @@ def build_3dg_kernel(u: jax.Array, *, eps: float = 0.1, sigma2: float = 0.01,
     r = similarity_to_adjacency(v, eps=eps, sigma2=sigma2, interpret=interpret)
     h = floyd_warshall(r, interpret=interpret)
     return v, r, h
+
+
+# ------------------------------------------------------------ FedGS solver
+def solver_q_build(h: jax.Array, z: jax.Array, scale: jax.Array, *,
+                   interpret: bool | None = None) -> jax.Array:
+    """Fused Eq. 14/16 Q construction: ``sym(scale · H) − diag(z)`` for
+    (N, N) H and (N,) z, tiled so the symmetrization temporaries never
+    materialize.  Zero padding is exact (pad Q entries are 0, sliced off)."""
+    if interpret is None:
+        interpret = _on_cpu()
+    n = h.shape[0]
+    hp = _pad_to(h.astype(jnp.float32), TILE_Q, (0, 1))
+    zp = _pad_to(z.astype(jnp.float32).reshape(1, n), TILE_Q, (1,))
+    scal = jnp.asarray(scale, jnp.float32).reshape(1, 1)
+    q = qbuild_pallas(hp, zp, scal, interpret=interpret)
+    return q[:n, :n]
+
+
+def greedy_argmax(diag: jax.Array, r: jax.Array, mask: jax.Array, *,
+                  interpret: bool | None = None):
+    """Blocked masked argmax of the greedy gain ``diag + 2r`` over (N,)
+    vectors (mask True = addable).  Pads with mask False, so pad lanes carry
+    the −1e18 sentinel and can only win when EVERY entry is masked — in
+    which case the ref path's argmax also returns 0.  Returns scalar
+    (best gain, index)."""
+    if interpret is None:
+        interpret = _on_cpu()
+    n = diag.shape[0]
+    d = _pad_to(diag.astype(jnp.float32).reshape(1, n), TILE_V, (1,))
+    rr = _pad_to(r.astype(jnp.float32).reshape(1, n), TILE_V, (1,))
+    mk = _pad_to(mask.astype(jnp.float32).reshape(1, n), TILE_V, (1,))
+    val, idx = masked_argmax_pallas(d, rr, mk, interpret=interpret)
+    return val[0, 0], idx[0, 0]
+
+
+def swap_best(qs: jax.Array, a: jax.Array, b: jax.Array, *,
+              interpret: bool | None = None):
+    """Best-swap gain over the (M, N) selected-row panel.
+
+    qs = gathered selected rows of Q, a (M,) out-gain terms, b (N,) in-gain
+    terms (both already carry the −1e18 sentinel on invalid entries).  Pads
+    a/b with the sentinel and qs with 0, so pad cells sit at ≈ −2e18 and
+    never beat a real candidate.  Tile sizes scale with the panel — up to
+    (512, 4096) = 8 MiB f32, still under the VMEM budget — so the grid
+    stays small at datacenter N (every grid step re-touches the carried
+    panel in interpret mode, and on TPU fewer/larger DMAs pipeline
+    better); the reduction is tile-size-invariant (global-flat-index
+    tie-break), so this never changes the selected swap.  Returns scalar
+    (best delta, panel rank, column j)."""
+    if interpret is None:
+        interpret = _on_cpu()
+    m, n = qs.shape
+    tm = 512 if m >= 512 else SWAP_TM
+    tn = 4096 if n >= 4096 else SWAP_TN
+    qp = _pad_to(qs.astype(jnp.float32), tm, (0,))
+    qp = _pad_to(qp, tn, (1,))
+    ap = _pad_to(a.astype(jnp.float32).reshape(m, 1), tm, (0,), value=NEG)
+    bp = _pad_to(b.astype(jnp.float32).reshape(1, n), tn, (1,), value=NEG)
+    val, flat = swap_gain_pallas(qp, ap, bp, tile_m=tm, tile_n=tn,
+                                 interpret=interpret)
+    npad = qp.shape[1]
+    return val[0, 0], flat[0, 0] // npad, flat[0, 0] % npad
 
 
 # -------------------------------------------------------- window attention

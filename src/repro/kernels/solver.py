@@ -1,0 +1,186 @@
+"""Pallas kernels for the FedGS Eq. 16 p-dispersion solver.
+
+The reference solver (``core/sampler_device.fedgs_solve``) materializes a
+dense (N, N) swap-gain matrix every local-search sweep and re-scans it with
+a flat argmax — O(N²) HBM traffic per sweep that dominates the solve past
+N ≈ 1k.  These kernels tile the three hot stages so nothing bigger than a
+VMEM tile is ever materialized:
+
+``qbuild``      fused Q construction: ``Q = sym(alpha/N · H) − diag(z)``
+                built tile-by-tile from H and its transpose panel — the
+                (N, N) symmetrization temporaries of the ref path never
+                exist.  Grid (N/T, N/T), elementwise VPU work.
+
+``masked_argmax``  the greedy step: gain ``diag + 2r`` is computed, masked
+                (unavailable / already-selected / NaN ↦ −1e18) and arg-maxed
+                in one pass over (1, T) lane blocks, carrying the running
+                (best, index) pair across the sequential grid.  Strict ``>``
+                combining + first-position-within-block reproduces
+                ``jnp.argmax``'s first-max tie-break bit for bit.
+
+``swap_gain``   the best-swap sweep over the (m, N) PANEL of selected rows
+                only (the caller gathers the |S| ≤ m rows of Q): the tile
+                computes ``delta = a_i + b_j − 2 Q_ij`` in VREGs and reduces
+                to a running (best, flat index).  Ties combine on the GLOBAL
+                flat index (not grid order), matching the ref path's
+                row-major flat argmax exactly.
+
+All tiles are f32; min tile (8, 128) per the TPU tiling constraints — the
+(1, T) argmax rows and (1, 1) accumulator outputs are sub-tile but legal
+(the compiler pads sublanes).  The running-reduction outputs use a constant
+``index_map`` so the accumulator tile stays resident across the sequential
+grid (the same revisiting-accumulator pattern as ``pairwise_similarity``).
+On CPU the kernels run under ``interpret=True`` (see ``kernels/ops.py``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_Q = 512        # qbuild tile (T, T)
+TILE_V = 2048       # masked-argmax lane-block width (1, T)
+SWAP_TM = 128       # swap panel tile rows (selected-client ranks)
+SWAP_TN = 2048      # swap panel tile cols (incoming candidates)
+
+NEG = -1e18         # the solver's masked-entry sentinel (== sampler_device)
+
+
+# ------------------------------------------------------------------ qbuild
+def _qbuild_kernel(h_ref, ht_ref, z_ref, scal_ref, out_ref):
+    # Q_ij = 0.5 * ((a·H_ij − δ_ij z_i) + (a·H_ji − δ_ij z_j)) — the exact
+    # op order of the ref `q = a·H − diag(z); q = 0.5 (q + qᵀ)`, so the
+    # fused build is bit-identical to the ref path.
+    a = scal_ref[0, 0]
+    t = out_ref.shape[0]
+    bi, bj = pl.program_id(0), pl.program_id(1)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (t, t), 0) + bi * t
+    cols = jax.lax.broadcasted_iota(jnp.int32, (t, t), 1) + bj * t
+    zd = jnp.where(rows == cols, z_ref[...], 0.0)     # z block is col-aligned
+    t1 = a * h_ref[...] - zd
+    t2 = a * ht_ref[...].T - zd                       # ht block = H[bj, bi]
+    out_ref[...] = 0.5 * (t1 + t2)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def qbuild_pallas(h: jax.Array, z: jax.Array, scal: jax.Array, *,
+                  tile: int = TILE_Q, interpret: bool = False) -> jax.Array:
+    """h (N, N) f32, z (1, N) f32, scal (1, 1) = [alpha/N] -> Q (N, N) f32."""
+    n = h.shape[0]
+    assert n % tile == 0 and z.shape == (1, n), (h.shape, z.shape)
+    grid = (n // tile, n // tile)
+    return pl.pallas_call(
+        _qbuild_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((tile, tile), lambda i, j: (i, j)),
+                  pl.BlockSpec((tile, tile), lambda i, j: (j, i)),
+                  pl.BlockSpec((1, tile), lambda i, j: (0, j)),
+                  pl.BlockSpec((1, 1), lambda i, j: (0, 0))],
+        out_specs=pl.BlockSpec((tile, tile), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=interpret,
+    )(h, h, z, scal)
+
+
+# ----------------------------------------------------------- masked argmax
+def _masked_argmax_kernel(diag_ref, r_ref, mask_ref, val_ref, idx_ref):
+    b = pl.program_id(0)
+    t = diag_ref.shape[1]
+    gain = diag_ref[...] + 2.0 * r_ref[...]           # (1, T)
+    gain = jnp.where(mask_ref[...] > 0.5, gain, NEG)
+    gain = jnp.where(jnp.isnan(gain), NEG, gain)      # NaN guard (== ref)
+
+    @pl.when(b == 0)
+    def _init():
+        val_ref[0, 0] = -jnp.inf
+        idx_ref[0, 0] = 0
+
+    mx = jnp.max(gain)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (1, t), 1)
+    pos = jnp.min(jnp.where(gain == mx, cols, t))     # first max in block
+    # strict > + left-to-right grid order == jnp.argmax first-max tie-break
+    better = mx > val_ref[0, 0]
+    idx_ref[0, 0] = jnp.where(better, b * t + pos, idx_ref[0, 0])
+    val_ref[0, 0] = jnp.where(better, mx, val_ref[0, 0])
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def masked_argmax_pallas(diag: jax.Array, r: jax.Array, mask: jax.Array, *,
+                         tile: int = TILE_V, interpret: bool = False):
+    """Fused greedy gain + blocked masked argmax.
+
+    diag, r, mask: (1, N) f32 (mask 1.0 = addable).  Returns the running
+    ((1, 1) best gain, (1, 1) flat index) pair.
+    """
+    n = diag.shape[1]
+    assert n % tile == 0 and r.shape == diag.shape == mask.shape
+    return pl.pallas_call(
+        _masked_argmax_kernel,
+        grid=(n // tile,),
+        in_specs=[pl.BlockSpec((1, tile), lambda b: (0, b)),
+                  pl.BlockSpec((1, tile), lambda b: (0, b)),
+                  pl.BlockSpec((1, tile), lambda b: (0, b))],
+        out_specs=[pl.BlockSpec((1, 1), lambda b: (0, 0)),
+                   pl.BlockSpec((1, 1), lambda b: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((1, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((1, 1), jnp.int32)],
+        interpret=interpret,
+    )(diag, r, mask)
+
+
+# -------------------------------------------------------------- swap sweep
+def _swap_gain_kernel(a_ref, b_ref, q_ref, val_ref, flat_ref):
+    bi, bj = pl.program_id(0), pl.program_id(1)
+    tm, tn = q_ref.shape
+    np_cols = pl.num_programs(1) * tn
+    delta = (a_ref[...] + b_ref[...]) - 2.0 * q_ref[...]   # (tm,1)+(1,tn)
+    delta = jnp.where(jnp.isnan(delta), NEG, delta)        # NaN guard (== ref)
+
+    @pl.when((bi == 0) & (bj == 0))
+    def _init():
+        val_ref[0, 0] = -jnp.inf
+        flat_ref[0, 0] = 0
+
+    mx = jnp.max(delta)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (tm, tn), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (tm, tn), 1)
+    # global flat index over the (M, N) panel: tie-breaks must compare in
+    # panel-row-major order, NOT grid order — a later column tile can hold
+    # an earlier PANEL row than a tile already visited.
+    flat = (rows + bi * tm) * np_cols + (cols + bj * tn)
+    pos = jnp.min(jnp.where(delta == mx, flat, jnp.int32(2 ** 31 - 1)))
+    cur_v, cur_f = val_ref[0, 0], flat_ref[0, 0]
+    better = (mx > cur_v) | ((mx == cur_v) & (pos < cur_f))
+    flat_ref[0, 0] = jnp.where(better, pos, cur_f)
+    val_ref[0, 0] = jnp.where(better, mx, cur_v)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "tile_n", "interpret"))
+def swap_gain_pallas(qs: jax.Array, a: jax.Array, b: jax.Array, *,
+                     tile_m: int = SWAP_TM, tile_n: int = SWAP_TN,
+                     interpret: bool = False):
+    """Best swap over the selected-row panel.
+
+    qs (M, N) f32 = gathered selected rows of Q; a (M, 1) out-gain terms
+    (−1e18 on invalid/pad rows); b (1, N) in-gain terms (−1e18 on
+    non-addable/pad cols).  Returns ((1, 1) best delta, (1, 1) flat index
+    into the (M, N) panel).
+    """
+    m, n = qs.shape
+    assert m % tile_m == 0 and n % tile_n == 0, (qs.shape, tile_m, tile_n)
+    assert a.shape == (m, 1) and b.shape == (1, n)
+    grid = (m // tile_m, n // tile_n)
+    return pl.pallas_call(
+        _swap_gain_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((tile_m, 1), lambda i, j: (i, 0)),
+                  pl.BlockSpec((1, tile_n), lambda i, j: (0, j)),
+                  pl.BlockSpec((tile_m, tile_n), lambda i, j: (i, j))],
+        out_specs=[pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+                   pl.BlockSpec((1, 1), lambda i, j: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((1, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((1, 1), jnp.int32)],
+        interpret=interpret,
+    )(a, b, qs)

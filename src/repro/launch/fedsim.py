@@ -67,25 +67,30 @@ def round_step_factory(local_steps: int, batch: int):
 
 def graph_pipeline(feats, counts, avail, alpha, m_sel, max_sweeps: int = 32,
                    *, eps: float = 0.1, sigma2: float = 0.01,
-                   backend: str = "ref"):
+                   backend: str = "ref", solver_backend: str = "ref"):
     """Server-side FedGS pipeline as ONE jit program: V -> R -> H -> solve.
 
     Pure composition of the shared device-native 3DG stages
     (``core.graph_device``) with the shared Q-construction + solver
-    (``core.sampler.fedgs_select``) — NaN-safe by construction.
+    (``core.sampler_device.fedgs_select``) — NaN-safe by construction.
+    ``backend`` routes the graph build, ``solver_backend`` the Eq. 16
+    solve (fused Q build + tiled greedy/swap kernels at datacenter N).
     """
     from repro.core.graph_device import GraphConfig, build_h
-    from repro.core.sampler import fedgs_select
+    from repro.core.sampler_device import fedgs_select
     h = build_h(feats, GraphConfig(eps=eps, sigma2=sigma2), backend=backend)
     return fedgs_select(h, counts, avail, jnp.float32(alpha),
-                        m=m_sel, max_sweeps=max_sweeps)
+                        m=m_sel, max_sweeps=max_sweeps,
+                        backend=solver_backend)
 
 
 def run(n_clients: int, *, multi_pod: bool, sample_frac: float = 0.1,
         n_max: int = 512, local_steps: int = 10, batch: int = 10,
-        force: bool = False) -> dict:
+        force: bool = False, solver_backend: str = "ref") -> dict:
     mesh_tag = "pod2" if multi_pod else "pod1"
     key = f"fedsim__c{n_clients}__{mesh_tag}"
+    if solver_backend != "ref":
+        key += f"__{solver_backend}"
     out_path = RESULTS_DIR / f"{key}.json"
     if out_path.exists() and not force:
         return json.loads(out_path.read_text())
@@ -134,8 +139,9 @@ def run(n_clients: int, *, multi_pod: bool, sample_frac: float = 0.1,
         gargs = (jax.ShapeDtypeStruct((n_clients, CLASSES), jnp.float32),
                  jax.ShapeDtypeStruct((n_clients,), jnp.float32),
                  jax.ShapeDtypeStruct((n_clients,), jnp.bool_))
-        gj = jax.jit(lambda f, c, a: graph_pipeline(f, c, a, 1.0, m_sel),
-                     in_shardings=(None, None, None))
+        gj = jax.jit(lambda f, c, a: graph_pipeline(
+            f, c, a, 1.0, m_sel, solver_backend=solver_backend),
+            in_shardings=(None, None, None))
         with mesh:
             glow = gj.lower(*gargs)
             gcomp = glow.compile()
@@ -171,8 +177,13 @@ def main():
     ap.add_argument("--clients", type=int, default=4096)
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--force", action="store_true")
+    ap.add_argument("--solver-backend", default="ref",
+                    choices=("ref", "pallas"),
+                    help="route the server-side Eq. 16 solve through the "
+                         "tiled Pallas solver kernels")
     args = ap.parse_args()
-    rec = run(args.clients, multi_pod=args.multi_pod, force=args.force)
+    rec = run(args.clients, multi_pod=args.multi_pod, force=args.force,
+              solver_backend=args.solver_backend)
     raise SystemExit(0 if rec["ok"] else 1)
 
 

@@ -63,6 +63,9 @@ def main(argv=None):
                          "(GE/CLUSTER/DRIFT/DEADLINE)")
     ap.add_argument("--sampler", default="fedgs")
     ap.add_argument("--alpha", type=float, default=1.0)
+    ap.add_argument("--solver-backend", default="ref", choices=("ref", "pallas"),
+                    help="FedGS Eq. 16 solve: pure-jnp ref or the tiled "
+                         "Pallas kernels (large client counts)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default=None,
                     help="checkpoint path: saves params+counts every 10 "
@@ -81,7 +84,8 @@ def main(argv=None):
     sizes = np.full(n, pools.shape[1], np.float64)
     feats = client_unigrams(pools, vocab)
 
-    sampler = make_sampler(args.sampler, alpha=args.alpha) \
+    sampler = make_sampler(args.sampler, alpha=args.alpha,
+                           solver_backend=args.solver_backend) \
         if args.sampler == "fedgs" else make_sampler(args.sampler)
     if isinstance(sampler, FedGSSampler):
         _, _, h = graph_mod.build_3dg(feats, eps=0.1, sigma2=0.01)

@@ -26,7 +26,7 @@ def sym_matrix(draw, nmin=3, nmax=12):
 @settings(max_examples=25, deadline=None)
 @given(sym_matrix(), st.integers(1, 6), st.integers(0, 2 ** 31 - 1))
 def test_solver_invariants(q, m, seed):
-    """|S| = min(m, |A|), S subset of A, deterministic."""
+    """|S| = min(m, |A|) exactly, S subset of A, deterministic."""
     n = q.shape[0]
     rng = np.random.default_rng(seed)
     avail = rng.random(n) < 0.7
@@ -41,6 +41,34 @@ def test_solver_invariants(q, m, seed):
     sel = np.flatnonzero(s1)
     assert len(sel) == m_eff
     assert np.all(avail[sel])
+
+
+@settings(max_examples=15, deadline=None)
+@given(sym_matrix(3, 10), st.integers(1, 5), st.integers(0, 2 ** 31 - 1))
+def test_sweep_monotonicity(q, m, seed):
+    """The best-swap local search never decreases the Eq. 16 objective:
+    s^T Q s is non-decreasing in ``max_sweeps`` (every applied swap must
+    improve by > 1e-9; a no-swap sweep leaves s unchanged).  Tolerance
+    covers the float32 drift between the incrementally-maintained row sums
+    and the exact objective."""
+    n = q.shape[0]
+    rng = np.random.default_rng(seed)
+    q = q - np.diag(rng.normal(size=n))        # counts-penalty diagonal
+    avail = rng.random(n) < 0.7
+    if not avail.any():
+        avail[0] = True
+    m_eff = min(m, int(avail.sum()))
+    qj = jnp.asarray(q, jnp.float32)
+    q64 = np.asarray(qj, np.float64)
+
+    def objective(sweeps):
+        s = np.asarray(_fedgs_solve(qj, jnp.asarray(avail), m=m_eff,
+                                    max_sweeps=sweeps)).astype(np.float64)
+        return s @ q64 @ s
+
+    objs = [objective(k) for k in (0, 1, 2, 4, 8)]
+    for lo, hi in zip(objs, objs[1:]):
+        assert hi >= lo - 1e-3 * (1.0 + abs(lo)), objs
 
 
 @settings(max_examples=25, deadline=None)

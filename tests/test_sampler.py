@@ -157,6 +157,24 @@ def test_poc_sampler_degenerate_sizes_fall_back_to_uniform(rng):
     assert np.mean(losses[sel]) >= np.mean(losses) - 6
 
 
+def test_host_samplers_empty_availability_return_empty(rng):
+    """Regression (ISSUE 4 satellite): an all-False A_t used to reach
+    ``rng.choice`` on an empty support and raise; every host sampler now
+    returns an empty int array (the scan-path twins are covered in
+    tests/test_sampler_device.py)."""
+    n = 9
+    avail = np.zeros(n, bool)
+    sizes = np.ones(n)
+    for s in (UniformSampler(), MDSampler(), PowerOfChoiceSampler()):
+        sel = s.sample(avail=avail, m=3, rng=rng, data_sizes=sizes,
+                       losses=np.arange(n, dtype=float))
+        assert sel.size == 0 and sel.dtype.kind == "i", s.name
+    g = FedGSSampler(alpha=1.0, max_sweeps=4)
+    g.set_graph(np.ones((n, n)) - np.eye(n))
+    sel = g.sample(avail=avail, m=3, rng=rng, counts=np.zeros(n))
+    assert sel.size == 0
+
+
 def test_md_select_degenerate_sizes_device():
     """Device-side MD: the log-floor makes all-zero sizes EQUAL weights
     (uniform Gumbel top-k), never NaN; zero-size clients still fill the

@@ -1,0 +1,367 @@
+"""The device-native sampler subsystem (core/sampler_device.py):
+
+* solver backend parity — ``fedgs_solve(backend="pallas")`` selects the
+  BIT-identical set as the ref path at N ∈ {7, 100, 130, 1024}, including
+  the all-unavailable, |A| < m, exact-tie and NaN-poisoned edge cases, and
+  the fused pallas Q build inside ``fedgs_select`` preserves that parity;
+* host face — ``FedGSSampler.sample`` equals the device ``fedgs_select``
+  given the identical (normalized) H on BOTH backends, and the baseline
+  host classes return the device selects' sets;
+* the sampler switch — ``make_sampler_step`` reproduces each family's
+  direct select bit for bit from the same key, and ``SamplerProcess``
+  params/state follow the protocol;
+* distributional — ``gumbel_topk_select`` inclusion frequencies match the
+  MD without-replacement weights and ``uniform_select`` is uniform
+  (χ² tolerance), keys drawn from a ``fold_in`` stream per the DESIGN
+  assumption-log seed rules;
+* empty availability through the device path returns the empty selection.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sampler_device import (
+    FAMILIES, FedGSProcess, MDProcess, PoCProcess, SamplerProcess,
+    UniformProcess, _fedgs_select, _fedgs_solve, fedgs_select,
+    gumbel_topk_select, log_size_weights, make_sampler_process,
+    make_sampler_step, md_select, select_k, uniform_select,
+)
+
+
+def _rand_q(rng, n):
+    q = rng.random((n, n)).astype(np.float32)
+    q = 0.5 * (q + q.T)
+    q -= np.diag(rng.normal(size=n).astype(np.float32))
+    return q
+
+
+def _solve(q, avail, m, backend, sweeps=16):
+    return np.asarray(_fedgs_solve(jnp.asarray(q, jnp.float32),
+                                   jnp.asarray(avail), m=m,
+                                   max_sweeps=sweeps, backend=backend))
+
+
+# ------------------------------------------------------ solver backend parity
+@pytest.mark.parametrize("n", [7, 100, 130,
+                               pytest.param(1024, marks=pytest.mark.slow)])
+def test_solver_backend_parity_random(rng, n):
+    """pallas ≡ ref selected sets, bit for bit, at non-tile-multiple N."""
+    q = _rand_q(rng, n)
+    avail = rng.random(n) < 0.7
+    avail[0] = True
+    m = min(max(2, n // 8), int(avail.sum()))
+    s_ref = _solve(q, avail, m, "ref")
+    s_pal = _solve(q, avail, m, "pallas")
+    np.testing.assert_array_equal(s_ref, s_pal)
+    sel = np.flatnonzero(s_pal)
+    assert len(sel) == m and np.all(avail[sel])
+
+
+def test_solver_parity_all_unavailable(rng):
+    """Empty A_t: both backends return the empty selection (greedy adds
+    nothing, the sweep never fires)."""
+    q = _rand_q(rng, 33)
+    avail = np.zeros(33, bool)
+    for m in (0, 4):
+        s_ref = _solve(q, avail, m, "ref")
+        s_pal = _solve(q, avail, m, "pallas")
+        np.testing.assert_array_equal(s_ref, s_pal)
+        assert s_pal.sum() == 0
+
+
+def test_solver_parity_fewer_available_than_m(rng):
+    """|A| < m: both backends select exactly A."""
+    n = 40
+    q = _rand_q(rng, n)
+    avail = np.zeros(n, bool)
+    avail[[3, 17, 29]] = True
+    m = min(7, int(avail.sum()))          # the solver budget min(M, |A|)
+    s_ref = _solve(q, avail, m, "ref")
+    s_pal = _solve(q, avail, m, "pallas")
+    np.testing.assert_array_equal(s_ref, s_pal)
+    assert set(np.flatnonzero(s_pal)) == {3, 17, 29}
+
+
+def test_solver_parity_tied_gains(rng):
+    """Integer-valued Q forces EXACT float ties in both the greedy argmax
+    and the swap sweep — the blocked kernels must reproduce jnp.argmax's
+    first-max tie-break (panel-row-major flat order)."""
+    n = 52
+    q = rng.integers(0, 3, (n, n)).astype(np.float32)
+    q = 0.5 * (q + q.T)
+    avail = np.ones(n, bool)
+    for m in (3, 9):
+        np.testing.assert_array_equal(_solve(q, avail, m, "ref"),
+                                      _solve(q, avail, m, "pallas"))
+
+
+def test_solver_parity_nan_guard(rng):
+    """NaN-poisoned Q rows: both backends map NaN gains to the −1e18
+    sentinel (DESIGN assumption log #13), never select a NaN-scored
+    client pair, and agree bit for bit."""
+    n = 24
+    q = _rand_q(rng, n)
+    q[5, :] = np.nan
+    q[:, 5] = np.nan
+    avail = np.ones(n, bool)
+    s_ref = _solve(q, avail, 6, "ref")
+    s_pal = _solve(q, avail, 6, "pallas")
+    np.testing.assert_array_equal(s_ref, s_pal)
+    assert s_pal.sum() == 6
+
+
+def test_fedgs_select_fused_build_parity(rng):
+    """fedgs_select(backend="pallas") — fused Q build + tiled solve — is
+    bit-identical to the ref construction end to end."""
+    for n in (7, 60, 130):
+        h = rng.random((n, n)).astype(np.float32)
+        h = 0.5 * (h + h.T)
+        np.fill_diagonal(h, 0)
+        counts = rng.integers(0, 6, n).astype(np.float32)
+        avail = rng.random(n) < 0.8
+        avail[0] = True
+        m = min(5, int(avail.sum()))
+        args = (jnp.asarray(h), jnp.asarray(counts), jnp.asarray(avail),
+                jnp.float32(1.3))
+        s_ref = np.asarray(_fedgs_select(*args, m=m, max_sweeps=12,
+                                         m_target=5))
+        s_pal = np.asarray(_fedgs_select(*args, m=m, max_sweeps=12,
+                                         m_target=5, backend="pallas"))
+        np.testing.assert_array_equal(s_ref, s_pal, err_msg=f"n={n}")
+
+
+# -------------------------------------------------------------- host face
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_host_face_fedgs_equals_device_select(rng, backend):
+    """FedGSSampler.sample ≡ the device fedgs_select given identical Q
+    inputs (same normalized H, counts, availability) on both backends."""
+    from repro.core.graph_device import cap_and_normalize
+    from repro.core.sampler import FedGSSampler
+    n, m = 23, 5
+    h = rng.random((n, n)) * 3
+    h = 0.5 * (h + h.T)
+    np.fill_diagonal(h, 0)
+    counts = rng.integers(0, 4, n).astype(float)
+    avail = rng.random(n) < 0.7
+    avail[1] = True
+    sampler = FedGSSampler(alpha=1.5, max_sweeps=16, solver_backend=backend)
+    sampler.set_graph(h)
+    sel = sampler.sample(avail=avail, m=m, rng=rng, counts=counts)
+    hn = cap_and_normalize(jnp.asarray(h, jnp.float32))
+    m_eff = min(m, int(avail.sum()))
+    s = np.asarray(fedgs_select(hn, jnp.asarray(counts, jnp.float32),
+                                jnp.asarray(avail), jnp.float32(1.5),
+                                m=m_eff, max_sweeps=16, m_target=m,
+                                backend=backend))
+    np.testing.assert_array_equal(sel, np.flatnonzero(s))
+
+
+def test_host_baselines_return_device_sets(rng):
+    """Uniform/MD host faces are thin wrappers: same key -> same set as the
+    device selects (the duplicated numpy choice logic is gone)."""
+    from repro.core.sampler import MDSampler, UniformSampler
+    n, m = 18, 4
+    avail = np.zeros(n, bool)
+    avail[2:14] = True
+    sizes = rng.random(n) * 10
+    for sampler, direct in (
+            (UniformSampler(),
+             lambda k: uniform_select(k, jnp.asarray(avail), m)),
+            (MDSampler(),
+             lambda k: md_select(k, jnp.asarray(sizes, jnp.float32),
+                                 jnp.asarray(avail), m))):
+        host_rng = np.random.default_rng(7)
+        sel = sampler.sample(avail=avail, m=m, rng=host_rng,
+                             data_sizes=sizes)
+        key_rng = np.random.default_rng(7)
+        key = jax.random.PRNGKey(int(key_rng.integers(2 ** 31 - 1)))
+        np.testing.assert_array_equal(
+            sel, np.flatnonzero(np.asarray(direct(key))))
+
+
+# ---------------------------------------------------------- the switch step
+def _step_fixture(rng, n=20, m=5, d=10):
+    h = rng.random((n, n)).astype(np.float32)
+    h = 0.5 * (h + h.T)
+    np.fill_diagonal(h, 0)
+    sizes = jnp.asarray(rng.random(n) * 9 + 1, jnp.float32)
+    losses = jnp.asarray(rng.random(n), jnp.float32)
+    inputs = {"h": jnp.asarray(h / h.max()),
+              "counts": jnp.asarray(rng.integers(0, 3, n), jnp.float32),
+              "params": (), "losses": losses}
+    avail = jnp.asarray(rng.random(n) < 0.8).at[0].set(True)
+    step = make_sampler_step(n, m, max_sweeps=8, d_cand=d)
+    return step, inputs, avail, sizes, losses
+
+
+def test_sampler_step_matches_direct_selects(rng):
+    """Each switch branch reproduces its family's direct select bit for bit
+    from the same key (the switch is dispatch, not reimplementation)."""
+    step, inputs, avail, sizes, losses = _step_fixture(rng)
+    n, m, d = 20, 5, 10
+    key = jax.random.PRNGKey(11)
+    state = {}
+
+    def run(proc, data_sizes=None):
+        sp = proc.params(data_sizes=np.asarray(data_sizes)
+                         if data_sizes is not None else None, n_clients=n)
+        s, st = step(sp, state, key, inputs, avail, 0)
+        assert st == {}
+        return np.asarray(s)
+
+    np.testing.assert_array_equal(
+        run(UniformProcess()), np.asarray(uniform_select(key, avail, m)))
+    np.testing.assert_array_equal(
+        run(MDProcess(), sizes), np.asarray(md_select(key, sizes, avail, m)))
+    np.testing.assert_array_equal(
+        run(FedGSProcess(alpha=1.0)),
+        np.asarray(fedgs_select(inputs["h"], inputs["counts"], avail,
+                                jnp.float32(1.0), m=m, max_sweeps=8)))
+    # PoC: candidate draw on key, keep top-m of inputs["losses"][cand]
+    cand = gumbel_topk_select(key, log_size_weights(sizes), avail, d)
+    cidx, cvalid = select_k(cand, d)
+    _, kk = jax.lax.top_k(jnp.where(cvalid, losses[cidx], -jnp.inf), m)
+    want = np.asarray(jnp.zeros((n,), bool).at[cidx[kk]].set(cvalid[kk]))
+    np.testing.assert_array_equal(run(PoCProcess(), sizes), want)
+
+
+def test_sampler_step_traces_under_jit_and_vmap(rng):
+    """One switch program serves a BATCH of heterogeneous families."""
+    step, inputs, avail, sizes, _ = _step_fixture(rng)
+    n = 20
+    sps = [make_sampler_process(f, alpha=0.5).params(
+        data_sizes=np.asarray(sizes)) for f in FAMILIES]
+    batched = jax.tree_util.tree_map(lambda *x: jnp.stack(x), *sps)
+    keys = jax.random.split(jax.random.PRNGKey(3), len(FAMILIES))
+
+    run = jax.jit(jax.vmap(
+        lambda sp, k: step(sp, {}, k, inputs, avail, 0)[0]))
+    s_batch = np.asarray(run(batched, keys))
+    for i, sp in enumerate(sps):
+        s_single, _ = step(sp, {}, keys[i], inputs, avail, 0)
+        np.testing.assert_array_equal(s_batch[i], np.asarray(s_single),
+                                      err_msg=FAMILIES[i])
+        assert s_batch[i].sum() == min(5, int(np.asarray(avail).sum()))
+
+
+def test_sampler_process_protocol():
+    """params/init follow the uniform-pytree protocol; the factory matches
+    scan_engine.SAMPLERS; select() is the switch path."""
+    n = 9
+    sizes = np.arange(1.0, n + 1)
+    for name in FAMILIES:
+        proc = make_sampler_process(name, alpha=2.0)
+        sp = proc.params(data_sizes=sizes)
+        assert int(sp["family"]) == FAMILIES.index(name)
+        assert sp["log_sizes"].shape == (n,)
+        assert proc.init(jax.random.PRNGKey(0)) == {}
+    assert float(make_sampler_process("fedgs", alpha=2.0).params(
+        n_clients=n)["alpha"]) == 2.0
+    with pytest.raises(ValueError):
+        make_sampler_process("nope")
+    # the convenience select IS the switch path
+    proc = UniformProcess()
+    avail = jnp.ones(n, bool)
+    key = jax.random.PRNGKey(5)
+    s, _ = proc.select({}, key, {}, avail, 0, m=3)
+    np.testing.assert_array_equal(np.asarray(s),
+                                  np.asarray(uniform_select(key, avail, 3)))
+    # ... and data_sizes reaches the size-weighted families (an MDProcess
+    # select without sizes would silently draw uniformly)
+    s, _ = MDProcess().select({}, key, {}, avail, 0, m=3, data_sizes=sizes)
+    np.testing.assert_array_equal(
+        np.asarray(s),
+        np.asarray(md_select(key, jnp.asarray(sizes, jnp.float32),
+                             avail, 3)))
+
+
+# ------------------------------------------------------------ distributional
+def _md_inclusion_probs(w: np.ndarray, m: int) -> np.ndarray:
+    """Exact inclusion probabilities of a weighted without-replacement draw
+    of size m (enumerated over ordered prefixes; feasible for tiny n)."""
+    import itertools
+    n = len(w)
+    p = np.zeros(n)
+    for perm in itertools.permutations(range(n), m):
+        rem = w.sum()
+        prob = 1.0
+        for i in perm:
+            prob *= w[i] / rem
+            rem -= w[i]
+        for i in perm:
+            p[i] += prob
+    return p
+
+
+def _inclusion_counts(select_fn, n, draws, seed=0):
+    """Empirical inclusion counts over ``draws`` keys from the fold_in
+    stream (DESIGN assumption-log seed rules: independent per-draw keys
+    derive from one base key)."""
+    base = jax.random.PRNGKey(seed)
+    keys = jax.vmap(lambda i: jax.random.fold_in(base, i))(jnp.arange(draws))
+    masks = jax.jit(jax.vmap(select_fn))(keys)
+    return np.asarray(masks).sum(0)
+
+
+def _chi2(obs, expected):
+    keep = expected > 0
+    return float(((obs[keep] - expected[keep]) ** 2 / expected[keep]).sum())
+
+
+def test_gumbel_topk_frequencies_match_md_weights():
+    """gumbel_topk_select inclusion frequencies match the MD sampler's
+    without-replacement weights (χ² over the 5 clients, 3000 draws)."""
+    w = np.array([1.0, 2.0, 3.0, 5.0, 9.0])
+    n, m, draws = len(w), 2, 3000
+    avail = jnp.ones(n, bool)
+    lw = log_size_weights(w)
+    obs = _inclusion_counts(lambda k: gumbel_topk_select(k, lw, avail, m),
+                            n, draws)
+    exp = draws * _md_inclusion_probs(w, m)
+    assert obs.sum() == draws * m
+    assert _chi2(obs, exp) < 20.0, (obs, exp)
+
+
+def test_uniform_select_is_uniform():
+    """uniform_select inclusion is m/|A| on the available set, 0 elsewhere
+    (χ² tolerance, 3000 draws)."""
+    n, m, draws = 8, 2, 3000
+    avail_np = np.zeros(n, bool)
+    avail_np[1:7] = True
+    avail = jnp.asarray(avail_np)
+    obs = _inclusion_counts(lambda k: uniform_select(k, avail, m), n, draws)
+    assert obs[~avail_np].sum() == 0
+    exp = np.where(avail_np, draws * m / avail_np.sum(), 0.0)
+    assert _chi2(obs, exp) < 20.0, (obs, exp)
+
+
+@pytest.mark.slow
+def test_gumbel_topk_md_weights_high_precision():
+    """The 30k-draw, tighter-χ² version of the MD frequency test."""
+    w = np.array([1.0, 2.0, 3.0, 5.0, 9.0, 20.0])
+    n, m, draws = len(w), 3, 30000
+    avail = jnp.ones(n, bool)
+    lw = log_size_weights(w)
+    obs = _inclusion_counts(lambda k: gumbel_topk_select(k, lw, avail, m),
+                            n, draws, seed=1)
+    exp = draws * _md_inclusion_probs(w, m)
+    assert _chi2(obs, exp) < 15.0, (obs, exp)
+
+
+# -------------------------------------------------------- empty availability
+def test_device_selects_empty_availability():
+    """All-False A_t through the scan-path selects: every family returns
+    the empty selection mask (the engines' force-one floor never feeds
+    this, but the device functions must stay total)."""
+    n = 11
+    avail = jnp.zeros(n, bool)
+    key = jax.random.PRNGKey(0)
+    assert np.asarray(uniform_select(key, avail, 4)).sum() == 0
+    assert np.asarray(md_select(key, jnp.arange(n, dtype=jnp.float32),
+                                avail, 4)).sum() == 0
+    for backend in ("ref", "pallas"):
+        q = jnp.eye(n, dtype=jnp.float32)
+        assert np.asarray(_fedgs_solve(q, avail, m=0, max_sweeps=4,
+                                       backend=backend)).sum() == 0

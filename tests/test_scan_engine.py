@@ -215,6 +215,77 @@ def test_poc_batches_in_run_batch(synthetic_ds):
         np.testing.assert_allclose(b.val_loss, single.val_loss, atol=2e-6)
 
 
+def test_mixed_sampler_batch_equals_per_cell(synthetic_ds):
+    """THE sampler-subsystem acceptance: one vmapped program running a
+    Uniform + MD + PoC + FedGS cell batch (four different sampler families
+    behind the one lax.switch step) equals the four per-cell runs."""
+    from repro.core.sampler_device import make_sampler_process
+
+    ds = synthetic_ds
+    h = oracle_h(ds.opt_params)
+    eng = ScanEngine(ds, logistic_regression(),
+                     _scan_cfg(8, 6, sampler="fedgs"))
+    procs = [make_sampler_process(f, alpha=1.0)
+             for f in ("uniform", "md", "poc", "fedgs")]
+    cells = [eng.cell(seed=i, mode=_mode("LN", ds), sampler_process=p,
+                      h=h, avail_seed=60 + i)
+             for i, p in enumerate(procs)]
+    batch = eng.run_batch(cells)
+    for proc, cell, b in zip(procs, cells, batch):
+        single = eng.run(cell)
+        np.testing.assert_array_equal(b.sel, single.sel,
+                                      err_msg=proc.family)
+        np.testing.assert_array_equal(b.counts, single.counts)
+        np.testing.assert_allclose(b.val_loss, single.val_loss, atol=2e-6)
+        # every family respects the cardinality contract in-scan
+        assert np.all(b.valid.sum(1) <= eng.cfg.m)
+        assert np.isfinite(b.val_loss).all()
+
+
+def test_mixed_sampler_cells_match_per_family_engines(synthetic_ds):
+    """A cell's sampler_process overrides the engine default and reproduces
+    the run a cfg.sampler=<family> engine produces (same streams, same
+    program semantics) — the per-cell switch is pure dispatch."""
+    ds = synthetic_ds
+    h = oracle_h(ds.opt_params)
+    mode = _mode("LN", ds)
+    from repro.core.sampler_device import make_sampler_process
+    eng_mixed = ScanEngine(ds, logistic_regression(),
+                           _scan_cfg(6, 6, sampler="fedgs"))
+    # md (the weighted Gumbel stream) and poc (the probe-key stream) are the
+    # two branches with sampler randomness; uniform is md with equal weights
+    for family in ("md", "poc"):
+        eng_single = ScanEngine(ds, logistic_regression(),
+                                _scan_cfg(6, 6, sampler=family))
+        a = eng_mixed.run(eng_mixed.cell(
+            seed=2, mode=mode, h=h,
+            sampler_process=make_sampler_process(family)))
+        b = eng_single.run(eng_single.cell(seed=2, mode=mode, h=h))
+        np.testing.assert_array_equal(a.sel, b.sel, err_msg=family)
+        np.testing.assert_allclose(a.val_loss, b.val_loss, atol=2e-6)
+
+
+def test_scan_solver_backend_pallas_matches_ref(synthetic_ds):
+    """ScanConfig.solver_backend="pallas" routes the in-scan Eq. 16 solve
+    through the tiled solver kernels and reproduces the ref backend's
+    sampled sets bit for bit (the solver-parity contract composed into the
+    full scanned program)."""
+    ds = synthetic_ds
+    h = oracle_h(ds.opt_params)
+    mode = _mode("LN", ds)
+    hists = {}
+    for backend in ("ref", "pallas"):
+        eng = ScanEngine(ds, logistic_regression(),
+                         _scan_cfg(6, 6, sampler="fedgs",
+                                   solver_backend=backend))
+        hists[backend] = eng.run(eng.cell(seed=0, mode=mode, alpha=1.0, h=h))
+    np.testing.assert_array_equal(hists["ref"].sel, hists["pallas"].sel)
+    np.testing.assert_array_equal(hists["ref"].counts,
+                                  hists["pallas"].counts)
+    np.testing.assert_allclose(hists["ref"].val_loss,
+                               hists["pallas"].val_loss, atol=1e-6)
+
+
 def test_dynamic_3dg_pallas_backend(synthetic_ds):
     """ScanConfig.graph_backend="pallas" routes the in-scan rebuild through
     the tiled kernels (interpret mode on CPU) and matches the ref backend."""
