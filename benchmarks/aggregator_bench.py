@@ -1,0 +1,199 @@
+"""Aggregator-subsystem bench (fed/aggregator_device.py): the
+memory-rectified (N, P) panel kernel ref vs Pallas, plus the bias sweep the
+subsystem exists for.
+
+Part 1 — kernel scaling: for the ``memory`` family's hot path (masked
+scatter of the m sampled rows into the (N, P) update-memory panel + the
+staleness-weighted row reduction) each row times the pure-jnp ref against
+the fused Pallas kernel (``kernels/ops.memory_aggregate``) from identical
+inputs at N ∈ {256, 1024, 4096} × P tiers, asserting the scattered panel is
+BIT-identical and the reduction numerically equal (max |diff| recorded) —
+the same contract ``tests/test_aggregator_device.py`` pins at small N.  On
+CPU the Pallas path runs in interpret mode, where every grid step re-writes
+the (N, P) output (see DESIGN.md §12) — the ref column is expected to win
+here; on TPU the fusion removes one full panel round-trip per round.
+
+Part 2 — bias-vs-rounds sweep: memory-rectified FedGS vs plain (FedAvg)
+FedGS under the paper's MDF and YC availability modes, all four
+(aggregator × mode) cells as ONE mixed-aggregator ``run_batch`` program
+(the batching headline).  Rows record best/final loss and the final
+fairness metrics (count variance Eq. 6, Gini) per cell.
+
+Dumped to ``benchmarks/results/BENCH_aggregator.json`` so the aggregator
+trajectory accumulates across PRs (CI runs the quick pass).
+
+  PYTHONPATH=src python -m benchmarks.aggregator_bench [--quick|--full]
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results"
+BENCH_PATH = RESULTS / "BENCH_aggregator.json"
+
+
+def _time(fn, reps=2):
+    fn()                                  # compile / warm up
+    t0 = time.time()
+    for _ in range(reps):
+        fn()
+    return (time.time() - t0) / reps
+
+
+# ------------------------------------------------------- part 1: the kernel
+def _kernel_rows(quick: bool) -> list[dict]:
+    # the SHIPPED backends, not local copies: a ref-semantics change keeps
+    # this comparison honest
+    from repro.fed.aggregator_device import memory_scatter_reduce_ref
+    from repro.kernels.ops import memory_aggregate
+    _ref_apply = jax.jit(memory_scatter_reduce_ref)
+    pal = jax.jit(lambda a, b, c, d, e: memory_aggregate(a, b, c, d, e))
+    sizes = [(256, 512), (256, 2048), (1024, 512), (1024, 2048),
+             (4096, 512), (4096, 2048)]
+    if not quick:
+        sizes += [(4096, 8192), (16384, 2048)]
+    rng = np.random.default_rng(0)
+    rows = []
+    for n, p in sizes:
+        m = max(2, n // 10)
+        mem = jnp.asarray(rng.normal(size=(n, p)).astype(np.float32))
+        upd = jnp.asarray(rng.normal(size=(m, p)).astype(np.float32))
+        sel = jnp.asarray(rng.choice(n, size=m, replace=False), jnp.int32)
+        valid = jnp.asarray(rng.random(m) < 0.9)
+        w = jnp.asarray(rng.random(n).astype(np.float32))
+        w = w / w.sum()
+        reps = 2 if n * p <= 4096 * 2048 else 1
+
+        def run_ref():
+            a, b = _ref_apply(mem, upd, sel, valid, w)
+            return np.asarray(a), np.asarray(b)
+
+        def run_pal():
+            a, b = pal(mem, upd, sel, valid, w)
+            return np.asarray(a), np.asarray(b)
+
+        m_ref, r_ref = run_ref()
+        m_pal, r_pal = run_pal()
+        # the parity contract is load-bearing: CI must FAIL on a panel /
+        # padding regression, not bury it in the JSON
+        assert np.array_equal(m_ref, m_pal), \
+            f"scattered panels diverge at N={n}, P={p}"
+        maxdiff = float(np.max(np.abs(r_ref - r_pal)))
+        assert np.allclose(r_ref, r_pal, atol=1e-5, rtol=1e-5), \
+            f"reductions diverge at N={n}, P={p} (max |diff| {maxdiff})"
+        t_ref = _time(run_ref, reps=reps)
+        t_pal = _time(run_pal, reps=reps)
+        rows.append({"table": "aggregator_kernel", "n_clients": n, "p": p,
+                     "m": m, "ref_s": round(t_ref, 4),
+                     "pallas_s": round(t_pal, 4),
+                     "speedup": round(t_ref / max(t_pal, 1e-9), 2),
+                     "mem_bit_equal": True,
+                     "red_max_abs_diff": maxdiff})
+        print(f"[aggregator_bench] N={n:6d} P={p:5d} m={m:5d}: "
+              f"ref {t_ref:7.4f}s  pallas {t_pal:7.4f}s  "
+              f"({rows[-1]['speedup']:5.2f}x, red maxdiff {maxdiff:.1e})",
+              flush=True)
+    return rows
+
+
+# ---------------------------------------------------- part 2: the bias sweep
+def _bias_rows(quick: bool) -> list[dict]:
+    from repro.core.availability import make_mode
+    from repro.data.synthetic import make_synthetic
+    from repro.fed.aggregator_device import make_aggregator_process
+    from repro.fed.models import logistic_regression
+    from repro.fed.scan_engine import ScanConfig, ScanEngine, oracle_h
+
+    n = 30 if quick else 100
+    rounds = 40 if quick else 80
+    ds = make_synthetic(n_clients=n, alpha=0.5, beta=0.5, seed=0)
+    h = oracle_h(ds.opt_params)
+    cfg = ScanConfig(rounds=rounds, m=max(2, n // 5), local_steps=10,
+                     batch_size=10, lr=0.1, eval_every=1, sampler="fedgs",
+                     max_sweeps=16)
+    eng = ScanEngine(ds, logistic_regression(), cfg)
+    modes = {name: make_mode(name, n_clients=n, data_sizes=ds.sizes,
+                             label_sets=ds.label_sets(),
+                             num_labels=ds.num_classes, seed=99)
+             for name in ("MDF", "YC")}
+    grid = [(mname, aname) for mname in modes for aname in
+            ("fedavg", "memory")]
+    # the fedavg/memory pair under one mode SHARES seed + avail stream, so
+    # the deterministic FedGS sampler draws identical sets and the row pair
+    # isolates the aggregator's effect on the trajectory
+    cells = [eng.cell(seed=0, mode=modes[mname], alpha=1.0, h=h,
+                      aggregator_process=make_aggregator_process(aname),
+                      avail_seed=40 + sorted(modes).index(mname))
+             for (mname, aname) in grid]
+    t0 = time.time()
+    hists = eng.run_batch(cells)          # ONE mixed-aggregator program
+    wall = time.time() - t0
+    rows = []
+    for (mname, aname), hh in zip(grid, hists):
+        rows.append({"table": "aggregator_bias", "mode": mname,
+                     "aggregator": aname, "n_clients": n, "rounds": rounds,
+                     "best_loss": round(hh.best_loss, 4),
+                     "final_loss": round(float(hh.val_loss[-1]), 4),
+                     "final_count_var": round(float(hh.count_var[-1]), 3),
+                     "final_gini": round(float(hh.gini[-1]), 4),
+                     "batch_wall_s": round(wall, 2)})
+        print(f"[aggregator_bench] {mname:4s} x {aname:7s}: "
+              f"best {rows[-1]['best_loss']:.4f}  "
+              f"final {rows[-1]['final_loss']:.4f}  "
+              f"gini {rows[-1]['final_gini']:.3f}", flush=True)
+    return rows
+
+
+def run(quick: bool = True) -> list[dict]:
+    rows = _kernel_rows(quick) + _bias_rows(quick)
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    record = {"bench": "aggregator", "backend": jax.default_backend(),
+              "pallas_interpret": jax.default_backend() == "cpu",
+              "rows": rows}
+    BENCH_PATH.write_text(json.dumps(record, indent=1))
+    return rows
+
+
+def summarize(rows) -> list[str]:
+    out = ["", "== memory-rectified aggregation: ref vs pallas-fused "
+           "(N, P) panel =="]
+    out.append(f"{'N':>7s} {'P':>6s} {'M':>6s} {'ref (s)':>9s} "
+               f"{'pallas (s)':>11s} {'speedup':>8s} {'red maxdiff':>12s}")
+    for r in rows:
+        if r["table"] != "aggregator_kernel":
+            continue
+        out.append(f"{r['n_clients']:7d} {r['p']:6d} {r['m']:6d} "
+                   f"{r['ref_s']:9.4f} {r['pallas_s']:11.4f} "
+                   f"{r['speedup']:7.2f}x {r['red_max_abs_diff']:12.1e}")
+    out.append("")
+    out.append("== bias sweep: memory-rectified FedGS vs plain, one mixed-"
+               "aggregator batch ==")
+    out.append(f"{'mode':>5s} {'aggregator':>11s} {'best loss':>10s} "
+               f"{'final loss':>11s} {'count var':>10s} {'gini':>7s}")
+    for r in rows:
+        if r["table"] != "aggregator_bias":
+            continue
+        out.append(f"{r['mode']:>5s} {r['aggregator']:>11s} "
+                   f"{r['best_loss']:10.4f} {r['final_loss']:11.4f} "
+                   f"{r['final_count_var']:10.3f} {r['final_gini']:7.4f}")
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="the CI pass (default unless --full)")
+    ap.add_argument("--full", action="store_true",
+                    help="adds the N=16384 / P=8192 panels and the "
+                         "N=100, 80-round bias sweep")
+    args = ap.parse_args()
+    for line in summarize(run(quick=not args.full)):
+        print(line)

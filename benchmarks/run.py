@@ -17,8 +17,8 @@ import time
 RESULTS = pathlib.Path(__file__).resolve().parent / "results"
 
 SECTIONS = ["table2", "fig4", "table3", "table4", "dynamic", "scaling",
-            "engine", "availability", "kernels", "graph", "roofline",
-            "variants"]
+            "engine", "availability", "aggregator", "kernels", "graph",
+            "roofline", "variants"]
 
 
 def _section(name: str, quick: bool):
@@ -38,6 +38,8 @@ def _section(name: str, quick: bool):
         from benchmarks import engine_bench as m
     elif name == "availability":
         from benchmarks import availability_bench as m
+    elif name == "aggregator":
+        from benchmarks import aggregator_bench as m
     elif name == "kernels":
         from benchmarks import kernel_bench as m
     elif name == "graph":

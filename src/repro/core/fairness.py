@@ -1,7 +1,17 @@
-"""Fairness / long-term-bias metrics (paper Eq. 6, Fig. 4)."""
+"""Fairness / long-term-bias metrics (paper Eq. 6, Fig. 4).
+
+Each metric has a host (numpy, float64) face and a device twin
+(``*_device``, jnp float32, jit/vmap/scan-traceable) — the scan engine
+emits the device versions per round (``ScanHistory.count_var`` /
+``.gini``), the host engine and benchmarks use the numpy faces.  Parity is
+pinned by ``tests/test_scan_engine.py`` on integer and zero-count inputs
+(f32 vs f64 round-off only).
+"""
 from __future__ import annotations
 
 import numpy as np
+
+import jax.numpy as jnp
 
 
 def count_variance(counts: np.ndarray) -> float:
@@ -24,3 +34,28 @@ def gini(counts: np.ndarray) -> float:
         return 0.0
     cum = np.cumsum(v)
     return float((n + 1 - 2 * np.sum(cum) / cum[-1]) / n)
+
+
+# -------------------------------------------------------------- device twins
+def count_variance_device(counts) -> jnp.ndarray:
+    """The jnp twin of :func:`count_variance` — the EXACT expression the
+    scan engine used to inline (bit-identical count_var histories)."""
+    v = jnp.asarray(counts)
+    n = v.shape[-1]
+    return jnp.sum((v - v.mean()) ** 2) / max(n - 1, 1)
+
+
+def count_range_device(counts) -> jnp.ndarray:
+    v = jnp.asarray(counts)
+    return v.max() - v.min()
+
+
+def gini_device(counts) -> jnp.ndarray:
+    """The jnp twin of :func:`gini`; the zero-sum guard is a ``where`` over
+    a 1e-12-floored denominator (branchless, scan-safe)."""
+    v = jnp.sort(jnp.asarray(counts, jnp.float32))
+    n = v.shape[-1]
+    cum = jnp.cumsum(v)
+    tot = cum[-1]
+    g = (n + 1 - 2.0 * jnp.sum(cum) / jnp.maximum(tot, 1e-12)) / n
+    return jnp.where(tot > 0, g, 0.0)

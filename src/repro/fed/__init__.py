@@ -1,6 +1,10 @@
 from repro.fed.models import logistic_regression, small_cnn, FedModel
 from repro.fed.client import make_local_trainer, make_loss_prober
-from repro.fed.server import aggregate
+from repro.fed.server import ServerAggregator, aggregate
+from repro.fed.aggregator_device import (
+    AggregatorProcess, FedAvgProcess, FedAvgMProcess, FedAdamProcess,
+    FedProxWProcess, MemoryProcess, make_aggregator_process,
+)
 from repro.fed.engine import FLConfig, FLEngine
 from repro.fed.scan_engine import (
     ScanConfig, ScanEngine, ScanHistory, oracle_h, precompute_masks,

@@ -4,7 +4,9 @@ Per round t:
   1. availability mode draws A_t            (independent seed stream)
   2. sampler picks S_t ⊆ A_t, |S_t| ≤ M     (FedGS solves Eq. 16)
   3. broadcast θ^t; vmap'd local training (E steps SGD, optional prox)
-  4. aggregate via Eq. 18 weights n_k/Σn
+  4. server update: any ``AggregatorProcess`` family via the shared device
+     apply (``fed/server.py::ServerAggregator``; default = Eq. 18 FedAvg,
+     bit-parity with the legacy ``aggregate``)
   5. update counts v^{t+1}
 Evaluation on the shared validation split; history records loss/acc/fairness.
 """
@@ -24,7 +26,7 @@ from repro.core import graph as graph_mod
 from repro.data.fed_dataset import FedDataset
 from repro.fed.client import make_local_trainer, make_loss_prober
 from repro.fed.models import FedModel
-from repro.fed.server import aggregate
+from repro.fed.server import ServerAggregator
 
 
 @dataclass
@@ -64,10 +66,17 @@ class History:
 
 class FLEngine:
     def __init__(self, ds: FedDataset, model: FedModel, sampler: Sampler,
-                 mode: AvailabilityMode, cfg: FLConfig):
+                 mode: AvailabilityMode, cfg: FLConfig, *,
+                 aggregator=None, agg_backend: str = "ref"):
+        """``aggregator`` is any ``fed.aggregator_device.AggregatorProcess``
+        (default FedAvg — bit-parity with the legacy Eq. 18 path);
+        ``agg_backend`` routes the memory family's scatter+reduction."""
         self.ds, self.model, self.sampler, self.mode, self.cfg = ds, model, sampler, mode, cfg
         self.n = ds.n_clients
         self.m = max(1, int(round(cfg.sample_frac * self.n)))
+        self._server = ServerAggregator(aggregator, n_clients=self.n,
+                                        data_sizes=ds.sizes,
+                                        backend=agg_backend, seed=cfg.seed)
         self._trainer = make_local_trainer(
             model.loss, local_steps=cfg.local_steps,
             batch_size=cfg.batch_size, prox_mu=cfg.prox_mu)
@@ -168,6 +177,10 @@ class FLEngine:
         sizes = jnp.asarray(self.ds.sizes)
         xv = jnp.asarray(self.ds.x_val)
         yv = jnp.asarray(self.ds.y_val)
+        # server-update state (momentum / Adam moments / update memory)
+        # initialized from the round-``start_round`` params — a resume
+        # restarts stateful aggregators (exact for the default fedavg)
+        self._server.init(params)
 
         for t in range(start_round, cfg.rounds):
             rng = np.random.default_rng(np.random.SeedSequence([cfg.seed, t]))
@@ -191,7 +204,8 @@ class FLEngine:
             key, sub = jax.random.split(key)
             local = self._trainer(params, xs[sel], ys[sel], sizes[sel],
                                   jnp.float32(lr), jax.random.split(sub, len(sel)))
-            params = aggregate(local, jnp.asarray(self.ds.sizes[sel], jnp.float32))
+            params = self._server.apply(
+                local, self.ds.sizes[sel].astype(np.float32), sel, avail, t)
             self.counts[sel] += 1
 
             if cfg.graph_refresh_every > 0 and hasattr(self, "_emb"):

@@ -6,7 +6,8 @@ a sweep like Table 2 (samplers x availability modes x seeds) runs each cell
 serially.  This module moves the *entire* round loop onto the device:
 
   one ``lax.scan`` step = availability draw -> sampler -> vmap'd local
-  training (E SGD steps) -> Eq. 18 aggregation -> count update -> eval,
+  training (E SGD steps) -> server update (aggregator switch; Eq. 18
+  default) -> count update -> eval,
 
 all with static shapes, and the scanned program is then ``vmap``-ed over a
 batch axis of *cells* — (seed, availability mode, FedGS alpha) triples — so a
@@ -44,7 +45,17 @@ Seed streams (parity with FLEngine)
   keep) and FedGS (the deterministic ``fedgs_solve``, so FedGS cells match
   the host engine's sampled sets exactly; ``ScanConfig.solver_backend``
   routes the Eq. 16 solve through the tiled Pallas kernels) — so
-  MIXED-SAMPLER cell batches execute as one XLA program too.
+  MIXED-SAMPLER cell batches execute as one XLA program too.  The SERVER
+  UPDATE is the third per-cell switch (``fed.aggregator_device``): each
+  cell carries an ``AggregatorProcess`` params pytree and the in-scan
+  aggregator state (previous params — which double as the param carry —
+  momentum/Adam moments, the (N, P) update-memory panel), and the one
+  ``make_aggregator_step`` program dispatches FedAvg (bit-parity with the
+  legacy Eq. 18 path), FedAvgM, FedAdam, proximal-weighted averaging and
+  the FedAR/MIFA-style memory-rectified reduction
+  (``ScanConfig.agg_backend`` routes the memory scatter+reduce through the
+  tiled Pallas kernel) — so MIXED-AGGREGATOR cell batches are one XLA
+  program as well.
 
 Dynamic 3DG
   With ``graph_refresh_every > 0`` the 3DG is maintained *inside* the scan:
@@ -80,12 +91,19 @@ from repro.core.sampler_device import (
     FAMILIES, SamplerProcess, make_sampler_process, make_sampler_step,
     select_k,
 )
+from repro.core.fairness import count_variance_device, gini_device
 from repro.data.fed_dataset import FedDataset
+from repro.fed.aggregator_device import (
+    AggregatorProcess, init_agg_state, make_aggregator_process,
+    make_aggregator_step,
+)
+from repro.fed.aggregator_device import FAMILIES as AGG_FAMILIES
 from repro.fed.client import make_local_trainer
 from repro.fed.models import FedModel
-from repro.fed.server import aggregate
 
 SAMPLERS = FAMILIES            # ("fedgs", "uniform", "md", "poc")
+AGGREGATORS = AGG_FAMILIES     # ("fedavg", "fedavgm", "fedadam",
+                               #  "fedprox_w", "memory")
 
 
 @dataclass(frozen=True)
@@ -111,6 +129,9 @@ class ScanConfig:
     graph_sigma2: float = 0.01
     graph_backend: str = "ref"     # ref | pallas (dynamic-3DG rebuild path)
     solver_backend: str = "ref"    # ref | pallas (FedGS Eq. 16 solve)
+    aggregator: str = "fedavg"     # fedavg | fedavgm | fedadam | fedprox_w
+                                   # | memory (per-cell overridable)
+    agg_backend: str = "ref"       # ref | pallas (memory scatter+reduce)
     probe_size: int = 64
     probe_seed: int = 777
 
@@ -118,7 +139,10 @@ class ScanConfig:
         if self.sampler not in SAMPLERS:
             raise ValueError(f"scan engine supports {SAMPLERS}, "
                              f"not {self.sampler!r}")
-        for knob in ("graph_backend", "solver_backend"):
+        if self.aggregator not in AGGREGATORS:
+            raise ValueError(f"scan engine supports {AGGREGATORS}, "
+                             f"not {self.aggregator!r}")
+        for knob in ("graph_backend", "solver_backend", "agg_backend"):
             if getattr(self, knob) not in BACKENDS:
                 raise ValueError(f"{knob} must be one of {BACKENDS}, "
                                  f"not {getattr(self, knob)!r}")
@@ -178,6 +202,7 @@ class ScanHistory:
     val_loss: np.ndarray       # (T,)
     val_acc: np.ndarray        # (T,)
     count_var: np.ndarray      # (T,)
+    gini: np.ndarray           # (T,) Gini coefficient of the counts
     sel: np.ndarray            # (T, M) sorted selected indices (padded)
     valid: np.ndarray          # (T, M) pad mask (False = zero-weight slot)
     counts: np.ndarray         # (N,) final participation counts
@@ -198,9 +223,14 @@ class ScanHistory:
 
 # ---------------------------------------------------------------- the program
 def _build_simulate(ds: FedDataset, model: FedModel, cfg: ScanConfig,
-                    use_masks: bool):
+                    use_masks: bool, with_memory: bool = False):
     """Closure-captures the (cell-shared) dataset and returns the pure
-    ``simulate(cell) -> traj`` program to be jit'd / vmap'd."""
+    ``simulate(cell) -> traj`` program to be jit'd / vmap'd.
+
+    ``with_memory`` statically sizes the aggregator state's (N, P)
+    update-memory panel: the engine compiles the panel-carrying variant
+    only when a memory-family cell is actually in play (the common
+    fedavg sweep keeps the pre-subsystem carry: params + counts + H)."""
     n = int(ds.n_clients)
     m = int(cfg.m)
     xs = jnp.asarray(ds.x)
@@ -263,6 +293,14 @@ def _build_simulate(ds: FedDataset, model: FedModel, cfg: ScanConfig,
         n, m, max_sweeps=cfg.max_sweeps, d_cand=d_cand,
         probe_losses=probe_losses, solver_backend=cfg.solver_backend)
 
+    # ... and the ONE aggregator step (fed/aggregator_device): the server
+    # update is a per-cell lax.switch too, so mixed-aggregator cells batch;
+    # the aggregator state's ``prev`` slot doubles as the param carry
+    agg_step = make_aggregator_step(
+        n, m, jax.eval_shape(model.init, jax.random.PRNGKey(0)),
+        data_sizes=ds.sizes, backend=cfg.agg_backend,
+        memory_enabled=with_memory)
+
     def simulate(cell):
         key0 = cell["key"]
         params0 = model.init(key0)
@@ -282,8 +320,9 @@ def _build_simulate(ds: FedDataset, model: FedModel, cfg: ScanConfig,
             h0 = cell["h"]
 
         def step(carry, sx):
-            params, counts, h, emb, pstate, sstate = carry
-            t, lr = sx["t"], sx["lr"]
+            astate, counts, h, emb, pstate, sstate = carry
+            params = astate["prev"]        # the aggregator state IS the
+            t, lr = sx["t"], sx["lr"]      # global-params carry
             key = jax.random.fold_in(key0, t)
 
             # 1. availability A_t — the shared device-native process draw
@@ -310,8 +349,12 @@ def _build_simulate(ds: FedDataset, model: FedModel, cfg: ScanConfig,
             local = trainer(params, xs[sel], ys[sel], sizes_i[sel], lr,
                             jax.random.split(sub, m))
 
-            # 4. Eq. 18 aggregation (pads carry zero weight)
-            params = aggregate(local, sizes_f[sel] * valid)
+            # 4. server update — the aggregator switch step dispatches on
+            # the cell's family (Eq. 18 weights: pads carry zero weight;
+            # the fedavg branch is bit-identical to the legacy aggregate())
+            params, astate = agg_step(
+                cell["agg"], astate, jax.random.fold_in(cell["agg_key"], t),
+                local, sizes_f[sel] * valid, s, avail, t, sel, valid)
 
             # 5. count update v^{t+1}
             counts = counts + s.astype(jnp.float32)
@@ -337,19 +380,23 @@ def _build_simulate(ds: FedDataset, model: FedModel, cfg: ScanConfig,
                     do_eval,
                     lambda _: (jnp.float32(jnp.nan), jnp.float32(jnp.nan)),
                     None)
-            cvar = jnp.sum((counts - counts.mean()) ** 2) / max(n - 1, 1)
+            # fairness metrics — the shared device twins (core/fairness.py)
+            cvar = count_variance_device(counts)
+            gini = gini_device(counts)
             out = {"val_loss": vl, "val_acc": va, "count_var": cvar,
-                   "sel": sel.astype(jnp.int32), "valid": valid}
-            return (params, counts, h, emb, pstate, sstate), out
+                   "gini": gini, "sel": sel.astype(jnp.int32), "valid": valid}
+            return (astate, counts, h, emb, pstate, sstate), out
 
         sxs = {"t": jnp.arange(cfg.rounds), "lr": lrs}
         if use_masks:
             sxs["mask"] = cell["masks"]
         pstate0 = cell.get("proc_state", {})
         sstate0 = cell.get("sampler_state", {})
-        (params, counts, _, _, _, _), traj = jax.lax.scan(
-            step, (params0, counts0, h0, emb0, pstate0, sstate0), sxs)
-        return {"params": params, "counts": counts, **traj}
+        astate0 = init_agg_state(params0, n,
+                                 memory_rows=n if with_memory else 0)
+        (astate, counts, _, _, _, _), traj = jax.lax.scan(
+            step, (astate0, counts0, h0, emb0, pstate0, sstate0), sxs)
+        return {"params": astate["prev"], "counts": counts, **traj}
 
     return simulate
 
@@ -364,9 +411,26 @@ class ScanEngine:
         self.ds, self.model, self.cfg = ds, model, cfg
         self.n = ds.n_clients
         self.use_masks = use_masks
-        self._simulate = _build_simulate(ds, model, cfg, use_masks)
-        self._jit1 = None
-        self._jitB = None
+        self._sims: dict = {}         # with_memory -> simulate closure
+        self._jits: dict = {}         # (with_memory, batched) -> jit'd fn
+
+    def _program(self, cells: list[dict], batched: bool):
+        """The compiled program variant for these cells: the (N, P)
+        update-memory panel rides the scan carry ONLY when a memory-family
+        cell (or the engine default) asks for it — the common fedavg sweep
+        keeps the lean carry."""
+        midx = AGGREGATORS.index("memory")
+        wm = self.cfg.aggregator == "memory" or any(
+            int(np.asarray(c["agg"]["family"])) == midx for c in cells)
+        key = (wm, batched)
+        if key not in self._jits:
+            if wm not in self._sims:
+                self._sims[wm] = _build_simulate(
+                    self.ds, self.model, self.cfg, self.use_masks,
+                    with_memory=wm)
+            fn = self._sims[wm]
+            self._jits[key] = jax.jit(jax.vmap(fn) if batched else fn)
+        return self._jits[key]
 
     # ------------------------------------------------------------- cells
     def cell(self, *, seed: int = 0, mode: Optional[AvailabilityMode] = None,
@@ -374,7 +438,8 @@ class ScanEngine:
              masks: Optional[np.ndarray] = None, alpha: float = 1.0,
              h: Optional[np.ndarray] = None, avail_seed: int = 1234,
              sampler_seed: Optional[int] = None,
-             sampler_process: Optional[SamplerProcess] = None) -> dict:
+             sampler_process: Optional[SamplerProcess] = None,
+             aggregator_process: Optional[AggregatorProcess] = None) -> dict:
         """One sweep cell = (seed, availability, sampler params) pytree.
 
         Mask path (``use_masks=True``): pass ``masks`` (rounds, N), e.g. from
@@ -392,6 +457,16 @@ class ScanEngine:
         ``lax.switch`` index, so cells of different samplers batch through
         one ``run_batch`` program.  Because every branch traces, EVERY cell
         carries the full (N, N) ``h`` (zeros when no FedGS cell needs it).
+
+        The AGGREGATOR is a per-cell choice the same way:
+        ``aggregator_process`` (any ``fed.aggregator_device
+        .AggregatorProcess``; defaults to the engine-level
+        ``cfg.aggregator`` family) compiles to a ``lax.switch`` index, so
+        cells of different server-update rules batch through one
+        ``run_batch`` program; the aggregator state is built in-scan from
+        the cell's own ``params0``, and its (N, P) update-memory panel is
+        carried only by the program variant that actually has a
+        memory-family cell (``_program``).
         """
         c: dict = {"key": jax.random.PRNGKey(seed)}
         if self.use_masks:
@@ -412,6 +487,10 @@ class ScanEngine:
         c["sampler_key"] = jax.random.PRNGKey(
             seed + 0x5E1EC7 if sampler_seed is None else sampler_seed)
         c["sampler_state"] = sproc.init(c["sampler_key"])
+        aproc = aggregator_process if aggregator_process is not None else \
+            make_aggregator_process(self.cfg.aggregator)
+        c["agg"] = aproc.params()
+        c["agg_key"] = jax.random.PRNGKey(seed + 0xA66)
         if self.cfg.graph_refresh_every > 0:
             c["init_key"] = jax.random.PRNGKey(seed + 778)
         elif h is not None:
@@ -429,27 +508,23 @@ class ScanEngine:
         return ScanHistory(val_loss=pick(out["val_loss"]),
                            val_acc=pick(out["val_acc"]),
                            count_var=pick(out["count_var"]),
+                           gini=pick(out["gini"]),
                            sel=pick(out["sel"]), valid=pick(out["valid"]),
                            counts=pick(out["counts"]))
 
     def run(self, cell: dict) -> ScanHistory:
         """Execute one cell; the whole trajectory is a single device program."""
-        if self._jit1 is None:
-            self._jit1 = jax.jit(self._simulate)
-        out = jax.block_until_ready(self._jit1(cell))
+        out = jax.block_until_ready(self._program([cell], False)(cell))
         self.params = out["params"]
         return self._to_history(out)
 
     def run_batch(self, cells: list[dict]) -> list[ScanHistory]:
         """Execute B cells as ONE vmapped-and-scanned XLA program."""
-        if self._jitB is None:
-            self._jitB = jax.jit(jax.vmap(self._simulate))
-        out = jax.block_until_ready(self._jitB(stack_cells(cells)))
+        fn = self._program(cells, True)
+        out = jax.block_until_ready(fn(stack_cells(cells)))
         self.params = out["params"]           # (B, ...) stacked
         return [self._to_history(out, i) for i in range(len(cells))]
 
     def lower_batch(self, cells: list[dict]):
         """Lower (without running) — for compile-time measurement."""
-        if self._jitB is None:
-            self._jitB = jax.jit(jax.vmap(self._simulate))
-        return self._jitB.lower(stack_cells(cells))
+        return self._program(cells, True).lower(stack_cells(cells))

@@ -1,18 +1,103 @@
-"""Server-side aggregation (paper Eq. 18)."""
+"""Server-side aggregation — the thin HOST face over the device-native
+aggregator subsystem (``fed/aggregator_device.py``, DESIGN.md §12).
+
+``aggregate`` is the paper's Eq. 18 (kept as the one-call entry every
+legacy caller imports), now with the zero-weight guard: passing the
+previous global params makes a forced all-unavailable round (all weights
+zero) a no-op instead of the all-zero pytree ``0 / 1e-12`` used to return.
+:class:`ServerAggregator` is the per-round eager applier ``FLEngine`` and
+``launch/train.py`` use — it carries the aggregator state (momentum, Adam
+moments, the (N, P) update memory) across rounds and delegates every
+update to the SAME device ``apply`` the scan engine traces, so host and
+scan runs share one implementation per family.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from repro.fed.aggregator_device import (
+    AggregatorProcess, FedAvgProcess, fedavg_combine, init_agg_state,
+    make_aggregator_step,
+)
 
 
 @jax.jit
-def aggregate(stacked_params, weights):
+def aggregate(stacked_params, weights, prev_params=None):
     """theta^{t+1} = sum_k w_k theta_k,  w_k = n_k / sum n  (Eq. 18).
 
-    stacked_params: pytree with leading client axis (M, ...); weights (M,)."""
-    w = weights / jnp.maximum(jnp.sum(weights), 1e-12)
+    stacked_params: pytree with leading client axis (M, ...); weights (M,).
+    With ``prev_params`` the all-weights-zero round returns the previous
+    params unchanged (the zero-weight guard); without it the legacy
+    unguarded average is kept (bit-identical op order — the guard is a
+    post-hoc select)."""
+    return fedavg_combine(stacked_params, weights, prev_params)
 
-    def wsum(p):
-        return jnp.tensordot(w.astype(p.dtype), p, axes=(0, 0))
 
-    return jax.tree_util.tree_map(wsum, stacked_params)
+class ServerAggregator:
+    """Host face: eager per-round application of an
+    :class:`AggregatorProcess` (defaults to Eq. 18 FedAvg).
+
+    ``init(params0)`` builds the carried state; ``apply`` takes the stacked
+    local params, the Eq. 18 weights, the selected indices and the round's
+    availability mask, and returns the new global params.  Steps are
+    compiled per sampled-set size (the host path has no static M), as the
+    process's SINGLE branch — same branch code as the scan switch (same
+    numerics), but non-memory families never materialize the (N, P)
+    update-memory panel (at LM scale that panel is N × |params| — the
+    scan path carries it because mixed-family cells share one program;
+    the eager host path knows its family up front).  Note the aggregator
+    state is NOT checkpointed by the host engine — a resume restarts
+    momentum/memory from ``init`` (exact for the stateless ``fedavg``;
+    documented drift for stateful families)."""
+
+    def __init__(self, process: AggregatorProcess | None = None, *,
+                 n_clients: int, data_sizes=None, backend: str = "ref",
+                 seed: int = 0):
+        self.process = process if process is not None else FedAvgProcess()
+        self.n = int(n_clients)
+        self.data_sizes = None if data_sizes is None else np.asarray(data_sizes)
+        self.backend = backend
+        self._key = jax.random.PRNGKey(seed)
+        self._steps: dict[int, object] = {}
+        self.state = None
+
+    def init(self, params0):
+        rows = self.n if self.process.family == "memory" else 0
+        self.state = init_agg_state(params0, self.n, memory_rows=rows)
+        return self.state
+
+    def _step(self, m: int):
+        if m not in self._steps:
+            step = make_aggregator_step(self.n, m, self.state["prev"],
+                                        data_sizes=self.data_sizes,
+                                        backend=self.backend,
+                                        family=self.process.family)
+            self._steps[m] = jax.jit(step)
+        return self._steps[m]
+
+    def apply(self, stacked_updates, weights, sel, avail, t: int):
+        assert self.state is not None, "call init(params0) first"
+        sel = np.asarray(sel, int)
+        weights = np.asarray(weights, np.float32)
+        if np.any(np.diff(sel) < 0):
+            # the device gather convention is ascending sel; permute the
+            # stacked rows/weights alongside so update k still lands in
+            # client sel[k]'s memory row (in-repo samplers return sorted
+            # indices, so this path never fires for them)
+            order = np.argsort(sel, kind="stable")
+            sel, weights = sel[order], weights[order]
+            stacked_updates = jax.tree_util.tree_map(
+                lambda x: jnp.asarray(x)[jnp.asarray(order)],
+                stacked_updates)
+        s = np.zeros(self.n, bool)
+        s[sel] = True
+        params, self.state = self._step(len(sel))(
+            self.process.params(), self.state,
+            jax.random.fold_in(self._key, t), stacked_updates,
+            jnp.asarray(weights), jnp.asarray(s),
+            jnp.asarray(avail, bool), t,
+            jnp.asarray(sel, jnp.int32),               # host sel is the
+            jnp.ones(len(sel), bool))                  # gather: all valid
+        return params

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.aggregate import AGG_TM, AGG_TN, AGG_TP, memagg_pallas
 from repro.kernels.floyd_warshall import floyd_warshall_pallas, TILE
 from repro.kernels.pairwise_similarity import (
     similarity_pallas, adjacency_pallas, TILE_N, TILE_K,
@@ -162,6 +163,51 @@ def swap_best(qs: jax.Array, a: jax.Array, b: jax.Array, *,
                                  interpret=interpret)
     npad = qp.shape[1]
     return val[0, 0], flat[0, 0] // npad, flat[0, 0] % npad
+
+
+# ------------------------------------------------- memory-rectified reduce
+def memory_aggregate(mem: jax.Array, upd: jax.Array, sel: jax.Array,
+                     valid: jax.Array, w: jax.Array, *,
+                     interpret: bool | None = None):
+    """Fused masked scatter + staleness-weighted reduction over the (N, P)
+    update-memory panel (the ``memory`` aggregator family's hot path).
+
+    mem (N, P) panel, upd (M, P) flattened sampled updates, sel (M,) int
+    target rows with ``valid`` (M,) masking pad slots, w (N,) reduction
+    weights (already normalized by the caller).  Pads: invalid slots become
+    the −1 sentinel row id (matches no row), the panel pads to tile
+    multiples with zero rows/cols and w pads with 0, so pad rows never
+    contribute to the reduction and pad cols are sliced off.  Panel tiles
+    scale up to (512, 2048) and the update matrix is chunked at 256 rows
+    (m scales with N — an untiled (M, Tp) block would blow VMEM at
+    datacenter m; worst case ≈ 10.5 MiB, see kernels/aggregate.py) while
+    keeping the grid SMALL (each interpret grid step re-writes the carried
+    (N, P) output, and on TPU fewer/larger DMAs pipeline better).  Returns
+    ``(new_mem (N, P), reduced (P,))``; new_mem is bit-identical to the jnp
+    scatter, reduced is numerically equal to the ref tensordot (tile-order
+    partial sums)."""
+    if interpret is None:
+        interpret = _on_cpu()
+    n, p = mem.shape
+    m = upd.shape[0]
+    tn = 512 if n >= 512 else AGG_TN
+    tp = 2048 if p >= 2048 else AGG_TP
+    memp = _pad_to(mem.astype(jnp.float32), tn, (0,))
+    memp = _pad_to(memp, tp, (1,))
+    # update chunking: one sub-tile chunk for small m, AGG_TM rows at scale
+    tm = max(8, ((min(m, AGG_TM) + 7) // 8) * 8)
+    mp = ((max(m, 1) + tm - 1) // tm) * tm
+    updp = jnp.zeros((mp, memp.shape[1]), jnp.float32)
+    if m:
+        updp = updp.at[:m, :p].set(upd.astype(jnp.float32))
+    selp = jnp.full((1, mp), -1.0, jnp.float32)
+    if m:
+        selp = selp.at[0, :m].set(
+            jnp.where(valid, sel.astype(jnp.float32), -1.0))
+    wp = _pad_to(w.astype(jnp.float32).reshape(1, n), tn, (1,))
+    newmem, red = memagg_pallas(memp, updp, selp, wp, tile_n=tn, tile_p=tp,
+                                tile_m=tm, interpret=interpret)
+    return newmem[:n, :p], red[0, :p]
 
 
 # -------------------------------------------------------- window attention

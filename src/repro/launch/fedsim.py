@@ -54,13 +54,12 @@ def round_step_factory(local_steps: int, batch: int):
         return p
 
     def round_step(global_params, xs, ys, sizes, lr, keys):
+        from repro.fed.aggregator_device import fedavg_combine
         locals_ = jax.vmap(local, in_axes=(None, 0, 0, 0, None, 0))(
             global_params, xs, ys, sizes, lr, keys)
-        w = sizes.astype(jnp.float32)
-        w = w / jnp.sum(w)
-        agg = jax.tree_util.tree_map(
-            lambda p: jnp.tensordot(w.astype(p.dtype), p, axes=(0, 0)), locals_)
-        return agg
+        # the shared Eq. 18 combine (zero-weight guard = params kept)
+        return fedavg_combine(locals_, sizes.astype(jnp.float32),
+                              global_params)
 
     return round_step
 
@@ -84,13 +83,56 @@ def graph_pipeline(feats, counts, avail, alpha, m_sel, max_sweeps: int = 32,
                         backend=solver_backend)
 
 
+def aggregator_program(aggregator: str, n_clients: int, m_sel: int, *,
+                       backend: str = "ref"):
+    """The server-update apply as ONE jit-lowerable program at datacenter
+    client counts: any ``fed.aggregator_device`` family over the logreg
+    params (for ``memory``, the (N, P) panel scatter + rectified reduction
+    with ``backend`` routing the fused Pallas kernel).  Returns the jitted
+    fn and its abstract (state, upd, w, s, avail, t) argument specs."""
+    from repro.fed.aggregator_device import (
+        init_agg_state, make_aggregator_process, make_aggregator_step,
+    )
+    f32, b8 = jnp.float32, jnp.bool_
+    gp = {"w": jax.ShapeDtypeStruct((DIM, CLASSES), f32),
+          "b": jax.ShapeDtypeStruct((CLASSES,), f32)}
+    proc = make_aggregator_process(aggregator)
+    # lower the named family's branch with the state it actually reads —
+    # non-memory families carry a 0-row panel spec, so the recorded
+    # argument/memory stats are the family's own, not the union's
+    step = make_aggregator_step(n_clients, m_sel, gp, backend=backend,
+                                family=proc.family)
+    aparams = proc.params()
+    key = jax.random.PRNGKey(0)
+
+    def apply(state, upd, wts, s, avail, t):
+        return step(aparams, state, key, upd, wts, s, avail, t)
+
+    rows = n_clients if proc.family == "memory" else 0
+    state = jax.eval_shape(
+        lambda p: init_agg_state(p, n_clients, memory_rows=rows), gp)
+    args = (state,
+            {"w": jax.ShapeDtypeStruct((m_sel, DIM, CLASSES), f32),
+             "b": jax.ShapeDtypeStruct((m_sel, CLASSES), f32)},
+            jax.ShapeDtypeStruct((m_sel,), f32),
+            jax.ShapeDtypeStruct((n_clients,), b8),
+            jax.ShapeDtypeStruct((n_clients,), b8),
+            jax.ShapeDtypeStruct((), jnp.int32))
+    return jax.jit(apply), args
+
+
 def run(n_clients: int, *, multi_pod: bool, sample_frac: float = 0.1,
         n_max: int = 512, local_steps: int = 10, batch: int = 10,
-        force: bool = False, solver_backend: str = "ref") -> dict:
+        force: bool = False, solver_backend: str = "ref",
+        aggregator: str = "fedavg", agg_backend: str = "ref") -> dict:
     mesh_tag = "pod2" if multi_pod else "pod1"
     key = f"fedsim__c{n_clients}__{mesh_tag}"
     if solver_backend != "ref":
         key += f"__{solver_backend}"
+    if aggregator != "fedavg":
+        key += f"__{aggregator}"
+        if agg_backend != "ref":
+            key += f"__{agg_backend}"
     out_path = RESULTS_DIR / f"{key}.json"
     if out_path.exists() and not force:
         return json.loads(out_path.read_text())
@@ -151,6 +193,18 @@ def run(n_clients: int, *, multi_pod: bool, sample_frac: float = 0.1,
             "flops": ghc.flops, "bytes": ghc.bytes,
             "mem": _mem_dict(gcomp),
         }
+
+        # ---- the server-update (aggregator) program ----------------------
+        aj, aargs = aggregator_program(aggregator, n_clients, m_sel,
+                                       backend=agg_backend)
+        acomp = aj.lower(*aargs).compile()
+        ahc = hlo_analyze(acomp.as_text())
+        rec["aggregator"] = {
+            "family": aggregator, "backend": agg_backend,
+            "n_clients": n_clients, "m_sampled": m_sel,
+            "flops": ahc.flops, "bytes": ahc.bytes,
+            "mem": _mem_dict(acomp),
+        }
         # roofline terms for the round program
         rec["compute_term_s"] = hc.flops / PEAK_FLOPS
         rec["memory_term_s"] = hc.bytes / HBM_BW
@@ -181,9 +235,17 @@ def main():
                     choices=("ref", "pallas"),
                     help="route the server-side Eq. 16 solve through the "
                          "tiled Pallas solver kernels")
+    from repro.fed.aggregator_device import FAMILIES as _AGGS
+    ap.add_argument("--aggregator", default="fedavg", choices=_AGGS,
+                    help="server-update family to lower as the aggregator "
+                         "program (fed/aggregator_device.py)")
+    ap.add_argument("--agg-backend", default="ref", choices=("ref", "pallas"),
+                    help="route the memory family's (N, P) panel "
+                         "scatter+reduce through the fused Pallas kernel")
     args = ap.parse_args()
     rec = run(args.clients, multi_pod=args.multi_pod, force=args.force,
-              solver_backend=args.solver_backend)
+              solver_backend=args.solver_backend,
+              aggregator=args.aggregator, agg_backend=args.agg_backend)
     raise SystemExit(0 if rec["ok"] else 1)
 
 

@@ -4,8 +4,11 @@ assigned-architecture model zoo.
 Each federated client owns a distinct Markov-chain token stream (the LM
 analogue of label skew); FedGS builds the 3DG from client unigram statistics
 (oracle) or functional similarity, samples clients under an availability
-mode, clients run E local AdamW steps, and the server aggregates with
-Eq. 18 weights.
+mode, clients run E local AdamW steps, and the server applies any
+aggregator family (``--aggregator``: Eq. 18 FedAvg, server momentum,
+FedAdam, proximal-weighted, or the memory-rectified reduction, with
+``--agg-backend pallas`` routing the (N, P) panel through the fused
+kernel).
 
   PYTHONPATH=src python -m repro.launch.train --arch smollm-135m --reduced \
       --rounds 20 --clients 16 --mode LN --sampler fedgs
@@ -31,7 +34,9 @@ from repro.core.sampler import make_sampler, FedGSSampler
 from repro.core import graph as graph_mod
 from repro.core.fairness import count_variance
 from repro.data.lm_stream import token_batches
-from repro.fed.server import aggregate
+from repro.fed.aggregator_device import FAMILIES as AGGREGATORS
+from repro.fed.aggregator_device import make_aggregator_process
+from repro.fed.server import ServerAggregator
 from repro.models import lm
 from repro.optim.optimizers import adamw
 
@@ -66,6 +71,14 @@ def main(argv=None):
     ap.add_argument("--solver-backend", default="ref", choices=("ref", "pallas"),
                     help="FedGS Eq. 16 solve: pure-jnp ref or the tiled "
                          "Pallas kernels (large client counts)")
+    ap.add_argument("--aggregator", default="fedavg", choices=AGGREGATORS,
+                    help="server-update family (fed/aggregator_device.py): "
+                         "Eq. 18 fedavg, server momentum, FedAdam, "
+                         "proximal-weighted averaging, or the FedAR/MIFA-"
+                         "style memory-rectified reduction")
+    ap.add_argument("--agg-backend", default="ref", choices=("ref", "pallas"),
+                    help="memory-family scatter+reduce: pure-jnp ref or "
+                         "the fused Pallas panel kernel")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default=None,
                     help="checkpoint path: saves params+counts every 10 "
@@ -136,6 +149,9 @@ def main(argv=None):
     rng = np.random.default_rng(args.seed)
     avail_rng = np.random.default_rng(args.seed + 1234)
     counts = np.zeros(n)
+    server = ServerAggregator(make_aggregator_process(args.aggregator),
+                              n_clients=n, data_sizes=sizes,
+                              backend=args.agg_backend, seed=args.seed)
     start = 0
     if args.ckpt:
         import os
@@ -149,11 +165,18 @@ def main(argv=None):
             counts = np.asarray(state["counts"], np.float64)
             start = int(state["round"]) + 1
             print(f"resumed from {p} at round {start}")
+    server.init(params)
     t0 = time.time()
     for t in range(start, args.rounds):
         avail = mode.sample(t, avail_rng)
         sel = np.asarray(sampler.sample(avail=avail, m=m, rng=rng,
                                         counts=counts, data_sizes=sizes), int)
+        if len(sel) == 0:
+            # empty A_t (samplers return the empty array, PR-4): the round
+            # is a params no-op — the zero-weight-guard story end to end
+            print(f"round {t:3d}  sel=[]  (no clients available; params "
+                  f"kept)", flush=True)
+            continue
         locals_, losses = [], []
         for k in sel:
             key, sub = jax.random.split(key)
@@ -161,7 +184,8 @@ def main(argv=None):
             locals_.append(pk)
             losses.append(float(lk))
         stacked = jax.tree_util.tree_map(lambda *x: jnp.stack(x), *locals_)
-        params = aggregate(stacked, jnp.asarray(sizes[sel], jnp.float32))
+        params = server.apply(stacked, sizes[sel].astype(np.float32),
+                              sel, avail, t)
         counts[sel] += 1
         vl = float(eval_loss(params, val))
         print(f"round {t:3d}  sel={sel.tolist()}  train={np.mean(losses):.4f}  "

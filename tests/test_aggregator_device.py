@@ -1,0 +1,492 @@
+"""The device-native aggregator subsystem (fed/aggregator_device.py):
+
+* legacy parity — the ``fedavg`` family (and ``fed/server.aggregate``) is
+  BIT-identical to the legacy Eq. 18 formula, and the zero-weight guard
+  returns the previous params instead of the all-zero pytree (regression:
+  a forced all-unavailable round through the scan engine is a no-op);
+* family math — each switch branch reproduces a manual numpy oracle
+  (momentum, FedAdam moments, proximal re-weighting, memory
+  scatter + staleness-discounted reduction);
+* the aggregator switch — ``make_aggregator_step`` reproduces each
+  family's ``AggregatorProcess.apply`` bit for bit, and state follows the
+  uniform-pytree protocol;
+* memory backend parity — the pallas scatter+reduce
+  (``kernels/ops.memory_aggregate``) is bit-identical on the scattered
+  panel and numerically equal on the reduction vs ref, at non-tile
+  shapes incl. empty selections and invalid pads, standalone AND composed
+  into a full scanned program;
+* engine integration — FLEngine ≡ ScanEngine parity per family, and a
+  MIXED-aggregator ``run_batch`` equals the per-cell runs (mirrors
+  ``tests/test_sampler_device.py`` / ``test_scan_engine.py``).
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.availability import make_mode
+from repro.core.sampler import FedGSSampler
+from repro.fed.aggregator_device import (
+    FAMILIES, AggregatorProcess, FedAdamProcess, FedAvgMProcess,
+    FedAvgProcess, FedProxWProcess, MemoryProcess, fedavg_combine,
+    init_agg_state, make_aggregator_process, make_aggregator_step,
+)
+from repro.fed.engine import FLConfig, FLEngine
+from repro.fed.models import logistic_regression
+from repro.fed.scan_engine import (
+    ScanConfig, ScanEngine, oracle_h, precompute_masks,
+)
+
+
+def _params(rng, dim=4, classes=3):
+    return {"w": jnp.asarray(rng.normal(size=(dim, classes)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(classes,)), jnp.float32)}
+
+
+def _stacked(rng, m, dim=4, classes=3):
+    return {"w": jnp.asarray(rng.normal(size=(m, dim, classes)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(m, classes)), jnp.float32)}
+
+
+def _flat(pt):
+    return np.concatenate([np.asarray(x).reshape(-1)
+                           for x in jax.tree_util.tree_leaves(pt)])
+
+
+def _apply(proc, rng, n=12, m=4, t=3, state=None, data_sizes=None,
+           backend="ref", sel=None):
+    """One switch-step application on a random fixture; returns everything
+    the oracles need."""
+    prev = _params(rng)
+    state = init_agg_state(prev, n) if state is None else state
+    upd = _stacked(rng, m)
+    w = jnp.asarray(rng.random(m) + 0.5, jnp.float32)
+    if sel is None:
+        sel = np.sort(rng.choice(n, size=m, replace=False))
+    s = np.zeros(n, bool)
+    s[sel] = True
+    avail = jnp.ones(n, bool)
+    key = jax.random.PRNGKey(0)
+    params, state2 = proc.apply(state, key, upd, w, jnp.asarray(s), avail, t,
+                                data_sizes=data_sizes, backend=backend)
+    return dict(prev=state["prev"], state=state, upd=upd, w=w, sel=sel, s=s,
+                params=params, state2=state2, t=t)
+
+
+# ---------------------------------------------------------- legacy parity
+def test_fedavg_bit_equals_legacy_aggregate(rng):
+    """fedavg branch == fed/server.aggregate == the legacy Eq. 18 formula,
+    bit for bit."""
+    from repro.fed.server import aggregate
+    m = 5
+    stacked = _stacked(rng, m)
+    weights = jnp.asarray(rng.random(m) * 3, jnp.float32)
+    # the legacy op order, verbatim
+    wn = weights / jnp.maximum(jnp.sum(weights), 1e-12)
+    legacy = jax.tree_util.tree_map(
+        lambda p: jnp.tensordot(wn.astype(p.dtype), p, axes=(0, 0)), stacked)
+    for got in (aggregate(stacked, weights),
+                fedavg_combine(stacked, weights)):
+        for a, b in zip(jax.tree_util.tree_leaves(got),
+                        jax.tree_util.tree_leaves(legacy)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # ... and through the switch step from the same inputs
+    fx = _apply(FedAvgProcess(), rng, m=m)
+    wn2 = fx["w"] / jnp.maximum(jnp.sum(fx["w"]), 1e-12)
+    want = jax.tree_util.tree_map(
+        lambda p: jnp.tensordot(wn2.astype(p.dtype), p, axes=(0, 0)),
+        fx["upd"])
+    for a, b in zip(jax.tree_util.tree_leaves(fx["params"]),
+                    jax.tree_util.tree_leaves(want)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_zero_weight_guard_keeps_prev(rng):
+    """All weights zero (a forced all-unavailable round): the guarded paths
+    return the previous params, the prev-less legacy call keeps its
+    documented all-zero average."""
+    from repro.fed.server import aggregate
+    prev = _params(rng)
+    stacked = _stacked(rng, 3)
+    zeros = jnp.zeros((3,), jnp.float32)
+    out = aggregate(stacked, zeros, prev)
+    for a, b in zip(jax.tree_util.tree_leaves(out),
+                    jax.tree_util.tree_leaves(prev)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    legacy = aggregate(stacked, zeros)
+    assert all(np.all(np.asarray(x) == 0)
+               for x in jax.tree_util.tree_leaves(legacy))
+    # every family's switch branch holds params on a zero-weight round
+    # (the stateful ones may still drift by design: momentum keeps decaying)
+    fx = _apply(FedAvgProcess(), rng)
+    s0 = dict(fx["state2"])
+    params, _ = FedAvgProcess().apply(
+        s0, jax.random.PRNGKey(1), fx["upd"], fx["w"] * 0.0,
+        jnp.zeros(12, bool), jnp.zeros(12, bool), 5)
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(s0["prev"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_scan_engine_all_unavailable_round_is_noop(synthetic_ds):
+    """THE satellite regression: a round whose availability mask is all
+    False must leave the global params unchanged (previously the Eq. 18
+    ``0 / 1e-12`` wiped them to zero).  With eval_every=1 the round-1 val
+    loss must equal round 0's exactly."""
+    ds = synthetic_ds
+    rounds, m = 4, 6
+    masks = np.ones((rounds, ds.n_clients), bool)
+    masks[1] = False                       # the forced all-unavailable round
+    eng = ScanEngine(ds, logistic_regression(),
+                     ScanConfig(rounds=rounds, m=m, local_steps=5,
+                                batch_size=10, lr=0.1, eval_every=1,
+                                sampler="uniform", max_sweeps=8),
+                     use_masks=True)
+    sh = eng.run(eng.cell(seed=0, masks=masks))
+    assert np.isfinite(sh.val_loss).all()
+    assert sh.val_loss[1] == sh.val_loss[0]          # params untouched
+    assert sh.valid[1].sum() == 0                    # nothing was sampled
+    assert sh.val_loss[2] != sh.val_loss[1]          # training resumed
+
+
+def test_fedavg_scan_run_equals_legacy_path(synthetic_ds):
+    """THE e2e acceptance: a ScanEngine round through the aggregator switch
+    equals the legacy path — the same trainer composed with the legacy
+    ``aggregate()`` formula on the host, from the engine's exact key
+    streams and sampled set.  The host replication re-enters jit at the
+    trainer/aggregate boundary, which costs 1 ulp of fusion reassociation
+    (the assumption-log #3 class), hence atol=1e-8 here; the switch branch
+    itself is pinned BIT-identical in
+    ``test_fedavg_bit_equals_legacy_aggregate``, and a 10-round run of
+    this engine was verified bitwise against the pre-subsystem engine at
+    PR time (sel/counts/val_loss/params all exactly equal)."""
+    import jax
+    from repro.fed.client import make_local_trainer
+    from repro.fed.server import aggregate
+
+    ds = synthetic_ds
+    n, m = ds.n_clients, 6
+    masks = np.ones((1, n), bool)
+    eng = ScanEngine(ds, logistic_regression(),
+                     ScanConfig(rounds=1, m=m, local_steps=5, batch_size=10,
+                                lr=0.1, eval_every=1, sampler="uniform",
+                                max_sweeps=8),
+                     use_masks=True)
+    cell = eng.cell(seed=4, masks=masks)
+    sh = eng.run(cell)
+
+    # replay round 0 on the host with the engine's streams (DESIGN §5)
+    model = logistic_regression()
+    params = model.init(cell["key"])
+    trainer = make_local_trainer(model.loss, local_steps=5, batch_size=10)
+    sel, valid = sh.sel[0], sh.valid[0]
+    key = jax.random.fold_in(cell["key"], 0)
+    _, sub = jax.random.split(key)
+    local = trainer(params, jnp.asarray(ds.x)[sel], jnp.asarray(ds.y)[sel],
+                    jnp.asarray(ds.sizes)[sel],
+                    jnp.asarray(np.float32(0.1)), jax.random.split(sub, m))
+    want = aggregate(local, jnp.asarray(ds.sizes[sel], jnp.float32)
+                     * valid)
+    for a, b in zip(jax.tree_util.tree_leaves(eng.params),
+                    jax.tree_util.tree_leaves(want)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-8)
+
+
+# ------------------------------------------------------------- family math
+def test_fedavgm_matches_manual(rng):
+    lr_s, beta = 0.7, 0.85
+    fx = _apply(FedAvgMProcess(server_lr=lr_s, beta=beta), rng)
+    w = np.asarray(fx["w"], np.float64).astype(np.float32)
+    wn = w / max(w.sum(), 1e-12)
+    avg = {k: np.tensordot(wn, np.asarray(v), axes=(0, 0))
+           for k, v in fx["upd"].items()}
+    for k in ("w", "b"):
+        mom = beta * 0.0 + (np.asarray(fx["prev"][k]) - avg[k])
+        want = np.asarray(fx["prev"][k]) - lr_s * mom
+        np.testing.assert_allclose(np.asarray(fx["params"][k]), want,
+                                   atol=1e-6)
+        np.testing.assert_allclose(np.asarray(fx["state2"]["m1"][k]), mom,
+                                   atol=1e-6)
+
+
+def test_fedadam_matches_manual(rng):
+    lr_s, b1, b2, eps = 0.05, 0.9, 0.99, 1e-3
+    proc = FedAdamProcess(server_lr=lr_s, beta1=b1, beta2=b2, eps=eps)
+    fx = _apply(proc, rng)
+    w = np.asarray(fx["w"], np.float32)
+    wn = w / max(w.sum(), 1e-12)
+    for k in ("w", "b"):
+        avg = np.tensordot(wn, np.asarray(fx["upd"][k]), axes=(0, 0))
+        d = avg - np.asarray(fx["prev"][k])
+        m1 = (1 - b1) * d
+        m2 = (1 - b2) * d * d
+        want = np.asarray(fx["prev"][k]) + lr_s * m1 / (np.sqrt(m2) + eps)
+        np.testing.assert_allclose(np.asarray(fx["params"][k]), want,
+                                   atol=1e-6)
+        np.testing.assert_allclose(np.asarray(fx["state2"]["m2"][k]), m2,
+                                   atol=1e-7)
+
+
+def test_fedprox_w_downweights_drifted(rng):
+    mu = 0.5
+    fx = _apply(FedProxWProcess(mu=mu), rng)
+    prevf = _flat(fx["prev"])
+    drift = np.array([np.sum((_flat({k: v[i] for k, v in fx["upd"].items()})
+                              - prevf) ** 2) for i in range(4)])
+    w2 = np.asarray(fx["w"]) / (1.0 + mu * drift)
+    wn = w2 / max(w2.sum(), 1e-12)
+    for k in ("w", "b"):
+        want = np.tensordot(wn.astype(np.float32),
+                            np.asarray(fx["upd"][k]), axes=(0, 0))
+        np.testing.assert_allclose(np.asarray(fx["params"][k]), want,
+                                   atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_memory_matches_manual(rng, backend):
+    """Scatter + staleness-discounted reduction against a numpy oracle:
+    participants' rows and tau refresh, every other client contributes its
+    (initial-model) memory row discounted by gamma^age."""
+    gamma, n, m, t = 0.8, 12, 4, 5
+    sizes = rng.random(n) * 5 + 1
+    fx = _apply(MemoryProcess(gamma=gamma), rng, n=n, m=m, t=t,
+                data_sizes=sizes, backend=backend)
+    mem = np.asarray(fx["state"]["mem"]).copy()
+    for i, k in enumerate(fx["sel"]):
+        mem[k] = _flat({kk: vv[i] for kk, vv in fx["upd"].items()})
+    tau = np.zeros(n)
+    tau[fx["sel"]] = t
+    wmem = sizes * gamma ** (t - tau)
+    wn = (wmem / wmem.sum()).astype(np.float32)
+    want = np.tensordot(wn, mem, axes=(0, 0))
+    np.testing.assert_allclose(_flat(fx["params"]), want, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(fx["state2"]["mem"]), mem)
+    np.testing.assert_array_equal(np.asarray(fx["state2"]["tau"]), tau)
+
+
+def test_memory_gamma_zero_is_sampled_fedavg(rng):
+    """gamma -> 0: only the age-0 (just-sampled) rows keep weight, so the
+    memory family degenerates to size-weighted FedAvg over the sampled
+    set (the documented interpolation endpoint)."""
+    n, m, t = 10, 3, 4
+    sizes = rng.random(n) + 0.5
+    fx = _apply(MemoryProcess(gamma=1e-6), rng, n=n, m=m, t=t,
+                data_sizes=sizes)
+    w = sizes[fx["sel"]].astype(np.float32)
+    wn = w / w.sum()
+    upd = np.stack([_flat({k: v[i] for k, v in fx["upd"].items()})
+                    for i in range(m)])
+    np.testing.assert_allclose(_flat(fx["params"]),
+                               np.tensordot(wn, upd, axes=(0, 0)), atol=1e-4)
+
+
+# ---------------------------------------------------------- the switch step
+def test_switch_matches_direct_applies(rng):
+    """One compiled step dispatches every family identically to the
+    process's own apply (the switch is dispatch, not reimplementation)."""
+    n, m = 12, 4
+    prev = _params(rng)
+    state = init_agg_state(prev, n)
+    upd = _stacked(rng, m)
+    w = jnp.asarray(rng.random(m) + 0.1, jnp.float32)
+    sel = np.sort(rng.choice(n, size=m, replace=False))
+    s = jnp.asarray(np.isin(np.arange(n), sel))
+    avail = jnp.ones(n, bool)
+    key = jax.random.PRNGKey(7)
+    sizes = rng.random(n) + 0.5
+    step = jax.jit(make_aggregator_step(n, m, prev, data_sizes=sizes))
+    for name in FAMILIES:
+        proc = make_aggregator_process(name)
+        got_p, got_s = step(proc.params(), state, key, upd, w, s, avail, 2)
+        want_p, want_s = proc.apply(state, key, upd, w, s, avail, 2,
+                                    data_sizes=sizes)
+        np.testing.assert_array_equal(_flat(got_p), _flat(want_p),
+                                      err_msg=name)
+        for a, b in zip(jax.tree_util.tree_leaves(got_s),
+                        jax.tree_util.tree_leaves(want_s)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=name)
+        # ... and the host face's single-branch step (family=...) IS the
+        # same branch: bit-equal to the switch dispatch
+        step1 = jax.jit(make_aggregator_step(n, m, prev, data_sizes=sizes,
+                                             family=name))
+        one_p, _ = step1(proc.params(), state, key, upd, w, s, avail, 2)
+        np.testing.assert_array_equal(_flat(one_p), _flat(want_p),
+                                      err_msg=f"{name} single-branch")
+
+
+def test_process_protocol(rng):
+    """params/init follow the uniform-pytree protocol; the factory matches
+    scan_engine.AGGREGATORS."""
+    from repro.fed.scan_engine import AGGREGATORS
+    assert AGGREGATORS == FAMILIES
+    prev = _params(rng)
+    for name in FAMILIES:
+        proc = make_aggregator_process(name)
+        ap = proc.params()
+        assert int(ap["family"]) == FAMILIES.index(name)
+        assert ap["theta"].shape == (6,)
+        state = proc.init(prev, 9)
+        assert state["mem"].shape == (9, 15)       # 4*3 + 3 flat params
+        assert state["tau"].shape == (9,)
+        for a, b in zip(jax.tree_util.tree_leaves(state["prev"]),
+                        jax.tree_util.tree_leaves(prev)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    with pytest.raises(ValueError):
+        make_aggregator_process("nope")
+    with pytest.raises(ValueError):
+        make_aggregator_step(4, 2, prev, backend="nope")
+
+
+# ------------------------------------------------- memory backend parity
+@pytest.mark.parametrize("n,p,m", [(7, 5, 3), (30, 610, 6), (100, 130, 11),
+                                   (300, 2100, 30), (2000, 300, 700)])
+def test_memory_kernel_backend_parity(rng, n, p, m):
+    """kernels/ops.memory_aggregate vs the jnp ref: scattered panel BIT
+    identical, reduction numerically equal (non-tile-multiple shapes; the
+    m = 700 row spans multiple 256-row update chunks — the M-tiling that
+    keeps the kernel under VMEM at datacenter m)."""
+    from repro.fed.aggregator_device import memory_scatter_reduce_ref
+    from repro.kernels.ops import memory_aggregate
+    mem = jnp.asarray(rng.normal(size=(n, p)), jnp.float32)
+    upd = jnp.asarray(rng.normal(size=(m, p)), jnp.float32)
+    sel = jnp.asarray(np.sort(rng.choice(n, size=m, replace=False)),
+                      jnp.int32)
+    valid = jnp.asarray(rng.random(m) < 0.8)
+    w = jnp.asarray(rng.random(n), jnp.float32)
+    w = w / w.sum()
+    ref_mem, ref_red = memory_scatter_reduce_ref(mem, upd, sel, valid, w)
+    nm, red = memory_aggregate(mem, upd, sel, valid, w)
+    np.testing.assert_array_equal(np.asarray(nm), np.asarray(ref_mem))
+    np.testing.assert_allclose(np.asarray(red), np.asarray(ref_red),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_memory_kernel_nan_containment(rng):
+    """One diverged client's NaN update may poison ONLY that client's
+    memory row: the kernel's one-hot matmul zeroes non-finite entries for
+    the dot and restores them as NaN via a mask dot (0·NaN would otherwise
+    leak across every scattered row of the chunk)."""
+    from repro.kernels.ops import memory_aggregate
+    n, p, m = 20, 33, 5
+    mem = jnp.asarray(rng.normal(size=(n, p)), jnp.float32)
+    upd = np.asarray(rng.normal(size=(m, p)), np.float32)
+    upd[0, 2] = np.nan                     # client sel[0] diverged
+    sel = jnp.asarray([3, 5, 9, 11, 17], jnp.int32)
+    valid = jnp.ones(m, bool)
+    w = jnp.full((n,), 1.0 / n, jnp.float32)
+    nm, _ = memory_aggregate(mem, jnp.asarray(upd), sel, valid, w)
+    nm = np.asarray(nm)
+    assert np.isnan(nm[3, 2])              # the diverged row marks itself
+    clean = np.delete(np.arange(n), 3)
+    assert np.isfinite(nm[clean]).all()    # ... and nobody else
+    np.testing.assert_array_equal(nm[5], upd[1])
+
+
+def test_memory_kernel_empty_and_invalid(rng):
+    """m = 0 and all-invalid selections: the panel passes through
+    untouched, the reduction is the plain weighted row sum."""
+    from repro.kernels.ops import memory_aggregate
+    n, p = 16, 9
+    mem = jnp.asarray(rng.normal(size=(n, p)), jnp.float32)
+    w = jnp.full((n,), 1.0 / n, jnp.float32)
+    for m in (0, 3):
+        upd = jnp.asarray(rng.normal(size=(m, p)), jnp.float32)
+        sel = jnp.asarray(np.arange(m), jnp.int32)
+        valid = jnp.zeros((m,), bool)
+        nm, red = memory_aggregate(mem, upd, sel, valid, w)
+        np.testing.assert_array_equal(np.asarray(nm), np.asarray(mem))
+        np.testing.assert_allclose(
+            np.asarray(red), np.asarray(jnp.tensordot(w, mem, axes=(0, 0))),
+            atol=1e-6)
+
+
+def test_scan_agg_backend_pallas_matches_ref(synthetic_ds):
+    """ScanConfig.agg_backend="pallas" routes the in-scan memory
+    scatter+reduce through the fused kernel and reproduces the ref
+    backend's trajectory (selected sets exact — FedGS ignores params —
+    losses to float32 round-off)."""
+    ds = synthetic_ds
+    h = oracle_h(ds.opt_params)
+    mode = make_mode("LN", n_clients=ds.n_clients, data_sizes=ds.sizes,
+                     label_sets=ds.label_sets(), num_labels=ds.num_classes,
+                     seed=7)
+    hists = {}
+    for backend in ("ref", "pallas"):
+        eng = ScanEngine(ds, logistic_regression(),
+                         ScanConfig(rounds=6, m=6, local_steps=5,
+                                    batch_size=10, lr=0.1, eval_every=1,
+                                    sampler="fedgs", max_sweeps=16,
+                                    aggregator="memory",
+                                    agg_backend=backend))
+        hists[backend] = eng.run(eng.cell(seed=0, mode=mode, alpha=1.0, h=h))
+    np.testing.assert_array_equal(hists["ref"].sel, hists["pallas"].sel)
+    np.testing.assert_allclose(hists["ref"].val_loss,
+                               hists["pallas"].val_loss, atol=1e-5)
+
+
+# --------------------------------------------------------- engine parity
+def _host_scan_pair(ds, proc, rounds=8, frac=0.2, seed=3):
+    mode = make_mode("IDL", n_clients=ds.n_clients, data_sizes=ds.sizes,
+                     label_sets=ds.label_sets(), num_labels=ds.num_classes,
+                     seed=7)
+    sampler = FedGSSampler(alpha=1.0, max_sweeps=16)
+    cfg = FLConfig(rounds=rounds, sample_frac=frac, local_steps=5,
+                   batch_size=10, lr=0.1, eval_every=1, seed=seed)
+    eng = FLEngine(ds, logistic_regression(), sampler, mode, cfg,
+                   aggregator=proc)
+    eng.install_oracle_graph(ds.opt_params)
+    hist = eng.run()
+    masks = precompute_masks(mode, rounds, cfg.avail_seed)
+    assert masks.sum(1).min() >= eng.m     # the parity precondition
+    seng = ScanEngine(ds, logistic_regression(),
+                      ScanConfig(rounds=rounds, m=eng.m, local_steps=5,
+                                 batch_size=10, lr=0.1, eval_every=1,
+                                 sampler="fedgs", max_sweeps=16),
+                      use_masks=True)
+    sh = seng.run(seng.cell(seed=seed, masks=masks, alpha=1.0,
+                            h=eng.sampler._h, aggregator_process=proc))
+    return eng, hist, sh
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_flengine_scanengine_parity_per_family(synthetic_ds, family):
+    """FLEngine (ServerAggregator host face) ≡ ScanEngine (in-scan switch)
+    under EVERY aggregator family: identical sampled sets, val loss within
+    float32 round-off — both paths run the one device apply."""
+    proc = make_aggregator_process(family)
+    eng, hist, sh = _host_scan_pair(synthetic_ds, proc)
+    for i, t in enumerate(hist.rounds):
+        assert hist.sampled[i] == sh.sampled(t).tolist(), \
+            f"{family} round {t}"
+    np.testing.assert_allclose(
+        sh.val_loss[np.asarray(hist.rounds)], np.asarray(hist.val_loss),
+        atol=1e-4)
+    np.testing.assert_array_equal(eng.counts, sh.counts)
+
+
+def test_mixed_aggregator_batch_equals_per_cell(synthetic_ds):
+    """THE aggregator-subsystem acceptance: one vmapped program running one
+    cell per family (five server-update rules behind the one lax.switch
+    step) equals the five per-cell runs."""
+    ds = synthetic_ds
+    h = oracle_h(ds.opt_params)
+    mode = make_mode("LN", n_clients=ds.n_clients, data_sizes=ds.sizes,
+                     label_sets=ds.label_sets(), num_labels=ds.num_classes,
+                     seed=7)
+    eng = ScanEngine(ds, logistic_regression(),
+                     ScanConfig(rounds=8, m=6, local_steps=5, batch_size=10,
+                                lr=0.1, eval_every=1, sampler="fedgs",
+                                max_sweeps=16))
+    procs = [make_aggregator_process(f) for f in FAMILIES]
+    cells = [eng.cell(seed=i, mode=mode, h=h, aggregator_process=p,
+                      avail_seed=80 + i) for i, p in enumerate(procs)]
+    batch = eng.run_batch(cells)
+    for proc, cell, b in zip(procs, cells, batch):
+        single = eng.run(cell)
+        np.testing.assert_array_equal(b.sel, single.sel,
+                                      err_msg=proc.family)
+        np.testing.assert_array_equal(b.counts, single.counts)
+        np.testing.assert_allclose(b.val_loss, single.val_loss, atol=2e-6)
+        assert np.isfinite(b.val_loss).all()

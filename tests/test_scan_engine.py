@@ -314,6 +314,45 @@ def test_eval_every_cadence(synthetic_ds):
     assert np.isfinite(sh.best_loss)
 
 
+def test_fairness_host_device_parity():
+    """The jnp fairness twins (core/fairness.py) match the numpy faces on
+    integer and zero-count inputs (f32 vs f64 round-off only)."""
+    from repro.core.fairness import (
+        count_range, count_range_device, count_variance,
+        count_variance_device, gini, gini_device,
+    )
+    rng = np.random.default_rng(3)
+    cases = [rng.integers(0, 12, 30).astype(float),
+             np.zeros(17),                       # zero-sum gini guard
+             np.ones(9) * 4,                     # uniform -> gini 0
+             rng.random(50) * 100]
+    for v in cases:
+        assert float(count_variance_device(v)) == pytest.approx(
+            count_variance(v), rel=1e-5, abs=1e-5)
+        assert float(count_range_device(v)) == pytest.approx(
+            count_range(v.astype(int)) if np.all(v == v.astype(int))
+            else float(v.max() - v.min()), rel=1e-5, abs=1e-5)
+        assert float(gini_device(v)) == pytest.approx(gini(v), abs=1e-5)
+
+
+def test_scan_history_emits_gini(synthetic_ds):
+    """ScanHistory.gini tracks the device gini of the running counts at
+    every round (cross-checked against the host gini of the replayed
+    selections)."""
+    from repro.core.fairness import gini as gini_host
+    ds = synthetic_ds
+    rounds = 10
+    eng = ScanEngine(ds, logistic_regression(),
+                     _scan_cfg(rounds, 6, sampler="uniform"))
+    sh = eng.run(eng.cell(seed=0, mode=_mode("LN", ds)))
+    assert sh.gini.shape == (rounds,)
+    counts = np.zeros(ds.n_clients)
+    for t in range(rounds):
+        counts[sh.sampled(t)] += 1
+        assert sh.gini[t] == pytest.approx(gini_host(counts), abs=1e-5), t
+    assert sh.gini[-1] == pytest.approx(gini_host(sh.counts), abs=1e-5)
+
+
 def test_probs_table_matches_numpy_api(synthetic_ds):
     """AvailabilityMode.probs_table is the source of truth the numpy API
     wraps: table[t % period] == probs(t) for every mode."""
