@@ -17,11 +17,18 @@ import time
 RESULTS = pathlib.Path(__file__).resolve().parent / "results"
 
 SECTIONS = ["table2", "fig4", "table3", "table4", "dynamic", "scaling",
-            "engine", "availability", "aggregator", "kernels", "graph",
-            "roofline", "variants"]
+            "engine", "shard", "availability", "aggregator", "kernels",
+            "graph", "roofline", "variants"]
 
 
 def _section(name: str, quick: bool):
+    if name == "shard":
+        # sharded-vs-single run_batch: run_shard re-execs itself with 8
+        # forced CPU host devices when this process has fewer (XLA_FLAGS
+        # only takes effect before jax initializes)
+        from benchmarks import engine_bench as m
+        rows = m.run_shard(quick=quick)
+        return rows, m.summarize_shard(rows)
     if name == "table2":
         from benchmarks import table2_availability as m
     elif name == "fig4":

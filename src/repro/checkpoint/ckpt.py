@@ -1,7 +1,23 @@
 """Flat-npz pytree checkpointing (+ JSON metadata sidecar).
 
-Stores any dict-pytree of arrays (model params, optimizer state, FedGS round
-state: sampling counts v^t, the H matrix, rng key) with '/'-joined key paths.
+Stores any dict/list/tuple pytree of arrays (model params, optimizer state,
+FedGS round state: sampling counts v^t, the H matrix, rng key, the scan
+engine's FULL carry — aggregator slots, availability-chain state, sampler
+state) with '/'-joined key paths.
+
+Format notes (DESIGN.md §13):
+  * bf16 leaves: npz has no bfloat16, so raw bits are stored as uint16 under
+    a ``%bf16``-suffixed key and re-viewed on load.
+  * EMPTY containers ({} / [] / ()): these carry pytree *structure* but no
+    leaves (e.g. a stateless sampler's ``sampler_state`` is ``{}``), so a
+    purely leaf-keyed flat file would silently drop them and a later
+    ``load_checkpoint(..., like=...)`` rebuild would KeyError.  They are
+    recorded under a ``%empty``-suffixed sentinel key whose int8 payload
+    encodes the container kind (0=dict, 1=list, 2=tuple).
+  * sharded jax arrays: ``np.asarray`` on a fully-addressable array gathers
+    shards to one host buffer, so checkpoints written from a mesh-sharded
+    run are device-layout-free and restorable on any device count.
+  * leaf names themselves must not end in ``%bf16``/``%empty`` (reserved).
 """
 from __future__ import annotations
 
@@ -11,17 +27,24 @@ import os
 import jax
 import numpy as np
 
+_EMPTY_KINDS = ({}, [], ())          # payload value indexes this tuple
+
 
 def _flatten(tree, prefix=""):
     out = {}
     if isinstance(tree, dict):
+        if not tree:
+            out[prefix[:-1] + "%empty"] = np.int8(0)
         for k, v in tree.items():
             out.update(_flatten(v, f"{prefix}{k}/"))
     elif isinstance(tree, (list, tuple)):
+        if not tree:
+            out[prefix[:-1] + "%empty"] = np.int8(
+                1 if isinstance(tree, list) else 2)
         for i, v in enumerate(tree):
             out.update(_flatten(v, f"{prefix}{i}/"))
     else:
-        arr = np.asarray(tree)
+        arr = np.asarray(tree)       # gathers sharded jax arrays to host
         if arr.dtype.name == "bfloat16":       # npz has no bf16: store raw bits
             out[prefix[:-1] + "%bf16"] = arr.view(np.uint16)
         else:
@@ -40,16 +63,24 @@ def save_checkpoint(path: str, tree, metadata: dict | None = None):
 
 def load_checkpoint(path: str, like=None):
     """Returns the nested dict; if ``like`` (a template pytree) is given, the
-    result is reassembled to match its structure and dtypes."""
+    result is reassembled to match its structure and dtypes (missing keys
+    raise KeyError — callers use that to detect older checkpoint formats).
+    Without ``like``, empty dict subtrees come back as ``{}`` and numbered
+    list/tuple subtrees as dicts keyed '0', '1', ... (the flat file does not
+    record sequence kinds for non-empty containers)."""
     p = path if path.endswith(".npz") else path + ".npz"
     with np.load(p) as z:
-        flat = {}
+        flat, empties = {}, {}
         for k in z.files:
             if k.endswith("%bf16"):
                 import ml_dtypes
-                flat[k[:-5]] = z[k].view(ml_dtypes.bfloat16)
+                flat[k[:-len("%bf16")]] = z[k].view(ml_dtypes.bfloat16)
+            elif k.endswith("%empty"):
+                empties[k[:-len("%empty")]] = int(z[k])
             else:
                 flat[k] = z[k]
+    if "" in empties:                # the whole tree is one empty container
+        return type(_EMPTY_KINDS[empties[""]])()
     nested: dict = {}
     for k, v in flat.items():
         cur = nested
@@ -57,6 +88,12 @@ def load_checkpoint(path: str, like=None):
         for part in parts[:-1]:
             cur = cur.setdefault(part, {})
         cur[parts[-1]] = v
+    for k, kind in empties.items():
+        cur = nested
+        parts = k.split("/")
+        for part in parts[:-1]:
+            cur = cur.setdefault(part, {})
+        cur[parts[-1]] = type(_EMPTY_KINDS[kind])()
     if like is None:
         return nested
 

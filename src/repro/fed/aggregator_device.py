@@ -136,7 +136,8 @@ def fedavg_combine(stacked_params, weights, prev_params=None):
 
 
 def init_agg_state(params0, n_clients: int,
-                   memory_rows: int | None = None) -> dict:
+                   memory_rows: int | None = None,
+                   tau_rows: int | None = None) -> dict:
     """The uniform carried state every family shares (family-INDEPENDENT, so
     the engines build it without knowing the cell's aggregator):
 
@@ -154,9 +155,13 @@ def init_agg_state(params0, n_clients: int,
     passes 0 for non-memory families so a big-model FedAvg run never
     materializes the (N, P) panel (the pytree KEYS stay — uniformity is
     about structure; the scan path keeps the full panel because cells of
-    any family share one switch program).
+    any family share one switch program).  ``tau_rows`` decouples the
+    ``tau`` vector length from the panel rows: the shard_map'd engine's
+    psum mode keeps ``tau`` global (N,) while each silo shard holds only
+    its (N/s, P) panel slice (DESIGN.md §13).
     """
     rows = n_clients if memory_rows is None else memory_rows
+    trows = rows if tau_rows is None else tau_rows
     ravel, _, _ = _flat_template(params0)
     zeros = jax.tree_util.tree_map(jnp.zeros_like, params0)
     flat0 = ravel(params0)
@@ -164,7 +169,7 @@ def init_agg_state(params0, n_clients: int,
             "m1": zeros,
             "m2": zeros,
             "mem": jnp.tile(flat0[None, :], (rows, 1)),
-            "tau": jnp.zeros((rows,), jnp.float32)}
+            "tau": jnp.zeros((trows,), jnp.float32)}
 
 
 def memory_scatter_reduce_ref(mem, upd, sel, valid, w):
@@ -180,7 +185,8 @@ def make_aggregator_step(n: int, m: int, params_like, *, data_sizes=None,
                          backend: str = "ref",
                          interpret: bool | None = None,
                          family: str | None = None,
-                         memory_enabled: bool = True):
+                         memory_enabled: bool = True,
+                         panel_axis: str | None = None):
     """Compile-time constructor of the ONE per-round aggregator step
 
         ``step(aparams, state, key, stacked_updates, weights, s, avail, t)
@@ -208,6 +214,15 @@ def make_aggregator_step(n: int, m: int, params_like, *, data_sizes=None,
     (``init_agg_state(memory_rows=0)``) without tracing the scatter —
     callers (``ScanEngine``) must dispatch memory cells to a
     memory-enabled program.
+
+    ``panel_axis`` names a shard_map mesh axis over which the (N, P)
+    memory panel is ROW-sharded (the scan engine's "silo" axis, DESIGN.md
+    §13): the step then sees only the local (N/s, P) slice in
+    ``state["mem"]`` (``tau`` stays global (N,)), scatters the sampled
+    rows that land in its slice (out-of-range indices drop, XLA scatter
+    semantics), reduces its partial staleness-weighted sum and ``psum``s
+    across the axis — the per-tile locality of the fused kernel turned
+    into a collective.  Only meaningful inside ``shard_map``.
     """
     if backend not in BACKENDS:
         raise ValueError(f"backend must be one of {BACKENDS}, not {backend!r}")
@@ -280,7 +295,19 @@ def make_aggregator_step(n: int, m: int, params_like, *, data_sizes=None,
         wmem = sizes * gamma ** age                       # (N,)
         total = jnp.sum(wmem)
         wn = wmem / jnp.maximum(total, 1e-12)
-        if backend == "pallas":
+        if panel_axis is not None:
+            # row-sharded panel: scatter the sampled rows that fall in this
+            # shard's slice (out-of-range indices drop), partial-reduce the
+            # local rows, psum the (P,) partials across the silo axis
+            rows = state["mem"].shape[0]
+            off = jax.lax.axis_index(panel_axis) * rows
+            lsel = sel - off
+            hit = valid & (lsel >= 0) & (lsel < rows)
+            mem = state["mem"].at[jnp.where(hit, lsel, rows)].set(updf)
+            wn_l = jax.lax.dynamic_slice_in_dim(wn, off, rows)
+            red = jax.lax.psum(jnp.tensordot(wn_l, mem, axes=(0, 0)),
+                               panel_axis)
+        elif backend == "pallas":
             from repro.kernels.ops import memory_aggregate
             mem, red = memory_aggregate(state["mem"], updf, sel, valid, wn,
                                         interpret=interpret)

@@ -159,28 +159,39 @@ class FLEngine:
         params = self.model.init(key0)
         hist = History()
         start_round = 0
+        # server-update state (momentum / Adam moments / update memory):
+        # built from the initial params, then OVERWRITTEN wholesale by the
+        # checkpoint on resume — stateful aggregators (fedavgm / fedadam /
+        # fedprox_w / memory) resume bitwise-exactly (DESIGN.md §13; the
+        # pre-§13 format dropped this state, pinned fixed by
+        # tests/test_checkpoint_resume.py)
+        self._server.init(params)
         if resume and ckpt_path:
             import os
             from repro.checkpoint.ckpt import load_checkpoint
             if os.path.exists(ckpt_path if ckpt_path.endswith(".npz")
                               else ckpt_path + ".npz"):
-                state = load_checkpoint(ckpt_path,
-                                        like={"params": params,
-                                              "counts": self.counts,
-                                              "round": np.zeros((), np.int64)})
+                like = {"params": params, "counts": self.counts,
+                        "round": np.zeros((), np.int64),
+                        "server": self._server.state}
+                try:
+                    state = load_checkpoint(ckpt_path, like=like)
+                    self._server.state = jax.tree_util.tree_map(
+                        jnp.asarray, state["server"])
+                except KeyError:      # pre-§13 checkpoint: no server state —
+                    like.pop("server")                # aggregator restarts
+                    state = load_checkpoint(ckpt_path, like=like)
                 params = jax.tree_util.tree_map(jnp.asarray, state["params"])
                 self.counts = np.asarray(state["counts"], np.float64)
                 start_round = int(state["round"]) + 1
+                if "server" not in state:
+                    self._server.init(params)
 
         xs = jnp.asarray(self.ds.x)
         ys = jnp.asarray(self.ds.y)
         sizes = jnp.asarray(self.ds.sizes)
         xv = jnp.asarray(self.ds.x_val)
         yv = jnp.asarray(self.ds.y_val)
-        # server-update state (momentum / Adam moments / update memory)
-        # initialized from the round-``start_round`` params — a resume
-        # restarts stateful aggregators (exact for the default fedavg)
-        self._server.init(params)
 
         for t in range(start_round, cfg.rounds):
             rng = np.random.default_rng(np.random.SeedSequence([cfg.seed, t]))
@@ -227,8 +238,11 @@ class FLEngine:
                 from repro.checkpoint.ckpt import save_checkpoint
                 save_checkpoint(ckpt_path,
                                 {"params": params, "counts": self.counts,
-                                 "round": np.asarray(t, np.int64)},
+                                 "round": np.asarray(t, np.int64),
+                                 "server": self._server.state},
                                 metadata={"round": t,
-                                          "sampler": self.sampler.name})
+                                          "sampler": self.sampler.name,
+                                          "aggregator": self._server
+                                          .process.name})
         self.params = params
         return hist

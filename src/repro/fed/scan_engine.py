@@ -66,6 +66,37 @@ Dynamic 3DG
   ``ScanConfig.graph_backend="pallas"`` routes the rebuild's similarity
   matmul and APSP through the tiled kernels for large-N sweeps.
 
+Mesh scale-out (DESIGN.md §13)
+  ``ScanConfig.mesh=(cells,)`` or ``(cells, silo)`` runs ``run_batch``
+  under ``jax.experimental.shard_map`` on ``launch.mesh.make_engine_mesh``:
+  sweep cells shard over the "cells" axis (embarrassingly parallel —
+  per-cell subsystem state stays device-local; uneven batches are padded by
+  repeating the last cell and the pad trajectories dropped), and the "silo"
+  axis row-shards the vmap'd local-training client axis (each silo trains
+  its M/s chunk and ``all_gather``s the stacked updates — bitwise equal to
+  the single-device program by construction).  ``silo_reduce="psum"``
+  additionally row-shards the memory aggregator's (N, P) panel, turning the
+  staleness reduction into partial tensordots + a ``psum`` (numerically
+  equal, not bitwise — same contract as the Pallas backend's tile-order
+  partial sums).
+
+Exact-resume checkpointing (DESIGN.md §13)
+  ``run_batch(cells, ckpt_path=..., ckpt_every=k, resume=...)`` executes
+  the scan in k-round segments (``lax.scan`` over a ``t0 + arange(k)``
+  window — every per-round stream is keyed ``fold_in(key, t)`` with NO
+  cross-round rng state, so a resume replays the identical per-round
+  computation) and checkpoints the FULL carry — aggregator slots incl.
+  momentum/Adam/memory panel, availability-chain state, sampler state,
+  counts, H, embeddings — plus the accumulated trajectory and round index
+  through ``checkpoint.ckpt``.  A same-mesh same-cadence resume is bitwise
+  equal to the uninterrupted segmented run.  Saving gathers shards to host
+  npz (device-layout-free), so a run may resume on a DIFFERENT device
+  count / mesh (the loaded carry is resharded to the target program's
+  specs); cross-device-count runs are bitwise at ``ckpt_every=1`` — XLA
+  fuses a multi-round scan's while-body differently per SPMD partition
+  count and scan length (ulp-level eval drift, decisions unaffected), but
+  one-round segments compile identically everywhere and chain exactly.
+
 Typical use::
 
     eng = ScanEngine(ds, model, ScanConfig(rounds=60, m=6, sampler="fedgs"))
@@ -74,6 +105,7 @@ Typical use::
 """
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass
 from typing import Optional
 
@@ -81,7 +113,10 @@ import numpy as np
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
+from repro.checkpoint.ckpt import load_checkpoint, save_checkpoint
 from repro.core.availability import AvailabilityMode, host_trace
 from repro.core.availability_device import AvailabilityProcess, proc_draw
 from repro.core.graph_device import (
@@ -100,10 +135,15 @@ from repro.fed.aggregator_device import (
 from repro.fed.aggregator_device import FAMILIES as AGG_FAMILIES
 from repro.fed.client import make_local_trainer
 from repro.fed.models import FedModel
+from repro.launch.mesh import make_engine_mesh
+from repro.sharding.rules import (
+    ENGINE_SILO_AXIS, engine_batch_spec, engine_carry_specs,
+)
 
 SAMPLERS = FAMILIES            # ("fedgs", "uniform", "md", "poc")
 AGGREGATORS = AGG_FAMILIES     # ("fedavg", "fedavgm", "fedadam",
                                #  "fedprox_w", "memory")
+SILO_REDUCES = ("gather", "psum")
 
 
 @dataclass(frozen=True)
@@ -134,6 +174,11 @@ class ScanConfig:
     agg_backend: str = "ref"       # ref | pallas (memory scatter+reduce)
     probe_size: int = 64
     probe_seed: int = 777
+    # mesh scale-out (DESIGN.md §13): (cells,) or (cells, silo) device grid
+    # for shard_map'd run_batch; None = single-device (the default)
+    mesh: Optional[tuple] = None
+    cell_sharding: bool = True     # shard the cell-batch axis over "cells"
+    silo_reduce: str = "gather"    # gather (bitwise) | psum (panel-sharded)
 
     def __post_init__(self):
         if self.sampler not in SAMPLERS:
@@ -146,6 +191,16 @@ class ScanConfig:
             if getattr(self, knob) not in BACKENDS:
                 raise ValueError(f"{knob} must be one of {BACKENDS}, "
                                  f"not {getattr(self, knob)!r}")
+        if self.silo_reduce not in SILO_REDUCES:
+            raise ValueError(f"silo_reduce must be one of {SILO_REDUCES}, "
+                             f"not {self.silo_reduce!r}")
+        if self.mesh is not None:
+            shape = tuple(int(s) for s in self.mesh)
+            if len(shape) not in (1, 2) or any(s < 1 for s in shape):
+                raise ValueError(f"mesh must be (cells,) or (cells, silo) "
+                                 f"with positive sizes, not {self.mesh!r}")
+            object.__setattr__(self, "mesh",
+                               shape if len(shape) == 2 else shape + (1,))
 
 
 # --------------------------------------------------------------- host helpers
@@ -223,14 +278,36 @@ class ScanHistory:
 
 # ---------------------------------------------------------------- the program
 def _build_simulate(ds: FedDataset, model: FedModel, cfg: ScanConfig,
-                    use_masks: bool, with_memory: bool = False):
+                    use_masks: bool, with_memory: bool = False, *,
+                    silo: int = 1, panel_axis: Optional[str] = None):
     """Closure-captures the (cell-shared) dataset and returns the pure
-    ``simulate(cell) -> traj`` program to be jit'd / vmap'd.
+    per-cell closures the engine jit/vmap/shard_maps:
+
+      ``init(cell) -> carry``            the full scan carry (dict pytree:
+                                         aggregator state incl. params,
+                                         counts, H, embeddings, availability
+                                         + sampler state)
+      ``segment(seg_len)(cell, carry, t0) -> (carry, traj)``
+                                         ``seg_len`` rounds starting at
+                                         ``t0`` — the checkpoint/resume unit
+      ``simulate(cell) -> out``          init + one full-run segment
+
+    Segmenting is exact because every per-round stream is ``fold_in(key,
+    t)``-keyed off the round index alone (no cross-round rng carry), and
+    the lr schedule / mask table are indexed by the global ``t`` inside the
+    step body — a ``(k)+(T-k)`` split replays the identical per-round
+    computation.
 
     ``with_memory`` statically sizes the aggregator state's (N, P)
     update-memory panel: the engine compiles the panel-carrying variant
     only when a memory-family cell is actually in play (the common
-    fedavg sweep keeps the pre-subsystem carry: params + counts + H)."""
+    fedavg sweep keeps the pre-subsystem carry: params + counts + H).
+
+    ``silo > 1`` chunks the vmap'd local-training client axis over the
+    shard_map "silo" mesh axis (each silo trains ceil(M/s) clients with the
+    SAME per-client fold_in keys, then ``all_gather``s the stacked updates
+    — bitwise equal to the unsharded program); ``panel_axis`` additionally
+    row-shards the memory panel (see ``make_aggregator_step``)."""
     n = int(ds.n_clients)
     m = int(cfg.m)
     xs = jnp.asarray(ds.x)
@@ -299,12 +376,20 @@ def _build_simulate(ds: FedDataset, model: FedModel, cfg: ScanConfig,
     agg_step = make_aggregator_step(
         n, m, jax.eval_shape(model.init, jax.random.PRNGKey(0)),
         data_sizes=ds.sizes, backend=cfg.agg_backend,
-        memory_enabled=with_memory)
+        memory_enabled=with_memory, panel_axis=panel_axis)
+    if panel_axis is not None and n % silo:
+        raise ValueError(f"silo_reduce='psum' row-shards the (N, P) memory "
+                         f"panel: N={n} must divide by silo={silo}")
+    mem_rows = (n // silo if panel_axis is not None else n) \
+        if with_memory else 0
+    chunk = -(-m // silo)              # per-silo local-training clients
 
-    def simulate(cell):
+    def init(cell):
+        """The FULL scan carry — everything a bitwise-exact resume needs
+        (plus the round index and rng cell keys, which live in the cell /
+        checkpoint metadata)."""
         key0 = cell["key"]
         params0 = model.init(key0)
-        counts0 = jnp.zeros((n,), jnp.float32)
 
         if dynamic:
             # init: one all-clients probe round from a fresh model (the
@@ -318,119 +403,238 @@ def _build_simulate(ds: FedDataset, model: FedModel, cfg: ScanConfig,
         else:
             emb0 = jnp.zeros((1, 1), jnp.float32)
             h0 = cell["h"]
+        astate0 = init_agg_state(params0, n, memory_rows=mem_rows,
+                                 tau_rows=n if with_memory else 0)
+        return {"agg": astate0,
+                "counts": jnp.zeros((n,), jnp.float32),
+                "h": h0, "emb": emb0,
+                "proc": cell.get("proc_state", {}),
+                "sampler": cell.get("sampler_state", {})}
 
-        def step(carry, sx):
-            astate, counts, h, emb, pstate, sstate = carry
-            params = astate["prev"]        # the aggregator state IS the
-            t, lr = sx["t"], sx["lr"]      # global-params carry
-            key = jax.random.fold_in(key0, t)
+    def step(cell, carry, t):
+        astate, counts = carry["agg"], carry["counts"]
+        h, emb = carry["h"], carry["emb"]
+        pstate, sstate = carry["proc"], carry["sampler"]
+        params = astate["prev"]        # the aggregator state IS the
+        lr = lrs[t]                    # global-params carry
+        key = jax.random.fold_in(cell["key"], t)
 
-            # 1. availability A_t — the shared device-native process draw
-            # (core/availability_device.proc_draw: family step -> Bernoulli
-            # -> force-one); the process state rides the scan carry
-            if use_masks:
-                avail = sx["mask"]
-            else:
-                avail, pstate = proc_draw(
-                    cell["proc"], pstate,
-                    jax.random.fold_in(cell["avail_key"], t), t)
-
-            # 2. sampler: S_t subset of A_t, |S_t| = min(M, |A_t|) — the
-            # switch step dispatches on the cell's family; the sampler
-            # state rides the scan carry like the availability state
-            skey = jax.random.fold_in(cell["sampler_key"], t)
-            s, sstate = sampler_step(
-                cell["sampler"], sstate, skey,
-                {"h": h, "counts": counts, "params": params}, avail, t)
-            sel, valid = select(s)
-
-            # 3. vmap'd local training on the M gathered clients
-            key, sub = jax.random.split(key)
-            local = trainer(params, xs[sel], ys[sel], sizes_i[sel], lr,
-                            jax.random.split(sub, m))
-
-            # 4. server update — the aggregator switch step dispatches on
-            # the cell's family (Eq. 18 weights: pads carry zero weight;
-            # the fedavg branch is bit-identical to the legacy aggregate())
-            params, astate = agg_step(
-                cell["agg"], astate, jax.random.fold_in(cell["agg_key"], t),
-                local, sizes_f[sel] * valid, s, avail, t, sel, valid)
-
-            # 5. count update v^{t+1}
-            counts = counts + s.astype(jnp.float32)
-
-            # dynamic 3DG: refresh participants' embeddings; rebuild every K
-            if dynamic:
-                e_sel = embed_mean(local)
-                emb = emb.at[sel].set(
-                    jnp.where(valid[:, None], e_sel, emb[sel]))
-                h = jax.lax.cond(
-                    (t + 1) % cfg.graph_refresh_every == 0,
-                    rebuild_h, lambda e: h, emb)
-
-            # 6. eval (cond-gated to the eval_every cadence)
-            def do_eval(_):
-                return model.loss(params, xv, yv), model.accuracy(params, xv, yv)
-
-            if cfg.eval_every == 1:
-                vl, va = do_eval(None)
-            else:
-                vl, va = jax.lax.cond(
-                    (jnp.mod(t, cfg.eval_every) == 0) | (t == cfg.rounds - 1),
-                    do_eval,
-                    lambda _: (jnp.float32(jnp.nan), jnp.float32(jnp.nan)),
-                    None)
-            # fairness metrics — the shared device twins (core/fairness.py)
-            cvar = count_variance_device(counts)
-            gini = gini_device(counts)
-            out = {"val_loss": vl, "val_acc": va, "count_var": cvar,
-                   "gini": gini, "sel": sel.astype(jnp.int32), "valid": valid}
-            return (astate, counts, h, emb, pstate, sstate), out
-
-        sxs = {"t": jnp.arange(cfg.rounds), "lr": lrs}
+        # 1. availability A_t — the shared device-native process draw
+        # (core/availability_device.proc_draw: family step -> Bernoulli
+        # -> force-one); the process state rides the scan carry
         if use_masks:
-            sxs["mask"] = cell["masks"]
-        pstate0 = cell.get("proc_state", {})
-        sstate0 = cell.get("sampler_state", {})
-        astate0 = init_agg_state(params0, n,
-                                 memory_rows=n if with_memory else 0)
-        (astate, counts, _, _, _, _), traj = jax.lax.scan(
-            step, (astate0, counts0, h0, emb0, pstate0, sstate0), sxs)
-        return {"params": astate["prev"], "counts": counts, **traj}
+            avail = cell["masks"][t]
+        else:
+            avail, pstate = proc_draw(
+                cell["proc"], pstate,
+                jax.random.fold_in(cell["avail_key"], t), t)
 
-    return simulate
+        # 2. sampler: S_t subset of A_t, |S_t| = min(M, |A_t|) — the
+        # switch step dispatches on the cell's family; the sampler
+        # state rides the scan carry like the availability state
+        skey = jax.random.fold_in(cell["sampler_key"], t)
+        s, sstate = sampler_step(
+            cell["sampler"], sstate, skey,
+            {"h": h, "counts": counts, "params": params}, avail, t)
+        sel, valid = select(s)
+
+        # 3. vmap'd local training on the M gathered clients — under a
+        # silo'd mesh each shard trains its ceil(M/s) chunk (same
+        # per-client keys) and all_gathers the stacked updates
+        key, sub = jax.random.split(key)
+        keys_m = jax.random.split(sub, m)
+        if silo > 1:
+            pad = chunk * silo - m
+            sel_p = jnp.concatenate([sel, sel[-1:].repeat(pad, 0)]) \
+                if pad else sel
+            keys_p = jnp.concatenate([keys_m, keys_m[-1:].repeat(pad, 0)]) \
+                if pad else keys_m
+            i0 = jax.lax.axis_index(ENGINE_SILO_AXIS) * chunk
+            sel_l = jax.lax.dynamic_slice_in_dim(sel_p, i0, chunk)
+            keys_l = jax.lax.dynamic_slice_in_dim(keys_p, i0, chunk)
+            local_l = trainer(params, xs[sel_l], ys[sel_l], sizes_i[sel_l],
+                              lr, keys_l)
+            local = jax.tree_util.tree_map(
+                lambda a: jax.lax.all_gather(
+                    a, ENGINE_SILO_AXIS, axis=0, tiled=True)[:m], local_l)
+        else:
+            local = trainer(params, xs[sel], ys[sel], sizes_i[sel], lr,
+                            keys_m)
+
+        # 4. server update — the aggregator switch step dispatches on
+        # the cell's family (Eq. 18 weights: pads carry zero weight;
+        # the fedavg branch is bit-identical to the legacy aggregate())
+        params, astate = agg_step(
+            cell["agg"], astate, jax.random.fold_in(cell["agg_key"], t),
+            local, sizes_f[sel] * valid, s, avail, t, sel, valid)
+
+        # 5. count update v^{t+1}
+        counts = counts + s.astype(jnp.float32)
+
+        # dynamic 3DG: refresh participants' embeddings; rebuild every K
+        if dynamic:
+            e_sel = embed_mean(local)
+            emb = emb.at[sel].set(
+                jnp.where(valid[:, None], e_sel, emb[sel]))
+            h = jax.lax.cond(
+                (t + 1) % cfg.graph_refresh_every == 0,
+                rebuild_h, lambda e: h, emb)
+
+        # 6. eval (cond-gated to the eval_every cadence)
+        def do_eval(_):
+            return model.loss(params, xv, yv), model.accuracy(params, xv, yv)
+
+        if cfg.eval_every == 1:
+            vl, va = do_eval(None)
+        else:
+            vl, va = jax.lax.cond(
+                (jnp.mod(t, cfg.eval_every) == 0) | (t == cfg.rounds - 1),
+                do_eval,
+                lambda _: (jnp.float32(jnp.nan), jnp.float32(jnp.nan)),
+                None)
+        # fairness metrics — the shared device twins (core/fairness.py)
+        cvar = count_variance_device(counts)
+        gini = gini_device(counts)
+        out = {"val_loss": vl, "val_acc": va, "count_var": cvar,
+               "gini": gini, "sel": sel.astype(jnp.int32), "valid": valid}
+        return {"agg": astate, "counts": counts, "h": h, "emb": emb,
+                "proc": pstate, "sampler": sstate}, out
+
+    def segment(seg_len: int):
+        def run_segment(cell, carry, t0):
+            return jax.lax.scan(lambda c, t: step(cell, c, t), carry,
+                                t0 + jnp.arange(seg_len))
+        return run_segment
+
+    def simulate(cell):
+        carry, traj = segment(cfg.rounds)(cell, init(cell), jnp.int32(0))
+        return {"params": carry["agg"]["prev"], "counts": carry["counts"],
+                **traj}
+
+    return {"init": init, "segment": segment, "simulate": simulate}
 
 
 # ------------------------------------------------------------------- engine
 class ScanEngine:
     """Host-facing wrapper: builds cells, compiles the scanned program once,
-    and runs single cells or whole batched sweeps."""
+    and runs single cells or whole batched sweeps — optionally shard_map'd
+    over a ("cells", "silo") mesh and/or segmented for exact-resume
+    checkpointing (DESIGN.md §13)."""
 
     def __init__(self, ds: FedDataset, model: FedModel, cfg: ScanConfig, *,
                  use_masks: bool = False):
         self.ds, self.model, self.cfg = ds, model, cfg
         self.n = ds.n_clients
         self.use_masks = use_masks
-        self._sims: dict = {}         # with_memory -> simulate closure
-        self._jits: dict = {}         # (with_memory, batched) -> jit'd fn
+        self._sims: dict = {}         # (wm, silo, panel) -> closures
+        self._jits: dict = {}         # program key -> jit'd fn
+        self._cspecs: dict = {}       # (wm, silo, panel) -> carry spec tree
+        self._mesh_obj = None
+
+    # ----------------------------------------------------------- programs
+    def _mesh(self):
+        if self.cfg.mesh is None:
+            return None
+        if self._mesh_obj is None:
+            self._mesh_obj = make_engine_mesh(self.cfg.mesh)
+        return self._mesh_obj
+
+    def _wm(self, cells: list[dict]) -> bool:
+        """Does this batch need the (N, P) update-memory panel?"""
+        midx = AGGREGATORS.index("memory")
+        return self.cfg.aggregator == "memory" or any(
+            int(np.asarray(c["agg"]["family"])) == midx for c in cells)
+
+    def _variant(self, batched: bool):
+        """(mesh, silo, panel_axis-factory) for this run shape."""
+        mesh = self._mesh() if batched else None
+        silo = int(mesh.devices.shape[1]) if mesh is not None else 1
+
+        def panel(wm: bool):
+            return ENGINE_SILO_AXIS if (
+                silo > 1 and self.cfg.silo_reduce == "psum" and wm) else None
+        return mesh, silo, panel
+
+    def _closures(self, wm: bool, silo: int, panel: Optional[str]):
+        key = (wm, silo, panel)
+        if key not in self._sims:
+            self._sims[key] = _build_simulate(
+                self.ds, self.model, self.cfg, self.use_masks,
+                with_memory=wm, silo=silo, panel_axis=panel)
+        return self._sims[key]
 
     def _program(self, cells: list[dict], batched: bool):
-        """The compiled program variant for these cells: the (N, P)
+        """The compiled full-run program variant for these cells: the (N, P)
         update-memory panel rides the scan carry ONLY when a memory-family
         cell (or the engine default) asks for it — the common fedavg sweep
-        keeps the lean carry."""
-        midx = AGGREGATORS.index("memory")
-        wm = self.cfg.aggregator == "memory" or any(
-            int(np.asarray(c["agg"]["family"])) == midx for c in cells)
-        key = (wm, batched)
+        keeps the lean carry.  With a mesh, the batched program is
+        shard_map'd over ("cells", "silo")."""
+        wm = self._wm(cells)
+        mesh, silo, panelf = self._variant(batched)
+        panel = panelf(wm)
+        key = (wm, batched, silo, panel)
         if key not in self._jits:
-            if wm not in self._sims:
-                self._sims[wm] = _build_simulate(
-                    self.ds, self.model, self.cfg, self.use_masks,
-                    with_memory=wm)
-            fn = self._sims[wm]
-            self._jits[key] = jax.jit(jax.vmap(fn) if batched else fn)
+            fn = self._closures(wm, silo, panel)["simulate"]
+            if batched:
+                fn = jax.vmap(fn)
+            if mesh is not None:
+                spec = engine_batch_spec(self.cfg.cell_sharding)
+                fn = shard_map(fn, mesh=mesh, in_specs=(spec,),
+                               out_specs=spec, check_rep=False)
+            self._jits[key] = jax.jit(fn)
         return self._jits[key]
+
+    def _carry_specs(self, stacked: dict, wm: bool, silo: int,
+                     panel: Optional[str], init_fn):
+        """PartitionSpec tree for the carry (structure from an abstract
+        eval — shapes themselves are not consulted beyond rank)."""
+        key = (wm, silo, panel)
+        if key not in self._cspecs:
+            shapes = jax.eval_shape(init_fn, stacked)
+            self._cspecs[key] = engine_carry_specs(
+                shapes, cell_sharding=self.cfg.cell_sharding,
+                panel_sharded=panel is not None)
+        return self._cspecs[key]
+
+    def _init_program(self, stacked: dict, wm: bool):
+        mesh, silo, panelf = self._variant(True)
+        panel = panelf(wm)
+        key = (wm, "init", silo, panel)
+        if key not in self._jits:
+            fn = jax.vmap(self._closures(wm, silo, panel)["init"])
+            if mesh is not None:
+                cspecs = self._carry_specs(stacked, wm, silo, panel, fn)
+                spec = engine_batch_spec(self.cfg.cell_sharding)
+                fn = shard_map(fn, mesh=mesh, in_specs=(spec,),
+                               out_specs=cspecs, check_rep=False)
+            self._jits[key] = jax.jit(fn)
+        return self._jits[key]
+
+    def _segment_program(self, stacked: dict, wm: bool, seg_len: int):
+        mesh, silo, panelf = self._variant(True)
+        panel = panelf(wm)
+        key = (wm, "seg", seg_len, silo, panel)
+        if key not in self._jits:
+            cl = self._closures(wm, silo, panel)
+            fn = jax.vmap(cl["segment"](seg_len), in_axes=(0, 0, None))
+            if mesh is not None:
+                cspecs = self._carry_specs(stacked, wm, silo, panel,
+                                           jax.vmap(cl["init"]))
+                spec = engine_batch_spec(self.cfg.cell_sharding)
+                fn = shard_map(fn, mesh=mesh, in_specs=(spec, cspecs, P()),
+                               out_specs=(cspecs, spec), check_rep=False)
+            self._jits[key] = jax.jit(fn)
+        return self._jits[key]
+
+    def _pad_cells(self, cells: list[dict]) -> list[dict]:
+        """Pad an uneven batch to a multiple of the "cells" axis size by
+        repeating the last cell (pad trajectories are dropped on return)."""
+        mesh = self._mesh()
+        if mesh is None or not self.cfg.cell_sharding:
+            return list(cells)
+        c = int(mesh.devices.shape[0])
+        r = len(cells) % c
+        return list(cells) + [cells[-1]] * ((c - r) % c)
 
     # ------------------------------------------------------------- cells
     def cell(self, *, seed: int = 0, mode: Optional[AvailabilityMode] = None,
@@ -513,18 +717,78 @@ class ScanEngine:
                            counts=pick(out["counts"]))
 
     def run(self, cell: dict) -> ScanHistory:
-        """Execute one cell; the whole trajectory is a single device program."""
+        """Execute one cell; the whole trajectory is a single device program
+        (always single-device — the mesh applies to ``run_batch``)."""
         out = jax.block_until_ready(self._program([cell], False)(cell))
         self.params = out["params"]
         return self._to_history(out)
 
-    def run_batch(self, cells: list[dict]) -> list[ScanHistory]:
-        """Execute B cells as ONE vmapped-and-scanned XLA program."""
-        fn = self._program(cells, True)
-        out = jax.block_until_ready(fn(stack_cells(cells)))
-        self.params = out["params"]           # (B, ...) stacked
-        return [self._to_history(out, i) for i in range(len(cells))]
+    def run_batch(self, cells: list[dict], *,
+                  ckpt_path: Optional[str] = None, ckpt_every: int = 0,
+                  resume: bool = False) -> list[ScanHistory]:
+        """Execute B cells as ONE vmapped-and-scanned XLA program
+        (shard_map'd over the mesh when ``cfg.mesh`` is set).
+
+        Checkpointing (DESIGN.md §13): with ``ckpt_path`` the scan runs in
+        ``ckpt_every``-round segments and after each non-final segment the
+        FULL carry + accumulated trajectory + next round index are saved
+        (gathered to host npz — device-layout-free).  ``resume=True`` picks
+        up from ``ckpt_path`` if it exists (else starts fresh); at the same
+        mesh + cadence the tail recomputes bitwise-identically to the
+        uninterrupted run.  Resume on a DIFFERENT device count / mesh
+        reshards the loaded carry to the target program's specs and is
+        bitwise at ``ckpt_every=1`` (one-round segments compile identically
+        on every device count; longer scans pick up ulp-level eval drift
+        from SPMD-/length-dependent while-body fusion).
+        """
+        b = len(cells)
+        cells_p = self._pad_cells(cells)
+        if ckpt_path is None and not resume:
+            fn = self._program(cells_p, True)
+            out = jax.block_until_ready(fn(stack_cells(cells_p)))
+            self.params = jax.tree_util.tree_map(lambda x: x[:b],
+                                                 out["params"])
+            return [self._to_history(out, i) for i in range(b)]
+
+        wm = self._wm(cells_p)
+        stacked = stack_cells(cells_p)
+        rounds = self.cfg.rounds
+        np_of = lambda tree: jax.tree_util.tree_map(np.asarray, tree)  # noqa: E731
+        t0, parts, carry = 0, [], None
+        if resume and ckpt_path is not None:
+            p = ckpt_path if ckpt_path.endswith(".npz") else ckpt_path + ".npz"
+            if os.path.exists(p):
+                state = load_checkpoint(ckpt_path)
+                t0 = int(np.asarray(state["round"]))
+                carry = state["carry"]
+                parts.append(state["traj"])
+        if carry is None:
+            carry = self._init_program(stacked, wm)(stacked)
+        every = int(ckpt_every) if ckpt_every else rounds
+        while t0 < rounds:
+            k = min(every, rounds - t0)
+            carry, traj = jax.block_until_ready(
+                self._segment_program(stacked, wm, k)(
+                    stacked, carry, jnp.int32(t0)))
+            parts.append(np_of(traj))
+            t0 += k
+            if ckpt_path is not None and t0 < rounds:
+                save_checkpoint(
+                    ckpt_path,
+                    {"carry": np_of(carry), "round": np.int64(t0),
+                     "traj": jax.tree_util.tree_map(
+                         lambda *xs: np.concatenate(xs, axis=1), *parts)},
+                    metadata={"round": t0, "rounds": rounds, "b": b,
+                              "cells": len(cells_p),
+                              "mesh": self.cfg.mesh})
+        traj = jax.tree_util.tree_map(lambda *xs: np.concatenate(xs, axis=1),
+                                      *parts)
+        out = {**traj, "params": np_of(carry["agg"]["prev"]),
+               "counts": np.asarray(carry["counts"])}
+        self.params = jax.tree_util.tree_map(lambda x: x[:b], out["params"])
+        return [self._to_history(out, i) for i in range(b)]
 
     def lower_batch(self, cells: list[dict]):
         """Lower (without running) — for compile-time measurement."""
-        return self._program(cells, True).lower(stack_cells(cells))
+        cells_p = self._pad_cells(cells)
+        return self._program(cells_p, True).lower(stack_cells(cells_p))

@@ -47,10 +47,11 @@ class ServerAggregator:
     numerics), but non-memory families never materialize the (N, P)
     update-memory panel (at LM scale that panel is N × |params| — the
     scan path carries it because mixed-family cells share one program;
-    the eager host path knows its family up front).  Note the aggregator
-    state is NOT checkpointed by the host engine — a resume restarts
-    momentum/memory from ``init`` (exact for the stateless ``fedavg``;
-    documented drift for stateful families)."""
+    the eager host path knows its family up front).  The aggregator state
+    IS checkpointed by the host engine (``FLEngine`` saves/restores
+    ``ServerAggregator.state`` wholesale), so a resume is bitwise-exact for
+    every family — stateless fedavg and the stateful momentum/Adam/memory
+    ones alike (DESIGN.md §13; pinned by tests/test_checkpoint_resume.py)."""
 
     def __init__(self, process: AggregatorProcess | None = None, *,
                  n_clients: int, data_sizes=None, backend: str = "ref",

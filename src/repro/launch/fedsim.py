@@ -121,12 +121,42 @@ def aggregator_program(aggregator: str, n_clients: int, m_sel: int, *,
     return jax.jit(apply), args
 
 
+def sweep_program(mesh_shape: tuple, *, n_clients: int = 32, rounds: int = 8,
+                  aggregator: str = "memory"):
+    """Lower the shard_map'd sweep engine (``fed.scan_engine.run_batch``
+    under ``ScanConfig.mesh``, DESIGN.md §13) at dry-run scale: one cell
+    per "cells"-axis shard, the silo axis row-sharding local training (and
+    the memory panel via ``silo_reduce="psum"`` when it divides N).
+    Returns the lowered-and-compiled program plus its HLO stats."""
+    from repro.core.availability_device import make_process
+    from repro.data.synthetic import make_synthetic
+    from repro.fed.models import logistic_regression
+    from repro.fed.scan_engine import ScanConfig, ScanEngine
+
+    ds = make_synthetic(n_clients=n_clients, alpha=0.5, beta=0.5, seed=0)
+    silo = mesh_shape[1] if len(mesh_shape) > 1 else 1
+    cfg = ScanConfig(rounds=rounds, m=4, local_steps=2, batch_size=8,
+                     sampler="uniform", aggregator=aggregator,
+                     mesh=tuple(mesh_shape),
+                     silo_reduce="psum" if silo > 1 and n_clients % silo == 0
+                     else "gather")
+    eng = ScanEngine(ds, logistic_regression(dim=ds.x.shape[-1]), cfg)
+    cells = [eng.cell(seed=s, process=make_process(
+        "GE", n_clients=n_clients, data_sizes=ds.sizes, rounds=rounds))
+        for s in range(mesh_shape[0])]
+    compiled = eng.lower_batch(cells).compile()
+    return compiled, hlo_analyze(compiled.as_text())
+
+
 def run(n_clients: int, *, multi_pod: bool, sample_frac: float = 0.1,
         n_max: int = 512, local_steps: int = 10, batch: int = 10,
         force: bool = False, solver_backend: str = "ref",
-        aggregator: str = "fedavg", agg_backend: str = "ref") -> dict:
+        aggregator: str = "fedavg", agg_backend: str = "ref",
+        sweep_mesh: tuple | None = None) -> dict:
     mesh_tag = "pod2" if multi_pod else "pod1"
     key = f"fedsim__c{n_clients}__{mesh_tag}"
+    if sweep_mesh:
+        key += f"__sweep{'x'.join(str(s) for s in sweep_mesh)}"
     if solver_backend != "ref":
         key += f"__{solver_backend}"
     if aggregator != "fedavg":
@@ -205,6 +235,15 @@ def run(n_clients: int, *, multi_pod: bool, sample_frac: float = 0.1,
             "flops": ahc.flops, "bytes": ahc.bytes,
             "mem": _mem_dict(acomp),
         }
+        # ---- the shard_map'd sweep engine on the ("cells","silo") mesh ---
+        if sweep_mesh:
+            scomp, shc = sweep_program(sweep_mesh)
+            rec["sweep_engine"] = {
+                "mesh": list(sweep_mesh),
+                "flops_per_device": shc.flops, "bytes_per_device": shc.bytes,
+                "collective_bytes_per_device": shc.collective_bytes,
+                "mem": _mem_dict(scomp),
+            }
         # roofline terms for the round program
         rec["compute_term_s"] = hc.flops / PEAK_FLOPS
         rec["memory_term_s"] = hc.bytes / HBM_BW
@@ -242,10 +281,17 @@ def main():
     ap.add_argument("--agg-backend", default="ref", choices=("ref", "pallas"),
                     help="route the memory family's (N, P) panel "
                          "scatter+reduce through the fused Pallas kernel")
+    ap.add_argument("--sweep-mesh", default=None, metavar="CxS",
+                    help="also lower the shard_map'd sweep engine on a "
+                         "(cells[, silo]) engine mesh, e.g. 8 or 4x2 "
+                         "(fed/scan_engine.py, DESIGN.md §13)")
     args = ap.parse_args()
+    sweep = tuple(int(s) for s in args.sweep_mesh.split("x")) \
+        if args.sweep_mesh else None
     rec = run(args.clients, multi_pod=args.multi_pod, force=args.force,
               solver_backend=args.solver_backend,
-              aggregator=args.aggregator, agg_backend=args.agg_backend)
+              aggregator=args.aggregator, agg_backend=args.agg_backend,
+              sweep_mesh=sweep)
     raise SystemExit(0 if rec["ok"] else 1)
 
 

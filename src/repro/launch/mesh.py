@@ -37,6 +37,32 @@ def make_host_mesh():
     return jax.make_mesh((n,), ("data",))
 
 
+def make_engine_mesh(shape=(8, 1)):
+    """The scan engine's ("cells", "silo") grid (DESIGN.md §13).
+
+    ``shape`` is (cells,) or (cells, silo): sweep cells shard over the first
+    axis (embarrassingly parallel — per-cell subsystem state stays
+    device-local), and at large N the memory-aggregator panel / the vmap'd
+    local-training client axis row-shard over the second.  CPU testing forces
+    host devices via ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+    (must be set before jax first initializes).
+    """
+    shape = tuple(int(s) for s in shape)
+    if len(shape) == 1:
+        shape = shape + (1,)
+    if len(shape) != 2 or any(s < 1 for s in shape):
+        raise ValueError(f"engine mesh shape must be (cells,) or "
+                         f"(cells, silo) with positive sizes, got {shape!r}")
+    n = int(np.prod(shape))
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for the ({shape[0]}x{shape[1]}) engine mesh, "
+            f"have {len(devices)} — set XLA_FLAGS=--xla_force_host_platform_"
+            "device_count=8 before importing jax (tests/CI do this)")
+    return jax.make_mesh(shape, ("cells", "silo"), devices=devices)
+
+
 # When True (variant `fsdp_over_pod`), weights/optimizer shard over BOTH the
 # pod and data axes (32-way ZeRO-style) instead of data only — halves
 # per-chip weight+opt memory for the 340B archs at the price of cross-pod

@@ -91,6 +91,39 @@ def param_specs(params, ctx):
     return map_with_path(spec_of, params)
 
 
+# ---------------------------------------------------------------- scan engine
+# Mesh axes of launch.mesh.make_engine_mesh (DESIGN.md §13): sweep cells over
+# "cells", the memory panel's client-row dim over "silo".
+ENGINE_CELL_AXIS = "cells"
+ENGINE_SILO_AXIS = "silo"
+
+
+def engine_batch_spec(cell_sharding: bool = True) -> P:
+    """Prefix PartitionSpec for the engine's cell-stacked pytrees (cells,
+    carries, trajectories): dim 0 is the cell-batch axis.  With
+    ``cell_sharding=False`` the batch is replicated (every device sees all
+    cells — only useful with a size-1 "cells" axis)."""
+    return P(ENGINE_CELL_AXIS) if cell_sharding else P()
+
+
+def engine_carry_specs(carry_shapes, *, cell_sharding: bool = True,
+                       panel_sharded: bool = False):
+    """Per-leaf PartitionSpec tree for the scan carry.  All leaves follow
+    ``engine_batch_spec``; in psum mode (``panel_sharded``) the aggregator's
+    (B, rows, P) update-memory panel additionally row-shards over "silo" —
+    the spec the shard_map'd segment program uses for its carry in/out, so a
+    checkpoint gather sees rows reassembled in global client order."""
+    cells = ENGINE_CELL_AXIS if cell_sharding else None
+
+    def spec_of(path, x):
+        if (panel_sharded and path and path[-1] == "mem"
+                and len(x.shape) >= 3):
+            return P(cells, ENGINE_SILO_AXIS)
+        return P(cells)
+
+    return map_with_path(spec_of, carry_shapes)
+
+
 def batch_specs(batch, ctx):
     """Shard dim-0 (batch) of every input over the dp axes when divisible."""
     sizes = {n: s for n, s in zip(ctx.mesh.axis_names, ctx.mesh.devices.shape)}

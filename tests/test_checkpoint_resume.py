@@ -1,0 +1,236 @@
+"""Exact-resume checkpointing for BOTH engines (DESIGN.md §13).
+
+The claims pinned here:
+
+* ScanEngine.run_batch: fused == segmented == resumed-from-mid-run, every
+  trajectory leaf bitwise, for every stateful aggregator family (momentum,
+  Adam moments, the (N, P) update memory) crossed with every stateful
+  availability scenario family (Markov chains, cluster outages, drift,
+  deadlines) — the FULL carry round-trips through the flat-npz checkpoint;
+* FLEngine.run: the host engine checkpoints ``ServerAggregator.state``
+  wholesale, so stateful aggregators resume bitwise too (the pre-§13
+  format silently dropped that state and momentum restarted from zero —
+  the regression test below pins both the fix and the old-format
+  fallback);
+* resume across DEVICE COUNTS (8 -> 1 and 1 -> 8, CPU host devices forced
+  by ``XLA_FLAGS=--xla_force_host_platform_device_count=8``): with
+  ckpt_every=1 the head run is a chain of one-round segments, which
+  compile identically on every device count — so the resumed trajectory
+  is bitwise equal to the uninterrupted single-device run (the multi-round
+  fused program does NOT have this property: XLA fuses the scan while-body
+  differently per SPMD partition count; see test_shard_engine.py).
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.availability import ProcessMode
+from repro.core.availability_device import make_process
+from repro.core.sampler import make_sampler
+from repro.fed.aggregator_device import make_aggregator_process
+from repro.fed.engine import FLConfig, FLEngine
+from repro.fed.models import logistic_regression
+from repro.fed.scan_engine import ScanConfig, ScanEngine
+
+needs8 = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs 8 devices: export "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=8 before jax "
+           "initializes (the CI shard job does)")
+
+# one stateful aggregator family x one stateful scenario family per case —
+# together the four cases cover every slot of the checkpointed state
+COMBOS = [("fedavgm", "GE"), ("fedadam", "CLUSTER"),
+          ("fedprox_w", "DRIFT"), ("memory", "DEADLINE")]
+
+
+@pytest.fixture(scope="module")
+def ds16():
+    from repro.data.synthetic import make_synthetic
+    return make_synthetic(n_clients=16, alpha=0.5, beta=0.5, seed=0)
+
+
+def _proc(name, ds, rounds, seed=7):
+    return make_process(name, n_clients=ds.n_clients, data_sizes=ds.sizes,
+                        label_sets=ds.label_sets(),
+                        num_labels=ds.num_classes, rounds=rounds, seed=seed)
+
+
+def _assert_hist_bitwise(a, b, msg=""):
+    for f in ("sel", "valid", "counts", "gini", "count_var", "val_loss",
+              "val_acc"):
+        np.testing.assert_array_equal(getattr(a, f), getattr(b, f),
+                                      err_msg=f"{msg}: {f}")
+
+
+# ------------------------------------------------------------- ScanEngine
+def _scan_cfg(rounds, **kw):
+    return ScanConfig(rounds=rounds, m=4, local_steps=2, batch_size=8,
+                      lr=0.1, eval_every=1, sampler="uniform", **kw)
+
+
+@pytest.mark.parametrize("agg,scenario", COMBOS)
+def test_scan_resume_bitwise(ds16, tmp_path, agg, scenario):
+    """Mid-run save at round 3, resume in a FRESH engine: the 6-round
+    trajectory is bitwise equal to the uninterrupted run at the same
+    checkpoint cadence — the whole carry (aggregator slots incl.
+    momentum/moments/memory panel, availability-chain state, sampler
+    state, counts) survives the npz.  Against the FUSED (no-checkpoint)
+    program the decisions are still bitwise and the float evals agree to
+    2e-6 (XLA fuses the scan while-body differently per scan length —
+    the same ulp-drift precedent as run() vs run_batch)."""
+    ds = ds16
+    rounds = 6
+    cells_of = lambda eng: [eng.cell(        # noqa: E731
+        seed=s, process=_proc(scenario, ds, rounds, seed=3 + s),
+        avail_seed=70 + s,
+        aggregator_process=make_aggregator_process(agg))
+        for s in range(2)]
+    eng = ScanEngine(ds, logistic_regression(), _scan_cfg(rounds))
+    fused = eng.run_batch(cells_of(eng))
+    ck = str(tmp_path / "ck")
+    seg = eng.run_batch(cells_of(eng), ckpt_path=ck, ckpt_every=3)
+    eng2 = ScanEngine(ds, logistic_regression(), _scan_cfg(rounds))
+    res = eng2.run_batch(cells_of(eng2), ckpt_path=ck, resume=True,
+                         ckpt_every=3)
+    for i in range(2):
+        _assert_hist_bitwise(seg[i], res[i], f"{agg}/{scenario} res {i}")
+        for f in ("sel", "valid", "counts"):
+            np.testing.assert_array_equal(
+                getattr(fused[i], f), getattr(seg[i], f),
+                err_msg=f"{agg}/{scenario} fused {i}: {f}")
+        np.testing.assert_allclose(seg[i].val_loss, fused[i].val_loss,
+                                   atol=2e-6)
+
+
+def test_scan_resume_without_checkpoint_starts_fresh(ds16, tmp_path):
+    """resume=True with no file on disk is a cold start, not an error."""
+    ds = ds16
+    eng = ScanEngine(ds, logistic_regression(), _scan_cfg(4))
+    cells = [eng.cell(seed=0, process=_proc("GE", ds, 4))]
+    got = eng.run_batch(cells, ckpt_path=str(tmp_path / "missing"),
+                        resume=True)
+    ref = eng.run_batch(cells)
+    _assert_hist_bitwise(ref[0], got[0])
+
+
+# ------------------------------------------------- cross-device-count resume
+@needs8
+@pytest.mark.parametrize("direction", ["8to1", "1to8"])
+def test_scan_resume_across_device_counts_bitwise(ds16, tmp_path, direction):
+    """Save on one device count, resume on another (8 -> 1 and 1 -> 8):
+    checkpoints gather shards to host npz (device-layout-free) and the
+    resuming program reshards to its own mesh.  One-round segments compile
+    identically on EVERY device count (unlike multi-round scans, whose
+    while-body XLA fuses differently per SPMD partition count and scan
+    length), so with ckpt_every=1 the stitched cross-device trajectory is
+    bitwise equal to the uninterrupted single-device run at the same
+    cadence — and decisions-bitwise / evals-to-2e-6 vs the fused run."""
+    ds = ds16
+    rounds, head_rounds = 8, 5
+    mesh = (8,)
+    ref_eng = ScanEngine(ds, logistic_regression(), _scan_cfg(rounds))
+    cells = [ref_eng.cell(
+        seed=s, process=_proc(("GE", "CLUSTER", "DRIFT", "DEADLINE")[s % 4],
+                              ds, rounds, seed=3 + s),
+        avail_seed=80 + s,
+        aggregator_process=make_aggregator_process(
+            ("fedavgm", "fedadam", "memory", "fedavg")[s % 4]))
+        for s in range(8)]
+    # the uninterrupted single-device reference at the SAME k=1 cadence
+    ref = ref_eng.run_batch(cells, ckpt_path=str(tmp_path / "ref"),
+                            ckpt_every=1)
+    fused = ref_eng.run_batch(cells)
+
+    head_mesh, tail_mesh = (mesh, None) if direction == "8to1" else \
+        (None, mesh)
+    # the head engine stops after head_rounds (its lr table is the
+    # length-5 prefix of the full schedule — per-round host floats), and
+    # its last mid-run save (t0=4) is what the tail resumes from
+    head = ScanEngine(ds, logistic_regression(),
+                      _scan_cfg(head_rounds, mesh=head_mesh))
+    ck = str(tmp_path / "ck")
+    head.run_batch(cells, ckpt_path=ck, ckpt_every=1)
+    tail = ScanEngine(ds, logistic_regression(),
+                      _scan_cfg(rounds, mesh=tail_mesh))
+    got = tail.run_batch(cells, ckpt_path=ck, resume=True, ckpt_every=1)
+    for i in range(8):
+        _assert_hist_bitwise(ref[i], got[i], f"{direction} cell {i}")
+        for f in ("sel", "valid", "counts"):
+            np.testing.assert_array_equal(
+                getattr(fused[i], f), getattr(got[i], f),
+                err_msg=f"{direction} fused {i}: {f}")
+        np.testing.assert_allclose(got[i].val_loss, fused[i].val_loss,
+                                   atol=2e-6)
+
+
+# --------------------------------------------------------------- FLEngine
+def _fl_build(ds, agg, scenario, rounds):
+    proc = _proc(scenario, ds, rounds)
+    cfg = FLConfig(rounds=rounds, sample_frac=0.25, local_steps=2,
+                   batch_size=8, eval_every=1, seed=0, avail_seed=1234)
+    return FLEngine(ds, logistic_regression(), make_sampler("uniform"),
+                    ProcessMode(proc, avail_seed=1234), cfg,
+                    aggregator=make_aggregator_process(agg))
+
+
+def _leaf_max_diff(a, b):
+    return max(float(np.max(np.abs(np.asarray(x) - np.asarray(y))))
+               if np.asarray(x).size else 0.0
+               for x, y in zip(jax.tree_util.tree_leaves(a),
+                               jax.tree_util.tree_leaves(b)))
+
+
+@pytest.mark.parametrize("agg,scenario", COMBOS)
+def test_flengine_resume_bitwise(ds16, tmp_path, agg, scenario):
+    """Save at round 3, resume in a fresh engine: tail history and final
+    params bitwise equal to the uninterrupted run — the server aggregator's
+    momentum / Adam moments / update memory now ride the checkpoint."""
+    ds = ds16
+    rounds, split = 8, 4
+    full = _fl_build(ds, agg, scenario, rounds)
+    h_full = full.run()
+
+    ck = str(tmp_path / "ck")
+    head = _fl_build(ds, agg, scenario, rounds)
+    head.cfg.rounds = split
+    head.run(ckpt_path=ck, ckpt_every=split)
+    res = _fl_build(ds, agg, scenario, rounds)
+    h_res = res.run(ckpt_path=ck, resume=True)
+
+    assert h_res.rounds == list(range(split, rounds))
+    assert h_full.val_loss[split:] == h_res.val_loss
+    assert h_full.sampled[split:] == h_res.sampled
+    assert _leaf_max_diff(full.params, res.params) == 0.0
+
+
+def test_flengine_checkpoint_carries_server_state(ds16, tmp_path):
+    """Regression pin for the resume gap: the saved npz contains the
+    ``server`` subtree, and a legacy checkpoint WITHOUT it still resumes
+    (falling back to a re-initialized aggregator) — but that fallback
+    demonstrably diverges from the uninterrupted momentum trajectory,
+    which is exactly the drift the new format eliminates."""
+    ds = ds16
+    rounds, split = 8, 4
+    ck = str(tmp_path / "ck")
+    head = _fl_build(ds, "fedavgm", "GE", rounds)
+    head.cfg.rounds = split
+    head.run(ckpt_path=ck, ckpt_every=split)
+
+    with np.load(ck + ".npz") as z:
+        server_keys = [k for k in z.files if k.startswith("server/")]
+        assert any(k.startswith("server/m1/") for k in server_keys)
+        legacy = {k: z[k] for k in z.files if not k.startswith("server/")}
+    full = _fl_build(ds, "fedavgm", "GE", rounds)
+    h_full = full.run()
+
+    # strip the server subtree -> the pre-§13 format
+    old_ck = str(tmp_path / "old_ck")
+    np.savez(old_ck + ".npz", **legacy)
+    res = _fl_build(ds, "fedavgm", "GE", rounds)
+    h_old = res.run(ckpt_path=old_ck, resume=True)
+    assert h_old.rounds == list(range(split, rounds))
+    assert np.all(np.isfinite(h_old.val_loss))
+    # momentum restarted from zero: the old format's tail drifts
+    assert h_old.val_loss != h_full.val_loss[split:]

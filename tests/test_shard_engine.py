@@ -1,0 +1,238 @@
+"""shard_map'd ScanEngine.run_batch on the ("cells", "silo") mesh
+(DESIGN.md §13).
+
+Parity contract proven here (all on CPU host devices forced by
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``, set BEFORE jax
+initializes — the CI shard job exports it; locally the module skips):
+
+* every DECISION — sampled sets, pad masks, participation counts, the
+  fairness metrics derived from them — is bitwise identical between the
+  sharded and the single-device program, for a mixed scenario x sampler x
+  aggregator cell batch;
+* the float EVAL leaves (val_loss) agree to 2e-6: XLA fuses the multi-round
+  scan's while-body differently per SPMD partition count / vmap width, so
+  full multi-round trajectories pick up ulp-level drift (same precedent and
+  tolerance as the run() vs run_batch tests in test_scan_engine.py);
+* ONE-round segments compile identically everywhere: a sharded run chained
+  from k=1 segments is FULLY bitwise vs the single-device k=1 chain — the
+  foundation of cross-device-count resume (test_checkpoint_resume.py);
+* same-mesh same-cadence resume is fully bitwise at any segment length;
+* uneven batches pad by repeating the last cell, pads dropped on return;
+* silo_reduce="psum" row-shards the memory panel (numerically equal,
+  not bitwise — the partial-tensordot + psum reduction-order contract).
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.availability_device import make_process
+from repro.core.sampler_device import make_sampler_process
+from repro.fed.aggregator_device import make_aggregator_process
+from repro.fed.models import logistic_regression
+from repro.fed.scan_engine import ScanConfig, ScanEngine, oracle_h
+
+pytestmark = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs 8 devices: export "
+           "XLA_FLAGS=--xla_force_host_platform_device_count=8 before jax "
+           "initializes (the CI shard job does)")
+
+SCENARIOS = ("GE", "CLUSTER", "DRIFT", "DEADLINE")
+SAMPLER_FAMILIES = ("uniform", "md", "fedgs", "poc")
+AGG_FAMILIES = ("fedavg", "fedavgm", "fedadam", "memory")
+
+
+def _cfg(rounds=6, m=4, **kw):
+    return ScanConfig(rounds=rounds, m=m, local_steps=2, batch_size=8,
+                      lr=0.1, eval_every=1, max_sweeps=8, sampler="uniform",
+                      **kw)
+
+
+def _mixed_cells(eng, ds, h, rounds, k=8, samplers=SAMPLER_FAMILIES):
+    """k cells cycling through scenario x sampler x aggregator families —
+    the one-program-many-subsystems batch the mesh must reproduce."""
+    cells = []
+    for i in range(k):
+        proc = make_process(SCENARIOS[i % 4], n_clients=ds.n_clients,
+                            data_sizes=ds.sizes,
+                            label_sets=ds.label_sets(),
+                            num_labels=ds.num_classes, rounds=rounds,
+                            seed=7 + i)
+        cells.append(eng.cell(
+            seed=i, process=proc, h=h, avail_seed=40 + i,
+            sampler_process=make_sampler_process(
+                samplers[(i + i // 4) % len(samplers)], alpha=1.0),
+            aggregator_process=make_aggregator_process(
+                AGG_FAMILIES[(i // 2) % 4])))
+    return cells
+
+
+def _assert_decisions_equal(a, b, msg=""):
+    """The bitwise tier: selections, pad masks, counts and the count-derived
+    fairness metrics (and val_acc, which empirically never flips)."""
+    np.testing.assert_array_equal(a.sel, b.sel, err_msg=msg)
+    np.testing.assert_array_equal(a.valid, b.valid, err_msg=msg)
+    np.testing.assert_array_equal(a.counts, b.counts, err_msg=msg)
+    np.testing.assert_array_equal(a.gini, b.gini, err_msg=msg)
+    np.testing.assert_array_equal(a.count_var, b.count_var, err_msg=msg)
+    np.testing.assert_array_equal(a.val_acc, b.val_acc, err_msg=msg)
+
+
+def _assert_bitwise(a, b, msg=""):
+    _assert_decisions_equal(a, b, msg)
+    np.testing.assert_array_equal(a.val_loss, b.val_loss, err_msg=msg)
+
+
+def test_sharded_mixed_batch_matches_single_device(synthetic_ds):
+    """(8,) cells-axis mesh, 8 mixed-family cells: decisions bitwise,
+    val_loss to 2e-6 vs the single-device batched program."""
+    ds = synthetic_ds
+    h = oracle_h(ds.opt_params)
+    rounds = 6
+    single = ScanEngine(ds, logistic_regression(), _cfg(rounds))
+    shard = ScanEngine(ds, logistic_regression(), _cfg(rounds, mesh=(8,)))
+    cells = _mixed_cells(single, ds, h, rounds)
+    ref = single.run_batch(cells)
+    got = shard.run_batch(cells)
+    assert len(got) == len(ref) == 8
+    for i, (r, g) in enumerate(zip(ref, got)):
+        _assert_decisions_equal(r, g, msg=f"cell {i}")
+        np.testing.assert_allclose(g.val_loss, r.val_loss, atol=2e-6)
+
+
+def test_sharded_single_round_segments_fully_bitwise(synthetic_ds, tmp_path):
+    """ckpt_every=1 on the mesh == ckpt_every=1 single-device, EVERY leaf
+    bitwise: one-round scan segments compile identically across device
+    counts (multi-round scans do NOT — XLA fuses the while-body per SPMD
+    partition count and scan length), and the per-round fold_in(key, t)
+    streams make them chain exactly — the property that makes
+    cross-device-count resume exact (test_checkpoint_resume.py).  The
+    heavyweight in-step sampler programs (PoC's d-candidate loss probe,
+    FedGS's Eq. 16 solve) can tip SPMD fusion even inside a one-round
+    program (decisions still bitwise, evals to 2e-6 — covered by the
+    mixed-batch test above), so the full-bitwise claim is asserted over
+    the Gumbel-only sampler families x ALL aggregator/scenario families —
+    the domain the cross-device resume contract targets."""
+    ds = synthetic_ds
+    h = oracle_h(ds.opt_params)
+    rounds = 5
+    single = ScanEngine(ds, logistic_regression(), _cfg(rounds))
+    shard = ScanEngine(ds, logistic_regression(), _cfg(rounds, mesh=(8,)))
+    cells = _mixed_cells(single, ds, h, rounds,
+                         samplers=("uniform", "md"))
+    ref = single.run_batch(cells, ckpt_path=str(tmp_path / "ref"),
+                           ckpt_every=1)
+    got = shard.run_batch(cells, ckpt_path=str(tmp_path / "ck"),
+                          ckpt_every=1)
+    for i, (r, g) in enumerate(zip(ref, got)):
+        _assert_bitwise(r, g, msg=f"cell {i}")
+
+
+def test_cells_by_silo_mesh_matches_single_device(synthetic_ds):
+    """(2, 4) mesh: the silo axis chunks the vmap'd local-training client
+    axis (each silo trains ceil(M/4) clients, all_gather reassembles —
+    incl. the M=6 % 4 != 0 pad path); decisions stay bitwise."""
+    ds = synthetic_ds
+    rounds, m = 6, 6
+    single = ScanEngine(ds, logistic_regression(), _cfg(rounds, m))
+    shard = ScanEngine(ds, logistic_regression(),
+                       _cfg(rounds, m, mesh=(2, 4)))
+    cells = [single.cell(
+        seed=s, process=make_process("GE", n_clients=ds.n_clients,
+                                     data_sizes=ds.sizes, rounds=rounds,
+                                     seed=3 + s),
+        avail_seed=50 + s,
+        aggregator_process=make_aggregator_process(
+            ("fedavgm", "memory")[s % 2]))
+        for s in range(2)]
+    ref = single.run_batch(cells)
+    got = shard.run_batch(cells)
+    for i, (r, g) in enumerate(zip(ref, got)):
+        _assert_decisions_equal(r, g, msg=f"cell {i}")
+        np.testing.assert_allclose(g.val_loss, r.val_loss, atol=2e-6)
+
+
+def test_psum_panel_sharding_matches_gather():
+    """silo_reduce="psum" row-shards the (N, P) update-memory panel over
+    the silo axis and turns the staleness reduction into partial
+    tensordots + psum — numerically equal to the replicated-panel gather
+    program (reduction order differs, so allclose not bitwise), with
+    identical sampled sets."""
+    from repro.data.synthetic import make_synthetic
+    ds = make_synthetic(n_clients=16, alpha=0.5, beta=0.5, seed=0)
+    rounds = 6
+    cells_of = lambda eng: [eng.cell(        # noqa: E731
+        seed=s, process=make_process("GE", n_clients=16,
+                                     data_sizes=ds.sizes, rounds=rounds,
+                                     seed=5 + s),
+        avail_seed=60 + s,
+        aggregator_process=make_aggregator_process("memory"))
+        for s in range(2)]
+    ref_eng = ScanEngine(ds, logistic_regression(),
+                         _cfg(rounds, mesh=(2, 4), silo_reduce="gather"))
+    psum_eng = ScanEngine(ds, logistic_regression(),
+                          _cfg(rounds, mesh=(2, 4), silo_reduce="psum"))
+    ref = ref_eng.run_batch(cells_of(ref_eng))
+    got = psum_eng.run_batch(cells_of(psum_eng))
+    for i, (r, g) in enumerate(zip(ref, got)):
+        np.testing.assert_array_equal(g.sel, r.sel, err_msg=f"cell {i}")
+        np.testing.assert_array_equal(g.counts, r.counts)
+        np.testing.assert_allclose(g.val_loss, r.val_loss, atol=1e-5)
+
+
+def test_psum_requires_divisible_clients(synthetic_ds):
+    """N=30 does not divide silo=4: the psum variant refuses loudly."""
+    ds = synthetic_ds
+    eng = ScanEngine(ds, logistic_regression(),
+                     _cfg(4, mesh=(2, 4), silo_reduce="psum"))
+    cells = [eng.cell(seed=0,
+                      process=make_process("GE", n_clients=ds.n_clients,
+                                           data_sizes=ds.sizes, rounds=4),
+                      aggregator_process=make_aggregator_process("memory"))
+             for _ in range(2)]
+    with pytest.raises(ValueError, match="divide"):
+        eng.run_batch(cells)
+
+
+def test_uneven_cell_batch_pads_and_drops(synthetic_ds):
+    """5 cells on an 8-wide cells axis: the batch pads by repeating the
+    last cell; exactly the 5 real trajectories come back, decision-bitwise
+    with the single-device run of the same 5 cells."""
+    ds = synthetic_ds
+    h = oracle_h(ds.opt_params)
+    rounds = 5
+    single = ScanEngine(ds, logistic_regression(), _cfg(rounds))
+    shard = ScanEngine(ds, logistic_regression(), _cfg(rounds, mesh=(8,)))
+    cells = _mixed_cells(single, ds, h, rounds, k=5)
+    ref = single.run_batch(cells)
+    got = shard.run_batch(cells)
+    assert len(got) == 5
+    for i, (r, g) in enumerate(zip(ref, got)):
+        _assert_decisions_equal(r, g, msg=f"cell {i}")
+        np.testing.assert_allclose(g.val_loss, r.val_loss, atol=2e-6)
+
+
+def test_same_mesh_segment_and_resume_bitwise(synthetic_ds, tmp_path):
+    """On ONE mesh, a mid-run resume replays the identical per-round
+    programs (same segment lengths, same shards): every leaf bitwise vs
+    the uninterrupted segmented run; decisions bitwise and evals to 2e-6
+    vs the fused (no-checkpoint) program."""
+    ds = synthetic_ds
+    h = oracle_h(ds.opt_params)
+    rounds = 6
+    eng = ScanEngine(ds, logistic_regression(), _cfg(rounds, mesh=(8,)))
+    cells = _mixed_cells(eng, ds, h, rounds)
+    fused = eng.run_batch(cells)
+    ck = str(tmp_path / "ck")
+    seg = eng.run_batch(cells, ckpt_path=ck, ckpt_every=3)
+    # the file on disk is the mid-run (t0=3) checkpoint — resume replays
+    # the tail on the same mesh at the same cadence
+    res = eng.run_batch(cells, ckpt_path=ck, resume=True, ckpt_every=3)
+    for i in range(len(cells)):
+        _assert_bitwise(seg[i], res[i], msg=f"resume cell {i}")
+        np.testing.assert_array_equal(fused[i].sel, seg[i].sel,
+                                      err_msg=f"fused cell {i}")
+        np.testing.assert_array_equal(fused[i].counts, seg[i].counts)
+        np.testing.assert_allclose(seg[i].val_loss, fused[i].val_loss,
+                                   atol=2e-6)
