@@ -154,7 +154,9 @@ def _bias_rows(quick: bool) -> list[dict]:
 def run(quick: bool = True) -> list[dict]:
     rows = _kernel_rows(quick) + _bias_rows(quick)
     RESULTS.mkdir(parents=True, exist_ok=True)
+    from benchmarks.common import pallas_backend_mode
     record = {"bench": "aggregator", "backend": jax.default_backend(),
+              "backend_mode": pallas_backend_mode(),
               "pallas_interpret": jax.default_backend() == "cpu",
               "rows": rows}
     BENCH_PATH.write_text(json.dumps(record, indent=1))

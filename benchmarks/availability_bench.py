@@ -86,7 +86,9 @@ def run(quick: bool = True) -> list[dict]:
                     for i, proc in enumerate(procs.values())])
 
     RESULTS.mkdir(parents=True, exist_ok=True)
+    from benchmarks.common import pallas_backend_mode
     record = {"bench": "availability", "backend": jax.default_backend(),
+              "backend_mode": pallas_backend_mode(),
               "n_clients": n, "rounds": rounds, "sampler": cfg.sampler,
               "rows": rows}
     BENCH_PATH.write_text(json.dumps(record, indent=1))

@@ -24,6 +24,18 @@ from repro.fed.scan_engine import (
 RESULTS = pathlib.Path(__file__).resolve().parent / "results"
 PAPER = RESULTS / "paper"
 
+
+def pallas_backend_mode() -> str:
+    """``"interpret"`` or ``"compiled"`` — how the Pallas kernels execute
+    under the live jax backend.  On this CPU container every kernel runs
+    under the Pallas interpreter (each grid step round-trips its carried
+    output buffers, DESIGN.md §12), so wall-clock rows are correctness-grade
+    only; on a real accelerator the Mosaic-lowered kernels time what ships.
+    Every BENCH_*.json record carries this field so the perf trajectory
+    never mixes the two regimes (DESIGN.md §14)."""
+    import jax
+    return "interpret" if jax.default_backend() == "cpu" else "compiled"
+
 # per-process caches reused across batched sweep rows: datasets/models per
 # (ds_name, quick), oracle graphs per (ds_name, quick), ScanEngine instances
 # per (ds_name, quick, config) — jit caches live per engine, so the five

@@ -3,10 +3,16 @@ core/graph_device.py) at datacenter client counts.
 
 On CPU the pallas backend runs in interpret mode — correctness-grade timing
 only (the BlockSpec tiling targets TPU); the ref column is the compiled jnp
-pipeline and is the CPU-meaningful number.  Each row records wall-clock per
-backend per N plus the cross-backend max abs error, and the whole run is
-dumped to ``benchmarks/results/BENCH_graph_pipeline.json`` so the perf
-trajectory of the graph path accumulates across PRs.
+pipeline and is the CPU-meaningful number.  Since PR 7 the ``pallas`` column
+IS the fused megakernel pipeline (``kernels/ops.build_3dg_fused``: one grid
+for similarity -> min-max -> adjacency, feeding the blocked Floyd–Warshall
+at the shared padded size); the ``staged_ms`` column keeps the old staged
+pallas stages (separate similarity / adjacency / FW calls with HBM
+round-trips between them) so the fusion win is measurable per tier.  Each
+row records wall-clock per variant per N plus the cross-backend max abs
+error, and the whole run is dumped to
+``benchmarks/results/BENCH_graph_pipeline.json`` so the perf trajectory of
+the graph path accumulates across PRs.
 
   PYTHONPATH=src python -m benchmarks.graph_pipeline_bench [--full]
 """
@@ -21,9 +27,17 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.graph_device import GraphConfig, build_h
+from repro.core.graph_device import GraphConfig, build_3dg, build_h, \
+    cap_and_normalize
 
 RESULTS = pathlib.Path(__file__).resolve().parent / "results"
+
+
+def _staged_h(u, cfg):
+    """build_h semantics via the STAGED pallas stages (pre-PR7 routing)."""
+    _, _, h = build_3dg(u, cfg, backend="pallas")
+    return cap_and_normalize(h, scale=cfg.finite_cap_scale,
+                             normalize=cfg.normalize)
 BENCH_PATH = RESULTS / "BENCH_graph_pipeline.json"
 
 NS_QUICK = (128, 512, 1024)
@@ -47,6 +61,9 @@ def run(quick: bool = True) -> list[dict]:
         feats = jnp.asarray(rng.random((n, d)) + 0.1, jnp.float32)
         fns = {b: jax.jit(lambda u, b=b: build_h(u, cfg, backend=b))
                for b in ("ref", "pallas")}
+        # the pre-fusion staged pallas pipeline, kept as the parity oracle
+        # (kernels/ops.build_3dg) — times the HBM round-trips fusion removed
+        fns["staged"] = jax.jit(lambda u: _staged_h(u, cfg))
         outs = {}
         row = {"table": "graph_pipeline", "n": n, "d": d}
         for backend, fn in fns.items():
@@ -54,14 +71,18 @@ def run(quick: bool = True) -> list[dict]:
             row[f"{backend}_ms"] = round(s * 1e3, 2)
         row["max_err"] = float(np.max(np.abs(
             np.asarray(outs["ref"]) - np.asarray(outs["pallas"]))))
+        row["fused_vs_staged"] = round(row["staged_ms"] /
+                                       max(row["pallas_ms"], 1e-9), 2)
         rows.append(row)
         print(f"[graph_pipeline] N={n}: ref {row['ref_ms']}ms  "
-              f"pallas {row['pallas_ms']}ms  err {row['max_err']:.2e}",
-              flush=True)
+              f"fused {row['pallas_ms']}ms  staged {row['staged_ms']}ms  "
+              f"err {row['max_err']:.2e}", flush=True)
 
     RESULTS.mkdir(parents=True, exist_ok=True)
+    from benchmarks.common import pallas_backend_mode
     record = {"bench": "graph_pipeline",
               "backend": jax.default_backend(),
+              "backend_mode": pallas_backend_mode(),
               "pallas_interpret": jax.default_backend() == "cpu",
               "rows": rows}
     BENCH_PATH.write_text(json.dumps(record, indent=1))
@@ -69,10 +90,13 @@ def run(quick: bool = True) -> list[dict]:
 
 
 def summarize(rows) -> list[str]:
-    out = ["", "== build_h ref vs pallas (wall-clock per backend per N) =="]
-    out.append(f"{'N':>6s} {'ref ms':>10s} {'pallas ms':>10s} {'max err':>10s}")
+    out = ["", "== build_h ref vs pallas-fused vs pallas-staged "
+               "(wall-clock per N) =="]
+    out.append(f"{'N':>6s} {'ref ms':>10s} {'fused ms':>10s} "
+               f"{'staged ms':>10s} {'fused/stg':>9s} {'max err':>10s}")
     for r in rows:
         out.append(f"{r['n']:6d} {r['ref_ms']:10.2f} {r['pallas_ms']:10.2f} "
+                   f"{r['staged_ms']:10.2f} {r['fused_vs_staged']:9.2f} "
                    f"{r['max_err']:10.2e}")
     return out
 

@@ -1,0 +1,81 @@
+"""CI perf gate: assert the committed kernel-bench records still show the
+expected Pallas winners (DESIGN.md §14).
+
+Loads ``results/BENCH_kernels.json`` (checked in — see ``.gitignore``'s
+``!benchmarks/results/BENCH_*.json`` carve-out) and asserts every row the
+bench marked ``winner_expected`` beats the jnp reference by >= 1.0x with a
+20% run-to-run tolerance (>= 0.8x).  Which rows carry the flag is decided
+at bench time from the recorded ``backend_mode``:
+
+  * ``fedgs_select`` at production tier (N >= 1024) — enforced in BOTH
+    modes: its win is algorithmic (the Q-free factored solve vs the ref's
+    (N, N) Q materialization), so it must hold even under the Pallas
+    interpreter on this CPU container.
+  * every other kernel at production tier — enforced only on ``compiled``
+    records (real accelerator): interpret wall-clock times the interpreter's
+    carried-buffer copies, not the kernel (DESIGN.md §12).
+
+Also asserts correctness invariants the records carry: ``fedgs_select``
+rows are bit-identical to the ref, every ``max_err`` is finite and small.
+
+  PYTHONPATH=src python -m benchmarks.perf_assert            # exit 1 on fail
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+BENCH = pathlib.Path(__file__).resolve().parent / "results" / "BENCH_kernels.json"
+
+TOLERANCE = 0.8        # >= 1.0x winner with 20% timing jitter allowance
+MAX_ERR = 1e-4         # parity ceiling for non-bit-exact rows
+
+
+def check(record: dict) -> tuple[list[str], list[str]]:
+    """-> (failures, report lines)."""
+    fails, lines = [], []
+    rows = record.get("rows", [])
+    mode = record.get("backend_mode", "?")
+    enforced = [r for r in rows if r.get("winner_expected")]
+    lines.append(f"perf gate: {len(rows)} rows ({mode} mode), "
+                 f"{len(enforced)} enforced winners, tol {TOLERANCE}x")
+    if mode == "interpret":
+        lines.append("  compiled-only winners skipped on this backend "
+                     "(interpret wall-clock times the interpreter)")
+    for r in enforced:
+        ok = r["speedup"] >= TOLERANCE
+        lines.append(f"  {'ok  ' if ok else 'FAIL'} {r['kernel']:18s} "
+                     f"{r['tier']:16s} {r['speedup']:.2f}x")
+        if not ok:
+            fails.append(f"{r['kernel']} {r['tier']}: speedup "
+                         f"{r['speedup']:.2f}x < {TOLERANCE}x")
+    for r in rows:
+        if r["kernel"] == "fedgs_select" and not r.get("selected_bit_equal"):
+            fails.append(f"fedgs_select {r['tier']}: selected sets not "
+                         f"bit-identical to ref")
+        if not (r["max_err"] <= MAX_ERR):
+            fails.append(f"{r['kernel']} {r['tier']}: max_err "
+                         f"{r['max_err']:.2e} > {MAX_ERR}")
+    return fails, lines
+
+
+def main(argv=None) -> int:
+    if not BENCH.exists():
+        print(f"perf gate: {BENCH} missing — run "
+              f"`python -m benchmarks.run --only kernels` and commit it")
+        return 1
+    fails, lines = check(json.loads(BENCH.read_text()))
+    for ln in lines:
+        print(ln)
+    if fails:
+        print("\nPERF GATE FAILED:")
+        for f in fails:
+            print(f"  - {f}")
+        return 1
+    print("perf gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,68 +1,85 @@
-"""§Roofline report: reads the dry-run JSON records and formats the
-per-(arch x shape x mesh) roofline table (compute / memory / collective terms,
-dominant bottleneck, MODEL_FLOPS / HLO_FLOPs usefulness ratio)."""
+"""Roofline report over the KERNEL bench records (DESIGN.md §14).
+
+Reads ``results/BENCH_kernels.json`` (written by ``kernel_bench.py`` — the
+``kernels`` section runs before this one in ``benchmarks/run.py``) and
+places every kernel x tier row on the platform roofline: achieved GFLOP/s
+and GB/s from the measured wall-clock plus the analytic FLOP/bytes models,
+classified compute- vs memory-bound by arithmetic intensity against the
+platform ridge point (AI* = peak_flops / peak_bw).
+
+This replaced the dormant LM dry-run table: the repo's hot kernels are the
+FedGS graph/solver/aggregator Pallas kernels, so the roofline now tracks
+the records that ``perf_assert.py`` gates on.  The boundness classification
+comes from the MODEL (AI vs ridge), so it is meaningful even for interpret
+rows; the achieved-fraction columns are only meaningful for compiled rows
+(interpret wall-clock measures the Pallas interpreter, not the kernel).
+
+Platform ceilings (nominal, order-of-magnitude anchors):
+
+  cpu   ~50 GFLOP/s f32, ~20 GB/s   (single-core container envelope)
+  tpu   ~197 TFLOP/s bf16/f32-accum, ~1.2 TB/s HBM  (TPU v5p-class)
+"""
 from __future__ import annotations
 
 import json
 import pathlib
 
-DRYRUN = pathlib.Path(__file__).resolve().parent / "results" / "dryrun"
+BENCH = pathlib.Path(__file__).resolve().parent / "results" / "BENCH_kernels.json"
 
-SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+# (peak GFLOP/s, peak GB/s) per jax.default_backend()
+PEAKS = {
+    "cpu": (50.0, 20.0),
+    "tpu": (197000.0, 1200.0),
+    "gpu": (60000.0, 2000.0),
+}
 
 
-def load(mesh: str = "pod1", variant: str = "baseline") -> list[dict]:
-    rows = []
-    for f in sorted(DRYRUN.glob("*.json")):
-        r = json.loads(f.read_text())
-        if (r.get("mesh") == mesh and r.get("variant", "baseline") == variant
-                and r.get("shape") in SHAPE_ORDER):   # fedsim reported separately
-            rows.append(r)
-    rows.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])
-                             if r["shape"] in SHAPE_ORDER else 9))
-    return rows
+def load() -> dict | None:
+    if not BENCH.exists():
+        return None
+    return json.loads(BENCH.read_text())
 
 
 def run(quick: bool = True) -> list[dict]:
+    rec = load()
+    if rec is None:
+        return []
+    peak_f, peak_b = PEAKS.get(rec.get("backend", "cpu"), PEAKS["cpu"])
+    ridge = peak_f / peak_b
     out = []
-    for mesh in ("pod1", "pod2"):
-        for r in load(mesh):
-            out.append({
-                "table": f"roofline_{mesh}", "arch": r["arch"],
-                "shape": r["shape"], "ok": r["ok"],
-                "compute_s": r.get("compute_term_s"),
-                "memory_s": r.get("memory_term_s"),
-                "collective_s": r.get("collective_term_s"),
-                "dominant": r.get("dominant"),
-                "useful_flop_ratio": r.get("useful_flop_ratio"),
-                "temp_gb": round(r.get("mem", {}).get("temp_size_in_bytes", 0) / 1e9, 1),
-                "error": r.get("error"),
-            })
+    for r in rec["rows"]:
+        out.append({
+            "table": "roofline", "kernel": r["kernel"], "tier": r["tier"],
+            "ai": r["ai"],
+            "gflops": r["gflops"], "gbps": r["gbps"],
+            "frac_peak_flops": round(r["gflops"] / peak_f, 4),
+            "frac_peak_bw": round(r["gbps"] / peak_b, 4),
+            "bound": "compute" if r["ai"] >= ridge else "memory",
+            "backend_mode": r["backend_mode"],
+            "ridge_ai": round(ridge, 2),
+        })
     return out
 
 
 def summarize(rows) -> list[str]:
-    out = []
-    for mesh in ("pod1", "pod2"):
-        sub = [r for r in rows if r["table"] == f"roofline_{mesh}"]
-        if not sub:
-            continue
-        n_ok = sum(1 for r in sub if r["ok"])
-        out.append("")
-        out.append(f"== Roofline ({mesh}: "
-                   f"{'16x16=256 chips' if mesh == 'pod1' else '2x16x16=512 chips'}; "
-                   f"{n_ok}/{len(sub)} lower+compile OK) ==")
-        out.append(f"{'arch':24s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} "
-                   f"{'coll_s':>10s} {'dominant':>10s} {'useful':>7s} {'tempGB':>7s}")
-        for r in sub:
-            if not r["ok"]:
-                out.append(f"{r['arch']:24s} {r['shape']:12s} FAILED: {r['error']}")
-                continue
-            out.append(
-                f"{r['arch']:24s} {r['shape']:12s} {r['compute_s']:10.3e} "
-                f"{r['memory_s']:10.3e} {r['collective_s']:10.3e} "
-                f"{r['dominant']:>10s} {r['useful_flop_ratio']:7.3f} "
-                f"{r['temp_gb']:7.1f}")
+    if not rows:
+        return ["", "== Roofline (kernel records) ==",
+                "  no results/BENCH_kernels.json — run the 'kernels' "
+                "section first"]
+    mode = rows[0]["backend_mode"]
+    ridge = rows[0]["ridge_ai"]
+    out = ["", f"== Roofline over BENCH_kernels.json (ridge AI* = {ridge}; "
+               f"{mode} mode"
+               + ("; achieved fractions are interpreter-bound, model "
+                  "classification only)" if mode == "interpret" else ")")
+           + " =="]
+    out.append(f"{'kernel':18s} {'tier':16s} {'AI':>8s} {'GFLOP/s':>9s} "
+               f"{'GB/s':>8s} {'%peakF':>7s} {'%peakB':>7s} {'bound':>8s}")
+    for r in rows:
+        out.append(f"{r['kernel']:18s} {r['tier']:16s} {r['ai']:8.2f} "
+                   f"{r['gflops']:9.2f} {r['gbps']:8.2f} "
+                   f"{100 * r['frac_peak_flops']:6.2f}% "
+                   f"{100 * r['frac_peak_bw']:6.2f}% {r['bound']:>8s}")
     return out
 
 

@@ -2,8 +2,15 @@
 framework-scale extras (solver scaling, kernel micro-bench, roofline report).
 
   PYTHONPATH=src python -m benchmarks.run             # quick (CPU-budget) pass
+  PYTHONPATH=src python -m benchmarks.run --quick     # same, explicit — one
+                                                      # pass regenerates EVERY
+                                                      # checked-in BENCH_*.json
   PYTHONPATH=src python -m benchmarks.run --full      # paper-scale settings
   PYTHONPATH=src python -m benchmarks.run --only table2,roofline
+
+The quick pass rewrites all BENCH_*.json artifacts (availability, aggregator,
+kernels, graph, sampler, shard) — commit them so the perf trajectory and the
+CI perf gate (``benchmarks/perf_assert.py``) track the repo, not a laptop.
 """
 from __future__ import annotations
 
@@ -65,9 +72,14 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="paper-scale rounds/clients (hours on CPU)")
+    ap.add_argument("--quick", action="store_true",
+                    help="explicit quick pass (the default): regenerates "
+                         "every BENCH_*.json artifact for commit")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of sections")
     args = ap.parse_args(argv)
+    if args.quick and args.full:
+        ap.error("--quick and --full are mutually exclusive")
     quick = not args.full
     sections = args.only.split(",") if args.only else SECTIONS
 

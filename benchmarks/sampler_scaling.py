@@ -74,22 +74,18 @@ def run(quick: bool = True) -> list[dict]:
         t_ref = _time(lambda: solve("ref"), reps=reps)
         t_pal = _time(lambda: solve("pallas"), reps=reps)
 
-        # fused Q build + solve (what the scan engine / fedsim trace).
-        # Skipped past N=4096 on CPU: interpret mode re-writes the (N, N)
-        # kernel output once per grid step, which is quadratic bookkeeping
-        # the real TPU lowering doesn't pay (the solve columns above are
-        # the acceptance metric either way).
-        if n <= 4096:
-            h = jnp.asarray(0.5 * (lambda a: a + a.T)(
-                rng.random((n, n)).astype(np.float32)))
-            counts = jnp.asarray(rng.integers(0, 8, n), jnp.float32)
-            t_sel = _time(lambda: np.asarray(_fedgs_select(
-                h, counts, avail, jnp.float32(1.0), m=m,
-                max_sweeps=MAX_SWEEPS, backend="pallas")), reps=reps)
-        else:
-            print(f"[sampler_scaling] N={n}: skipping the fused-select "
-                  "column (interpret-mode output copies)", flush=True)
-            t_sel = float("nan")
+        # end-to-end select (what the scan engine / fedsim trace).  Since
+        # PR 7 this path is Q-FREE — the solve runs on the factored
+        # (H, z, alpha/N) and the fused swap kernel rebuilds Q tiles in
+        # registers, so nothing (N, N) beyond H itself ever materializes
+        # and the column runs at EVERY tier (the old Q-build kernel's
+        # interpret-mode (N, N) output copies forced a skip past N=4096).
+        h = jnp.asarray(0.5 * (lambda a: a + a.T)(
+            rng.random((n, n)).astype(np.float32)))
+        counts = jnp.asarray(rng.integers(0, 8, n), jnp.float32)
+        t_sel = _time(lambda: np.asarray(_fedgs_select(
+            h, counts, avail, jnp.float32(1.0), m=m,
+            max_sweeps=MAX_SWEEPS, backend="pallas")), reps=reps)
 
         rows.append({"table": "sampler_scaling", "n_clients": n, "m": m,
                      "max_sweeps": MAX_SWEEPS,
@@ -103,7 +99,9 @@ def run(quick: bool = True) -> list[dict]:
               f"sets_equal={rows[-1]['sets_equal']})", flush=True)
 
     RESULTS.mkdir(parents=True, exist_ok=True)
+    from benchmarks.common import pallas_backend_mode
     record = {"bench": "sampler", "backend": jax.default_backend(),
+              "backend_mode": pallas_backend_mode(),
               "pallas_interpret": jax.default_backend() == "cpu",
               "max_sweeps": MAX_SWEEPS, "rows": rows}
     BENCH_PATH.write_text(json.dumps(record, indent=1))

@@ -174,7 +174,29 @@ def build_h(u_or_v: jax.Array, cfg: GraphConfig = GraphConfig(), *,
             backend: str = "ref", interpret: bool | None = None) -> jax.Array:
     """The one-call 3DG constructor: features (or similarity) -> finite,
     [0, 1]-normalized H, ready for ``fedgs_select``.  Traceable under
-    jit / vmap / lax.scan on both backends."""
-    _, _, h = build_3dg(u_or_v, cfg, backend=backend, interpret=interpret)
+    jit / vmap / lax.scan on both backends.
+
+    On ``backend="pallas"`` with a feature-based similarity the whole
+    build routes through the fused megakernel pipeline
+    (``kernels/ops.build_3dg_fused``): similarity, min-max stats, and the
+    adjacency epilogue run tile-resident in ONE Pallas grid that feeds the
+    blocked Floyd–Warshall at a shared padded size — V never exists in
+    HBM and R round-trips it exactly once.  Bit-identical to the staged
+    pallas stages (tests/test_kernels.py); ``similarity="precomputed"``
+    (V given, no features) keeps the staged path."""
+    if backend == "pallas" and cfg.similarity != "precomputed":
+        from repro.kernels.ops import build_3dg_fused
+        u = u_or_v.astype(jnp.float32)
+        if cfg.similarity in ("cosine", "functional"):
+            # same row normalization (and, via clamp, the same max(·, 0))
+            # as cosine_sim — applied before the kernel so the fused matmul
+            # consumes exactly the ref path's operand
+            u = u / jnp.maximum(jnp.linalg.norm(u, axis=-1, keepdims=True),
+                                1e-12)
+        _, h = build_3dg_fused(u, eps=cfg.eps, sigma2=cfg.sigma2,
+                               clamp=cfg.similarity == "functional",
+                               interpret=interpret)
+    else:
+        _, _, h = build_3dg(u_or_v, cfg, backend=backend, interpret=interpret)
     return cap_and_normalize(h, scale=cfg.finite_cap_scale,
                              normalize=cfg.normalize)

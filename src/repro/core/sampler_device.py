@@ -35,10 +35,12 @@ Families (``FAMILIES`` — the switch order; it matches the scan engine's
 
 The FedGS solver itself dispatches ``backend="ref" | "pallas"`` exactly like
 ``core/graph_device.build_h``: ``ref`` is the pure-jnp greedy + best-swap
-(dense (N, N) delta per sweep); ``pallas`` routes the fused Q build, the
-greedy blocked masked argmax and the (m, N) selected-row swap panel through
-``kernels/ops.py`` — nothing N² is materialized per sweep, which is what
-lets the solve run at N ∈ {4096, 16384} (``benchmarks/sampler_scaling.py``).
+(dense (N, N) Q and delta per sweep); ``pallas`` is Q-FREE — the solve runs
+on the factored (H, z, alpha/N) via ``kernels/solver.q_diag``/``q_row``
+providers, the greedy blocked masked argmax, and the fused swap kernel that
+rebuilds Q tiles in VREGs (``kernels/ops.swap_best_fused``) — neither Q nor
+anything else N² is ever materialized, which is what lets the solve run at
+N ∈ {4096, 16384} (``benchmarks/sampler_scaling.py``).
 Both backends produce BIT-IDENTICAL selected sets (tie-breaks and the NaN
 guard are pinned by ``tests/test_sampler_device.py``; DESIGN.md assumption
 log #12/#13).
@@ -167,25 +169,32 @@ def _solve_ref(q: jax.Array, avail: jax.Array, *, m: int, max_sweeps: int):
     return s
 
 
-def _solve_pallas(q: jax.Array, avail: jax.Array, *, m: int, max_sweeps: int,
-                  interpret: bool | None = None):
-    """The tiled solve: same math, same tie-breaks, no dense (N, N)
-    intermediates per sweep.
+def _solve_pallas(diag: jax.Array, row_fn, swap_fn, avail: jax.Array, *,
+                  m: int, max_sweeps: int, interpret: bool | None = None):
+    """The tiled solve over a PROVIDED Q: same math, same tie-breaks, no
+    dense (N, N) intermediates per sweep — and, on the factored path, no
+    (N, N) Q at all.  Q enters through three providers:
 
-    greedy  ``kernels/ops.greedy_argmax`` fuses gain + mask + argmax over
-            lane blocks; only the selected row of Q is gathered per step.
-    sweep   the delta matrix is restricted to the |S| ≤ m SELECTED rows:
-            an (m, N) panel of Q is gathered (ascending index order keeps
-            the ref path's row-major tie-break) and
-            ``kernels/ops.swap_best`` reduces it tile-by-tile to the best
-            (rank, j) swap — O(mN) traffic instead of O(N²) per sweep.
+    diag     (N,) = diag(Q), computed once.
+    row_fn   ``row_fn(k) -> (N,)`` row k of Q (the greedy/swap ``r``
+             accumulator updates — one row gather per step).
+    swap_fn  ``swap_fn(sel, valid, a, b) -> (best, rank, j)`` the best-swap
+             reduction over the |S| ≤ m selected rows (``sel`` ascending,
+             clamped; ``valid`` marks real rows) — ``kernels/ops.swap_best``
+             on a materialized Q panel or ``kernels/ops.swap_best_fused``
+             rebuilding Q tiles in VREGs from (H, z, alpha/N).
+
+    greedy   ``kernels/ops.greedy_argmax`` fuses gain + mask + argmax over
+             lane blocks; only the selected row of Q is gathered per step.
+    sweep    the delta matrix is restricted to the |S| ≤ m SELECTED rows
+             (ascending index order keeps the ref path's row-major
+             tie-break) — O(mN) traffic instead of O(N²) per sweep.
     """
-    from repro.kernels.ops import greedy_argmax, swap_best
-    n = q.shape[0]
+    from repro.kernels.ops import greedy_argmax
+    n = diag.shape[0]
     if m == 0:
         return jnp.zeros((n,), bool)
     neg = jnp.float32(NEG)
-    diag = q.diagonal()
     iota = jnp.arange(n)
 
     def greedy_step(carry, _):
@@ -193,7 +202,7 @@ def _solve_pallas(q: jax.Array, avail: jax.Array, *, m: int, max_sweeps: int,
         val, k = greedy_argmax(diag, r, avail & ~s, interpret=interpret)
         ok = val > neg / 2
         s = s.at[k].set(ok | s[k])
-        r = r + jnp.where(ok, q[k], 0.0)
+        r = r + jnp.where(ok, row_fn(k), 0.0)
         return (s, r), None
 
     s0 = jnp.zeros((n,), bool)
@@ -209,13 +218,13 @@ def _solve_pallas(q: jax.Array, avail: jax.Array, *, m: int, max_sweeps: int,
         selc = jnp.minimum(sel, n - 1)
         a = jnp.where(valid, out_term[selc], neg)     # pad rows can't win
         b = jnp.where(~s & avail, in_term, neg)       # j must be addable
-        best, rank, j = swap_best(q[selc], a, b, interpret=interpret)
+        best, rank, j = swap_fn(selc, valid, a, b)
         i = selc[jnp.minimum(rank, m - 1)]
 
         def do_swap(args):
             s, r = args
             s2 = s.at[i].set(False).at[j].set(True)
-            r2 = r - q[i] + q[j]
+            r2 = r - row_fn(i) + row_fn(j)
             return s2, r2
 
         s, r = jax.lax.cond(best > SWAP_TOL, do_swap, lambda a_: a_, (s, r))
@@ -242,8 +251,13 @@ def fedgs_solve(q: jax.Array, avail: jax.Array, *, m: int, max_sweeps: int,
     Returns s (N,) bool.
     """
     if backend == "pallas":
-        return _solve_pallas(q, avail, m=m, max_sweeps=max_sweeps,
-                             interpret=interpret)
+        from repro.kernels.ops import swap_best
+
+        def swap_fn(selc, valid, a, b):
+            return swap_best(q[selc], a, b, interpret=interpret)
+
+        return _solve_pallas(q.diagonal(), lambda k: q[k], swap_fn, avail,
+                             m=m, max_sweeps=max_sweeps, interpret=interpret)
     if backend != "ref":
         raise ValueError(f"backend must be one of {BACKENDS}, not {backend!r}")
     return _solve_ref(q, avail, m=m, max_sweeps=max_sweeps)
@@ -264,19 +278,36 @@ def fedgs_select(h: jax.Array, counts: jax.Array, avail: jax.Array,
     sampler and the scan engine (repro.fed.scan_engine) trace, so greedy
     argmax near-ties resolve identically on both paths.  ``m`` is the solver
     budget (min(M, |A_t|) on the host path); ``m_target`` is the M used in
-    the count-balance penalty z (defaults to ``m``).  The pallas backend
-    fuses the Q build (``kernels/ops.solver_q_build``) — bit-identical to
-    the ref construction by op-order design.
+    the count-balance penalty z (defaults to ``m``).  The pallas backend is
+    Q-FREE: Q never materializes at (N, N) — the solve runs on the factored
+    (H, z, alpha/N) via ``kernels/solver.q_diag``/``q_row`` (ref-op-order
+    row rebuilds for the greedy accumulator) and the fused swap kernel
+    ``kernels/ops.swap_best_fused`` (Q tiles rebuilt in VREGs) —
+    bit-identical selected sets by op-order design (pinned by
+    tests/test_sampler_device.py).
     """
     n = h.shape[0]
     mt = m if m_target is None else m_target
     z = 2.0 * (counts - counts.mean() - mt / n) + 1.0
     if backend == "pallas":
-        from repro.kernels.ops import solver_q_build
-        q = solver_q_build(h, z, alpha / n, interpret=interpret)
-    else:
-        q = (alpha / n) * h - jnp.diag(z)
-        q = 0.5 * (q + q.T)                           # symmetrize (H should be)
+        from repro.kernels.ops import swap_best_fused
+        from repro.kernels.solver import q_diag, q_row
+        hf = h.astype(jnp.float32)
+        zf = z.astype(jnp.float32)
+        al = jnp.float32(alpha / n)
+
+        def swap_fn(selc, valid, a, b):
+            return swap_best_fused(hf, zf, al, selc, valid, a, b,
+                                   interpret=interpret)
+
+        return _solve_pallas(q_diag(hf, zf, al).astype(jnp.float32),
+                             lambda k: q_row(hf, zf, al, k), swap_fn,
+                             avail, m=m, max_sweeps=max_sweeps,
+                             interpret=interpret)
+    if backend != "ref":
+        raise ValueError(f"backend must be one of {BACKENDS}, not {backend!r}")
+    q = (alpha / n) * h - jnp.diag(z)
+    q = 0.5 * (q + q.T)                               # symmetrize (H should be)
     return fedgs_solve(q.astype(jnp.float32), avail, m=m,
                        max_sweeps=max_sweeps, backend=backend,
                        interpret=interpret)

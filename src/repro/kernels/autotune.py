@@ -1,0 +1,292 @@
+"""Per-(N, P, m)-tier tile autotuner for the Pallas kernels (DESIGN.md §14).
+
+A tile size that wins at one shape tier loses at another: small tiles keep
+the grid busy at N = 128 but drown N = 4096 in grid-step overhead (and, in
+interpret mode, in carried-buffer copies); big tiles amortize DMAs at scale
+but waste VMEM and pad work at toy sizes.  Instead of the hand-rolled
+``512 if n >= 512 else ...`` heuristics that used to live in
+``kernels/ops.py``, this module
+
+  1. enumerates tile candidates per kernel (powers of two, capped at the
+     shape's pow2 ceiling so a candidate never more than doubles the work),
+  2. times them under the LIVE backend (compiled on TPU, interpret on this
+     CPU container — the mode is recorded per entry, never mixed),
+  3. persists the winners to the checked-in ``kernels/tuned_tiles.json``
+     keyed ``"<kernel>|<shape tier>|<platform>"``.
+
+``resolve()`` is the read path every ``tile="auto"`` knob in
+``kernels/ops.py`` goes through: tuned winner if the (kernel, tier,
+platform) key exists, else the heuristic defaults the caller passes —
+so an empty/stale table degrades to exactly the pre-autotuner behavior.
+Shape tiers are pow2 ceilings (``n=1500 -> "n2048"``), matching how the
+wrappers pad, so every padded shape in a tier shares one winner.  All of
+this is host-side Python on static shapes: inside a jit trace the tile
+still resolves at trace time and the engines pick tuned tiles per cell
+tier with no code changes.
+
+Determinism (pinned by tests): candidate order is fixed, ``pick_best`` is
+min-time with first-candidate tie-break, and the JSON is written with
+sorted keys — same timing table in, same tiles out, byte-identical file.
+"""
+from __future__ import annotations
+
+import functools
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+TABLE_PATH = Path(__file__).with_name("tuned_tiles.json")
+
+_RNG_SEED = 0
+
+
+# ------------------------------------------------------------- tier / table
+def _p2(v: int) -> int:
+    """Power-of-two ceiling (>= 1)."""
+    v = max(1, int(v))
+    return 1 << (v - 1).bit_length()
+
+
+def shape_tier(**dims) -> str:
+    """Canonical tier string: pow2 ceiling per dim, keys sorted —
+    ``shape_tier(n=1500) == "n2048"``, ``shape_tier(n=100, p=640) ==
+    "n128,p1024"``."""
+    return ",".join(f"{k}{_p2(v)}" for k, v in sorted(dims.items()))
+
+
+def table_key(kernel: str, tier: str, platform: str) -> str:
+    return f"{kernel}|{tier}|{platform}"
+
+
+@functools.lru_cache(maxsize=None)
+def _load(path_str: str) -> dict:
+    p = Path(path_str)
+    if not p.exists():
+        return {}
+    return json.loads(p.read_text())
+
+
+def load_table(path=None) -> dict:
+    return _load(str(path or TABLE_PATH))
+
+
+def lookup(kernel: str, *, platform: str | None = None, path=None,
+           **dims) -> dict | None:
+    """Tuned tiles for (kernel, tier(dims), platform), or None."""
+    platform = platform or jax.default_backend()
+    entry = load_table(path).get(table_key(kernel, shape_tier(**dims),
+                                           platform))
+    return dict(entry["tiles"]) if entry else None
+
+
+def resolve(kernel: str, defaults: dict, *, platform: str | None = None,
+            path=None, **dims) -> dict:
+    """The ``tile="auto"`` read path: tuned winner where the table has one,
+    the caller's heuristic ``defaults`` otherwise.  Only keys present in
+    ``defaults`` are taken from the table (a table row can never smuggle an
+    unknown knob into a wrapper)."""
+    out = dict(defaults)
+    tuned = lookup(kernel, platform=platform, path=path, **dims)
+    if tuned:
+        out.update({k: int(v) for k, v in tuned.items() if k in out})
+    return out
+
+
+def pick_best(timed):
+    """min time; ties keep the EARLIEST candidate (fixed enumeration order)
+    so identical timing tables always produce identical winners."""
+    best = None
+    for tiles, ms in timed:
+        if best is None or ms < best[1]:
+            best = (tiles, ms)
+    return best
+
+
+# ----------------------------------------------------- per-kernel harnesses
+# Each kernel registers (candidates, setup, run).  Candidates are capped at
+# the shape's pow2 ceiling; invalid candidates on the live backend (e.g.
+# VMEM overflow of the FW panels on TPU) simply fail and are skipped.
+def _fw_setup(n):
+    rng = np.random.default_rng(_RNG_SEED)
+    h = (rng.random((n, n)) * 3.0).astype(np.float32)
+    h = np.minimum(h, h.T)
+    np.fill_diagonal(h, 0.0)
+    return (jnp.asarray(h),)
+
+
+def _fw_run(tiles, h):
+    from repro.kernels import ops
+    return ops.floyd_warshall(h, tile=tiles["tile"])
+
+
+def _fused_setup(n):
+    rng = np.random.default_rng(_RNG_SEED)
+    return (jnp.asarray(rng.standard_normal((n, 16)).astype(np.float32)),)
+
+
+def _fused_run(tiles, u):
+    from repro.kernels import ops
+    return ops.fused_adjacency(u, eps=0.1, sigma2=0.01, tile=tiles["tile"])
+
+
+def _greedy_setup(n):
+    rng = np.random.default_rng(_RNG_SEED)
+    diag = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    r = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    mask = jnp.asarray(rng.random(n) > 0.3)
+    return diag, r, mask
+
+
+def _greedy_run(tiles, diag, r, mask):
+    from repro.kernels import ops
+    return ops.greedy_argmax(diag, r, mask, tile=tiles["tile"])
+
+
+def _swap_setup(m, n):
+    rng = np.random.default_rng(_RNG_SEED)
+    qs = jnp.asarray(rng.standard_normal((m, n)).astype(np.float32))
+    a = jnp.asarray(rng.standard_normal(m).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    return qs, a, b
+
+
+def _swap_run(tiles, qs, a, b):
+    from repro.kernels import ops
+    return ops.swap_best(qs, a, b, tile_m=tiles["tile_m"],
+                         tile_n=tiles["tile_n"])
+
+
+def _agg_setup(n, p):
+    rng = np.random.default_rng(_RNG_SEED)
+    m = max(8, n // 8)
+    mem = jnp.asarray(rng.standard_normal((n, p)).astype(np.float32))
+    upd = jnp.asarray(rng.standard_normal((m, p)).astype(np.float32))
+    sel = jnp.asarray(rng.permutation(n)[:m].astype(np.int32))
+    valid = jnp.ones((m,), bool)
+    w = jnp.asarray((rng.random(n).astype(np.float32)) / n)
+    return mem, upd, sel, valid, w
+
+
+def _agg_run(tiles, mem, upd, sel, valid, w):
+    from repro.kernels import ops
+    return ops.memory_aggregate(mem, upd, sel, valid, w,
+                                tile_n=tiles["tile_n"],
+                                tile_p=tiles["tile_p"])
+
+
+KERNELS = {
+    "floyd_warshall": dict(
+        candidates=lambda n: [{"tile": t} for t in (128, 256, 512)
+                              if t <= max(128, _p2(n))],
+        setup=_fw_setup, run=_fw_run),
+    "fused_3dg": dict(
+        candidates=lambda n: [{"tile": t} for t in (128, 256, 512)
+                              if t <= max(128, _p2(n))],
+        setup=_fused_setup, run=_fused_run),
+    "greedy_argmax": dict(
+        candidates=lambda n: [{"tile": t} for t in (512, 1024, 2048, 4096)
+                              if t <= max(512, _p2(n))],
+        setup=_greedy_setup, run=_greedy_run),
+    "swap_gain": dict(
+        candidates=lambda m, n: [
+            {"tile_m": tm, "tile_n": tn}
+            for tm in (128, 512) if tm <= max(128, _p2(m))
+            for tn in (1024, 2048, 4096) if tn <= max(1024, _p2(n))],
+        setup=_swap_setup, run=_swap_run),
+    "memory_aggregate": dict(
+        candidates=lambda n, p: [
+            {"tile_n": tn, "tile_p": tp}
+            for tn in (128, 512) if tn <= max(128, _p2(n))
+            for tp in (256, 1024, 2048) if tp <= max(256, _p2(p))],
+        setup=_agg_setup, run=_agg_run),
+}
+
+
+def default_specs(max_n: int = 1024):
+    """The tier sweep the checked-in table covers.  (N, N) kernels are
+    interpret-timed up to ``max_n`` on CPU — beyond that the interpreter
+    takes minutes per candidate; on real TPU raise ``--max-n``."""
+    specs = []
+    for n in (128, 256, 512, 1024, 2048, 4096):
+        if n <= max_n:
+            specs.append(("floyd_warshall", {"n": n}))
+            specs.append(("fused_3dg", {"n": n}))
+    for n in (1024, 4096, 16384):
+        specs.append(("greedy_argmax", {"n": n}))
+    for m, n in ((64, 1024), (128, 4096), (512, 16384)):
+        specs.append(("swap_gain", {"m": m, "n": n}))
+    for n, p in ((256, 1024), (1024, 2048), (4096, 4096)):
+        if n * p <= max_n * 4096:
+            specs.append(("memory_aggregate", {"n": n, "p": p}))
+    return specs
+
+
+# ------------------------------------------------------------------ driver
+def _time_ms(fn, *, reps: int = 3) -> float:
+    jax.block_until_ready(fn())          # compile / first-trace warmup
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e3
+
+
+def tune(specs=None, *, timer=None, platform: str | None = None,
+         base_table: dict | None = None, verbose: bool = True) -> dict:
+    """Time every candidate per (kernel, tier) spec and return the merged
+    table.  ``timer`` is injectable (tests pass a stub for determinism);
+    the default is best-of-3 wall clock under the live backend."""
+    platform = platform or jax.default_backend()
+    timer = timer or _time_ms
+    mode = "interpret" if platform == "cpu" else "compiled"
+    table = dict(base_table if base_table is not None else load_table())
+    for kernel, dims in (specs if specs is not None else default_specs()):
+        reg = KERNELS[kernel]
+        cands = reg["candidates"](**dims)
+        inputs = reg["setup"](**dims)
+        timed = []
+        for tiles in cands:
+            try:
+                ms = timer(functools.partial(reg["run"], tiles, *inputs))
+            except Exception as e:           # candidate invalid on backend
+                if verbose:
+                    print(f"  skip {kernel} {dims} {tiles}: {e}")
+                continue
+            timed.append((tiles, ms))
+        if not timed:
+            continue
+        tiles, ms = pick_best(timed)
+        key = table_key(kernel, shape_tier(**dims), platform)
+        table[key] = {"tiles": tiles, "ms": round(ms, 4), "mode": mode,
+                      "candidates": [[t, round(v, 4)] for t, v in timed]}
+        if verbose:
+            print(f"{key}: {tiles} ({ms:.2f} ms over {len(timed)} candidates)")
+    return table
+
+
+def save_table(table: dict, path=None) -> Path:
+    path = Path(path or TABLE_PATH)
+    path.write_text(json.dumps(table, indent=2, sort_keys=True) + "\n")
+    _load.cache_clear()
+    return path
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--max-n", type=int, default=1024,
+                    help="largest (N, N) tier to time (interpret mode is "
+                         "O(N^3) per candidate)")
+    ap.add_argument("--out", type=Path, default=TABLE_PATH)
+    args = ap.parse_args()
+    t0 = time.perf_counter()
+    table = tune(default_specs(args.max_n))
+    out = save_table(table, args.out)
+    print(f"wrote {len(table)} entries -> {out} "
+          f"({time.perf_counter() - t0:.1f}s)")

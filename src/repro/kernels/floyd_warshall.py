@@ -1,16 +1,24 @@
-"""Blocked Floyd–Warshall APSP — Pallas TPU kernel.
+"""Blocked Floyd–Warshall APSP — Pallas TPU kernel, fused per-pivot round.
 
-The classic cache-blocked FW re-tiled for VMEM (DESIGN.md hardware-adaptation
-notes): for each pivot block kb (sequential on host),
-  phase 1  pivot (kb,kb) block: full FW within the tile,
-  phase 2  pivot row & column panels, using the updated pivot tile,
-  phase 3  all remaining tiles via a min-plus rank-T update from their
-           row/column panels.
+The classic cache-blocked FW (pivot / row panel / col panel / rest phases)
+used to be FOUR ``pallas_call``s per pivot block, each re-streaming the
+pivot panels from HBM.  This rewrite fuses one full pivot round into a
+SINGLE call with a remapped grid: for pivot block ``kb`` the (nb, nb) grid
+visits blocks at ``(ri, rj) = ((kb+i) % nb, (kb+j) % nb)``, so step (0,0)
+is the pivot tile, row i=0 is the pivot row panel, column j=0 is the pivot
+column panel, and everything else is the independent rank-T update.  The
+updated pivot row/column panels are carried between steps in two RESIDENT
+accumulator outputs (constant ``index_map`` — (T, N) and (N, T) buffers
+that stay in VMEM for the whole round, double-buffered against the streamed
+(T, T) tiles), so phase-3 steps read their panels via ``pl.ds`` dynamic
+slices instead of HBM re-reads.  Every input block is read exactly once per
+round and only its own block is rewritten (``input_output_aliases``), which
+keeps the in/out pipelining race-free.
 
 min-plus is not an MXU semiring, so the inner update is a VPU
-broadcast-min-add; tiles are (T, T) f32 with T=128 (128-lane aligned,
-3 tiles live in VMEM during phase 3 ≈ 192 KiB — far under the 16 MiB/core
-budget, leaving room for the pipeline's double buffering).
+broadcast-min-add.  VMEM per round ≈ 2·T·N·4 B of panels + 3 (T, T) tiles:
+T=128 / N=8192 ≈ 8 MiB — inside the 16 MiB/core budget; for N=16384 use
+T≤64 or shard the matrix first (DESIGN.md §14).
 """
 from __future__ import annotations
 
@@ -39,35 +47,43 @@ def _fw_tile(tile, ka: jax.Array | None = None, kb_: jax.Array | None = None):
     return jax.lax.fori_loop(0, tk, body, tile)
 
 
-# --------------------------------------------------------------- kernels
-def _phase1_kernel(h_ref, out_ref):
-    out_ref[...] = _fw_tile(h_ref[...])
+def _fw_round_kernel(kb, nb, h_ref, out_ref, rowp_ref, colp_ref):
+    """One full pivot round.  Grid (nb, nb); block (i, j) maps to matrix
+    block ((kb+i) % nb, (kb+j) % nb).  rowp (T, N) / colp (N, T) are the
+    resident pivot row/col panels, indexed by REAL block coordinates."""
+    i, j = pl.program_id(0), pl.program_id(1)
+    t = out_ref.shape[0]
+    cur = h_ref[...]
+    pivot_lo = kb * t  # static
 
+    @pl.when((i == 0) & (j == 0))
+    def _pivot():
+        res = _fw_tile(cur)
+        out_ref[...] = res
+        rowp_ref[:, pl.ds(pivot_lo, t)] = res
+        colp_ref[pl.ds(pivot_lo, t), :] = res
 
-def _phase2_row_kernel(pivot_ref, h_ref, out_ref):
-    # row panel: block (kb, j).  col source = pivot, row source = self
-    out_ref[...] = _fw_tile(h_ref[...], ka=pivot_ref[...], kb_=None)
+    @pl.when((i == 0) & (j > 0))
+    def _row_panel():
+        rj = (kb + j) % nb
+        res = _fw_tile(cur, ka=rowp_ref[:, pl.ds(pivot_lo, t)], kb_=None)
+        out_ref[...] = res
+        rowp_ref[:, pl.ds(rj * t, t)] = res
 
+    @pl.when((i > 0) & (j == 0))
+    def _col_panel():
+        ri = (kb + i) % nb
+        res = _fw_tile(cur, ka=None, kb_=colp_ref[pl.ds(pivot_lo, t), :])
+        out_ref[...] = res
+        colp_ref[pl.ds(ri * t, t), :] = res
 
-def _phase2_col_kernel(pivot_ref, h_ref, out_ref):
-    # col panel: block (i, kb). col source = self, row source = pivot
-    out_ref[...] = _fw_tile(h_ref[...], ka=None, kb_=pivot_ref[...])
-
-
-def _phase3_kernel(col_ref, row_ref, h_ref, out_ref):
-    # independent rank-T min-plus update
-    out_ref[...] = _fw_tile(h_ref[...], ka=col_ref[...], kb_=row_ref[...])
-
-
-def _call(kernel, n_in, grid, in_specs, out_spec, shape, interpret):
-    return pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=in_specs,
-        out_specs=out_spec,
-        out_shape=jax.ShapeDtypeStruct(shape, jnp.float32),
-        interpret=interpret,
-    )
+    @pl.when((i > 0) & (j > 0))
+    def _rest():
+        ri = (kb + i) % nb
+        rj = (kb + j) % nb
+        out_ref[...] = _fw_tile(cur,
+                                ka=colp_ref[pl.ds(ri * t, t), :],
+                                kb_=rowp_ref[:, pl.ds(rj * t, t)])
 
 
 @functools.partial(jax.jit, static_argnames=("tile", "interpret"))
@@ -79,51 +95,19 @@ def floyd_warshall_pallas(h: jax.Array, *, tile: int = TILE,
     nb = n // tile
     t = tile
 
-    spec_pivot = lambda kb: pl.BlockSpec((t, t), lambda *_: (kb, kb))
-
     for kb in range(nb):
-        # ---- phase 1: pivot tile
-        h = pl.pallas_call(
-            _phase1_kernel,
-            grid=(1,),
-            in_specs=[pl.BlockSpec((t, t), lambda g, kb=kb: (kb, kb))],
-            out_specs=pl.BlockSpec((t, t), lambda g, kb=kb: (kb, kb)),
-            out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        remap = lambda i, j, kb=kb: ((kb + i) % nb, (kb + j) % nb)
+        h, _, _ = pl.pallas_call(
+            functools.partial(_fw_round_kernel, kb, nb),
+            grid=(nb, nb),
+            in_specs=[pl.BlockSpec((t, t), remap)],
+            out_specs=[pl.BlockSpec((t, t), remap),
+                       pl.BlockSpec((t, n), lambda i, j: (0, 0)),
+                       pl.BlockSpec((n, t), lambda i, j: (0, 0))],
+            out_shape=[jax.ShapeDtypeStruct((n, n), jnp.float32),
+                       jax.ShapeDtypeStruct((t, n), jnp.float32),
+                       jax.ShapeDtypeStruct((n, t), jnp.float32)],
             input_output_aliases={0: 0},
             interpret=interpret,
         )(h)
-        # ---- phase 2: row panel (kb, j) for all j
-        h = pl.pallas_call(
-            _phase2_row_kernel,
-            grid=(nb,),
-            in_specs=[pl.BlockSpec((t, t), lambda j, kb=kb: (kb, kb)),
-                      pl.BlockSpec((t, t), lambda j, kb=kb: (kb, j))],
-            out_specs=pl.BlockSpec((t, t), lambda j, kb=kb: (kb, j)),
-            out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
-            input_output_aliases={1: 0},
-            interpret=interpret,
-        )(h, h)
-        # ---- phase 2: col panel (i, kb) for all i
-        h = pl.pallas_call(
-            _phase2_col_kernel,
-            grid=(nb,),
-            in_specs=[pl.BlockSpec((t, t), lambda i, kb=kb: (kb, kb)),
-                      pl.BlockSpec((t, t), lambda i, kb=kb: (i, kb))],
-            out_specs=pl.BlockSpec((t, t), lambda i, kb=kb: (i, kb)),
-            out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
-            input_output_aliases={1: 0},
-            interpret=interpret,
-        )(h, h)
-        # ---- phase 3: the rest
-        h = pl.pallas_call(
-            _phase3_kernel,
-            grid=(nb, nb),
-            in_specs=[pl.BlockSpec((t, t), lambda i, j, kb=kb: (i, kb)),
-                      pl.BlockSpec((t, t), lambda i, j, kb=kb: (kb, j)),
-                      pl.BlockSpec((t, t), lambda i, j: (i, j))],
-            out_specs=pl.BlockSpec((t, t), lambda i, j: (i, j)),
-            out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
-            input_output_aliases={2: 0},
-            interpret=interpret,
-        )(h, h, h)
     return h

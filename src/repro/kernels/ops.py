@@ -5,6 +5,14 @@ kernel body runs in Python, which validates correctness; on TPU they compile
 natively.  Wrappers handle padding to tile multiples and unpadding in-trace,
 so the callers (core/graph_device.py's ``backend="pallas"`` dispatch,
 models/attention.py) see clean shapes.
+
+Every wrapper takes ``tile="auto"`` (the default): tiles resolve through
+``kernels/autotune.resolve`` — the tuned winner for the (kernel, pow2
+shape tier, platform) key in the checked-in ``kernels/tuned_tiles.json``
+if present, else the per-kernel heuristic default.  Shapes are static at
+trace time, so engines tracing cells of different N automatically pick the
+tuned tiles of each cell's tier.  Pass an int to pin a tile explicitly
+(the autotuner itself does, when timing candidates).
 """
 from __future__ import annotations
 
@@ -15,13 +23,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.aggregate import AGG_TM, AGG_TN, AGG_TP, memagg_pallas
+from repro.kernels.autotune import resolve
 from repro.kernels.floyd_warshall import floyd_warshall_pallas, TILE
+from repro.kernels.graph_fused import fused_adjacency_pallas, FUSED_TILE
 from repro.kernels.pairwise_similarity import (
     similarity_pallas, adjacency_pallas, TILE_N, TILE_K,
 )
 from repro.kernels.solver import (
-    NEG, SWAP_TM, SWAP_TN, TILE_Q, TILE_V,
-    masked_argmax_pallas, qbuild_pallas, swap_gain_pallas,
+    NEG, SWAP_TM, SWAP_TN, TILE_V,
+    masked_argmax_pallas, swap_gain_fused_pallas, swap_gain_pallas,
 )
 from repro.kernels.window_attention import window_attention_pallas
 
@@ -40,8 +50,18 @@ def _pad_to(x: np.ndarray | jax.Array, mult: int, axes: tuple[int, ...],
     return jnp.pad(x, pads, constant_values=value)
 
 
+def _tiles(kernel: str, defaults: dict, overrides: dict, **dims) -> dict:
+    """``tile="auto"`` resolution: tuned table -> heuristic defaults, then
+    explicit int overrides win unconditionally."""
+    res = resolve(kernel, defaults, **dims)
+    for k, v in overrides.items():
+        if v is not None and v != "auto":
+            res[k] = int(v)
+    return res
+
+
 # ------------------------------------------------------------------- APSP
-def floyd_warshall(h: jax.Array, *, tile: int = TILE,
+def floyd_warshall(h: jax.Array, *, tile: int | str = "auto",
                    interpret: bool | None = None) -> jax.Array:
     """All-pairs shortest paths of an (N, N) f32 adjacency (inf = no edge).
 
@@ -52,30 +72,35 @@ def floyd_warshall(h: jax.Array, *, tile: int = TILE,
     if interpret is None:
         interpret = _on_cpu()
     n = h.shape[0]
-    m = ((n + tile - 1) // tile) * tile
+    t = _tiles("floyd_warshall", {"tile": TILE}, {"tile": tile}, n=n)["tile"]
+    m = ((n + t - 1) // t) * t
     if m != n:
         hp = jnp.full((m, m), jnp.inf, jnp.float32)
         hp = hp.at[:n, :n].set(h.astype(jnp.float32))
         hp = hp.at[jnp.arange(m), jnp.arange(m)].set(0.0)
     else:
         hp = h.astype(jnp.float32)
-    out = floyd_warshall_pallas(hp, tile=tile, interpret=interpret)
+    out = floyd_warshall_pallas(hp, tile=t, interpret=interpret)
     return out[:n, :n]
 
 
 # ------------------------------------------------- similarity -> adjacency
-def pairwise_similarity(u: jax.Array, *, interpret: bool | None = None) -> jax.Array:
+def pairwise_similarity(u: jax.Array, *, tile: int | str = "auto",
+                        interpret: bool | None = None) -> jax.Array:
     """V = U Uᵀ for (N, d) features, tiled on the MXU. Returns (N, N) f32."""
     if interpret is None:
         interpret = _on_cpu()
     n, d = u.shape
-    up = _pad_to(u.astype(jnp.float32), TILE_N, (0,))
+    t = _tiles("pairwise_similarity", {"tile": TILE_N}, {"tile": tile},
+               n=n)["tile"]
+    up = _pad_to(u.astype(jnp.float32), t, (0,))
     up = _pad_to(up, TILE_K, (1,))
-    v = similarity_pallas(up, interpret=interpret)
+    v = similarity_pallas(up, tile_n=t, interpret=interpret)
     return v[:n, :n]
 
 
 def similarity_to_adjacency(v: jax.Array, *, eps: float, sigma2: float,
+                            tile: int | str = "auto",
                             interpret: bool | None = None) -> jax.Array:
     """Fused min-max-normalize -> threshold -> exp(-V/σ²) epilogue.
 
@@ -86,41 +111,77 @@ def similarity_to_adjacency(v: jax.Array, *, eps: float, sigma2: float,
     if interpret is None:
         interpret = _on_cpu()
     n = v.shape[0]
+    t = _tiles("pairwise_similarity", {"tile": TILE_N}, {"tile": tile},
+               n=n)["tile"]
     lo = jnp.min(v)
     hi = jnp.max(v)
-    vp = _pad_to(v.astype(jnp.float32), TILE_N, (0, 1))
+    vp = _pad_to(v.astype(jnp.float32), t, (0, 1))
     scal = jnp.stack([lo, hi, jnp.float32(eps), jnp.float32(sigma2)]).reshape(1, 4)
-    r = adjacency_pallas(vp, scal, interpret=interpret)
+    r = adjacency_pallas(vp, scal, tile_n=t, interpret=interpret)
     return r[:n, :n]
 
 
 def build_3dg_kernel(u: jax.Array, *, eps: float = 0.1, sigma2: float = 0.01,
                      interpret: bool | None = None):
-    """Full fused path: features -> V -> R -> H, all on-kernel. Returns (V, R, H)."""
+    """STAGED kernel path: features -> V -> R -> H, one pallas call per
+    stage (V and R round-trip HBM — kept as the parity oracle for the fused
+    megakernel below and for callers that need V).  Returns (V, R, H)."""
     v = pairwise_similarity(u, interpret=interpret)
     r = similarity_to_adjacency(v, eps=eps, sigma2=sigma2, interpret=interpret)
     h = floyd_warshall(r, interpret=interpret)
     return v, r, h
 
 
-# ------------------------------------------------------------ FedGS solver
-def solver_q_build(h: jax.Array, z: jax.Array, scale: jax.Array, *,
-                   interpret: bool | None = None) -> jax.Array:
-    """Fused Eq. 14/16 Q construction: ``sym(scale · H) − diag(z)`` for
-    (N, N) H and (N,) z, tiled so the symmetrization temporaries never
-    materialize.  Zero padding is exact (pad Q entries are 0, sliced off)."""
+def fused_adjacency(u: jax.Array, *, eps: float, sigma2: float,
+                    clamp: bool = False, tile: int | str = "auto",
+                    pad_mult: int | None = None,
+                    interpret: bool | None = None,
+                    keep_pad: bool = False) -> jax.Array:
+    """Fused 3DG megakernel: similarity -> min-max stats -> adjacency in ONE
+    Pallas grid (``kernels/graph_fused.py``) — V never exists in HBM.
+
+    u (N, d) features (row-normalize beforehand for cosine; ``clamp`` adds
+    the Eq. 11/12 ``max(·, 0)``).  With ``keep_pad`` the padded FW-ready
+    (M, M) adjacency is returned (pad nodes isolated: 0 diagonal, inf
+    off-diagonal) — ``pad_mult`` forces M to a multiple of a downstream
+    tile so the APSP consumes it with no unpad/re-pad round-trip."""
     if interpret is None:
         interpret = _on_cpu()
-    n = h.shape[0]
-    hp = _pad_to(h.astype(jnp.float32), TILE_Q, (0, 1))
-    zp = _pad_to(z.astype(jnp.float32).reshape(1, n), TILE_Q, (1,))
-    scal = jnp.asarray(scale, jnp.float32).reshape(1, 1)
-    q = qbuild_pallas(hp, zp, scal, interpret=interpret)
-    return q[:n, :n]
+    n, d = u.shape
+    t = _tiles("fused_3dg", {"tile": FUSED_TILE}, {"tile": tile}, n=n)["tile"]
+    mult = t if pad_mult is None else max(t, pad_mult)   # both pow2
+    up = _pad_to(u.astype(jnp.float32), mult, (0,))
+    up = _pad_to(up, 128, (1,))
+    scal = jnp.asarray([eps, sigma2], jnp.float32).reshape(1, 2)
+    r, _ = fused_adjacency_pallas(up, scal, n=n, clamp=clamp, tile_n=t,
+                                  interpret=interpret)
+    return r if keep_pad else r[:n, :n]
 
 
+def build_3dg_fused(u: jax.Array, *, eps: float = 0.1, sigma2: float = 0.01,
+                    clamp: bool = False, tile: int | str = "auto",
+                    fw_tile: int | str = "auto",
+                    interpret: bool | None = None):
+    """FUSED 3DG pipeline: the similarity→normalize→adjacency megakernel
+    chained straight into the blocked Floyd–Warshall at a shared padded
+    size — R round-trips HBM exactly once between the two kernels and the
+    staged path's unpad/re-pad disappears.  Returns (R (N, N), H_raw
+    (N, N)); finite entries are bit-identical to the staged pallas path
+    (pinned by tests/test_kernels.py)."""
+    if interpret is None:
+        interpret = _on_cpu()
+    n = u.shape[0]
+    ft = _tiles("floyd_warshall", {"tile": TILE}, {"tile": fw_tile},
+                n=n)["tile"]
+    rp = fused_adjacency(u, eps=eps, sigma2=sigma2, clamp=clamp, tile=tile,
+                         pad_mult=ft, interpret=interpret, keep_pad=True)
+    hp = floyd_warshall_pallas(rp, tile=ft, interpret=interpret)
+    return rp[:n, :n], hp[:n, :n]
+
+
+# ------------------------------------------------------------ FedGS solver
 def greedy_argmax(diag: jax.Array, r: jax.Array, mask: jax.Array, *,
-                  interpret: bool | None = None):
+                  tile: int | str = "auto", interpret: bool | None = None):
     """Blocked masked argmax of the greedy gain ``diag + 2r`` over (N,)
     vectors (mask True = addable).  Pads with mask False, so pad lanes carry
     the −1e18 sentinel and can only win when EVERY entry is masked — in
@@ -129,32 +190,42 @@ def greedy_argmax(diag: jax.Array, r: jax.Array, mask: jax.Array, *,
     if interpret is None:
         interpret = _on_cpu()
     n = diag.shape[0]
-    d = _pad_to(diag.astype(jnp.float32).reshape(1, n), TILE_V, (1,))
-    rr = _pad_to(r.astype(jnp.float32).reshape(1, n), TILE_V, (1,))
-    mk = _pad_to(mask.astype(jnp.float32).reshape(1, n), TILE_V, (1,))
-    val, idx = masked_argmax_pallas(d, rr, mk, interpret=interpret)
+    t = _tiles("greedy_argmax", {"tile": TILE_V}, {"tile": tile}, n=n)["tile"]
+    d = _pad_to(diag.astype(jnp.float32).reshape(1, n), t, (1,))
+    rr = _pad_to(r.astype(jnp.float32).reshape(1, n), t, (1,))
+    mk = _pad_to(mask.astype(jnp.float32).reshape(1, n), t, (1,))
+    val, idx = masked_argmax_pallas(d, rr, mk, tile=t, interpret=interpret)
     return val[0, 0], idx[0, 0]
 
 
+def _swap_tiles(m: int, n: int, tile_m, tile_n) -> tuple[int, int]:
+    # heuristic fallback: tiles scale with the panel — up to (512, 4096) =
+    # 8 MiB f32, still under the VMEM budget — so the grid stays small at
+    # datacenter N (every grid step re-touches the carried accumulators in
+    # interpret mode, and on TPU fewer/larger DMAs pipeline better); the
+    # reduction is tile-size-invariant (global-flat-index tie-break), so
+    # tile choice never changes the selected swap.
+    t = _tiles("swap_gain",
+               {"tile_m": 512 if m >= 512 else SWAP_TM,
+                "tile_n": 4096 if n >= 4096 else SWAP_TN},
+               {"tile_m": tile_m, "tile_n": tile_n}, m=m, n=n)
+    return t["tile_m"], t["tile_n"]
+
+
 def swap_best(qs: jax.Array, a: jax.Array, b: jax.Array, *,
+              tile_m: int | str = "auto", tile_n: int | str = "auto",
               interpret: bool | None = None):
-    """Best-swap gain over the (M, N) selected-row panel.
+    """Best-swap gain over a MATERIALIZED (M, N) selected-row panel.
 
     qs = gathered selected rows of Q, a (M,) out-gain terms, b (N,) in-gain
     terms (both already carry the −1e18 sentinel on invalid entries).  Pads
     a/b with the sentinel and qs with 0, so pad cells sit at ≈ −2e18 and
-    never beat a real candidate.  Tile sizes scale with the panel — up to
-    (512, 4096) = 8 MiB f32, still under the VMEM budget — so the grid
-    stays small at datacenter N (every grid step re-touches the carried
-    panel in interpret mode, and on TPU fewer/larger DMAs pipeline
-    better); the reduction is tile-size-invariant (global-flat-index
-    tie-break), so this never changes the selected swap.  Returns scalar
-    (best delta, panel rank, column j)."""
+    never beat a real candidate.  Returns scalar (best delta, panel rank,
+    column j)."""
     if interpret is None:
         interpret = _on_cpu()
     m, n = qs.shape
-    tm = 512 if m >= 512 else SWAP_TM
-    tn = 4096 if n >= 4096 else SWAP_TN
+    tm, tn = _swap_tiles(m, n, tile_m, tile_n)
     qp = _pad_to(qs.astype(jnp.float32), tm, (0,))
     qp = _pad_to(qp, tn, (1,))
     ap = _pad_to(a.astype(jnp.float32).reshape(m, 1), tm, (0,), value=NEG)
@@ -165,9 +236,51 @@ def swap_best(qs: jax.Array, a: jax.Array, b: jax.Array, *,
     return val[0, 0], flat[0, 0] // npad, flat[0, 0] % npad
 
 
+def swap_best_fused(h: jax.Array, z: jax.Array, scale: jax.Array,
+                    sel: jax.Array, valid: jax.Array, a: jax.Array,
+                    b: jax.Array, *, tile_m: int | str = "auto",
+                    tile_n: int | str = "auto",
+                    interpret: bool | None = None):
+    """Q-FREE best-swap: the kernel rebuilds Q tiles in VREGs from the H
+    panels of the selected rows (``kernels/solver.swap_gain_fused_pallas``)
+    — neither an (N, N) Q nor an (M, N) Q panel ever exists in HBM.
+
+    h (N, N), z (N,), scale = alpha/N, sel (M,) global row indices already
+    clamped into range, valid (M,) marking real (non-pad) rows, a (M,) /
+    b (N,) out/in-gain terms carrying the −1e18 sentinel on invalid
+    entries.  Bit-identical winners vs :func:`swap_best` on a materialized
+    panel (same op order in-kernel; pinned by tests).  Returns scalar
+    (best delta, panel rank, column j)."""
+    if interpret is None:
+        interpret = _on_cpu()
+    n = h.shape[0]
+    m = sel.shape[0]
+    tm, tn = _swap_tiles(m, n, tile_m, tile_n)
+    hs = jnp.take(h, sel, axis=0).astype(jnp.float32)        # (M, N)
+    hts = jnp.take(h, sel, axis=1).T.astype(jnp.float32)     # (M, N)
+    zsel = jnp.where(valid, z[sel], 0.0).astype(jnp.float32)
+    selcol = jnp.where(valid, sel, -1).astype(jnp.int32)     # -1: no δ match
+    hsp = _pad_to(hs, tm, (0,))
+    hsp = _pad_to(hsp, tn, (1,))
+    htsp = _pad_to(hts, tm, (0,))
+    htsp = _pad_to(htsp, tn, (1,))
+    ap = _pad_to(a.astype(jnp.float32).reshape(m, 1), tm, (0,), value=NEG)
+    bp = _pad_to(b.astype(jnp.float32).reshape(1, n), tn, (1,), value=NEG)
+    selp = _pad_to(selcol.reshape(m, 1), tm, (0,), value=-1)
+    zp = _pad_to(zsel.reshape(m, 1), tm, (0,))
+    scal = jnp.asarray(scale, jnp.float32).reshape(1, 1)
+    val, flat = swap_gain_fused_pallas(hsp, htsp, ap, bp, selp, zp, scal,
+                                       tile_m=tm, tile_n=tn,
+                                       interpret=interpret)
+    npad = hsp.shape[1]
+    return val[0, 0], flat[0, 0] // npad, flat[0, 0] % npad
+
+
 # ------------------------------------------------- memory-rectified reduce
 def memory_aggregate(mem: jax.Array, upd: jax.Array, sel: jax.Array,
                      valid: jax.Array, w: jax.Array, *,
+                     tile_n: int | str = "auto", tile_p: int | str = "auto",
+                     tile_m: int | str = "auto",
                      interpret: bool | None = None):
     """Fused masked scatter + staleness-weighted reduction over the (N, P)
     update-memory panel (the ``memory`` aggregator family's hot path).
@@ -177,9 +290,9 @@ def memory_aggregate(mem: jax.Array, upd: jax.Array, sel: jax.Array,
     weights (already normalized by the caller).  Pads: invalid slots become
     the −1 sentinel row id (matches no row), the panel pads to tile
     multiples with zero rows/cols and w pads with 0, so pad rows never
-    contribute to the reduction and pad cols are sliced off.  Panel tiles
-    scale up to (512, 2048) and the update matrix is chunked at 256 rows
-    (m scales with N — an untiled (M, Tp) block would blow VMEM at
+    contribute to the reduction and pad cols are sliced off.  Heuristic
+    panel tiles scale up to (512, 2048) and the update matrix is chunked at
+    256 rows (m scales with N — an untiled (M, Tp) block would blow VMEM at
     datacenter m; worst case ≈ 10.5 MiB, see kernels/aggregate.py) while
     keeping the grid SMALL (each interpret grid step re-writes the carried
     (N, P) output, and on TPU fewer/larger DMAs pipeline better).  Returns
@@ -190,12 +303,18 @@ def memory_aggregate(mem: jax.Array, upd: jax.Array, sel: jax.Array,
         interpret = _on_cpu()
     n, p = mem.shape
     m = upd.shape[0]
-    tn = 512 if n >= 512 else AGG_TN
-    tp = 2048 if p >= 2048 else AGG_TP
+    t = _tiles("memory_aggregate",
+               {"tile_n": 512 if n >= 512 else AGG_TN,
+                "tile_p": 2048 if p >= 2048 else AGG_TP},
+               {"tile_n": tile_n, "tile_p": tile_p}, n=n, p=p)
+    tn, tp = t["tile_n"], t["tile_p"]
     memp = _pad_to(mem.astype(jnp.float32), tn, (0,))
     memp = _pad_to(memp, tp, (1,))
     # update chunking: one sub-tile chunk for small m, AGG_TM rows at scale
-    tm = max(8, ((min(m, AGG_TM) + 7) // 8) * 8)
+    if tile_m == "auto" or tile_m is None:
+        tm = max(8, ((min(m, AGG_TM) + 7) // 8) * 8)
+    else:
+        tm = int(tile_m)
     mp = ((max(m, 1) + tm - 1) // tm) * tm
     updp = jnp.zeros((mp, memp.shape[1]), jnp.float32)
     if m:
@@ -220,12 +339,16 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 
 def window_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
-                     window: int, interpret: bool | None = None) -> jax.Array:
-    """Flash sliding-window attention (B, S, H, D). S padded to 128 internally."""
+                     window: int, tile: int | str = "auto",
+                     interpret: bool | None = None) -> jax.Array:
+    """Flash sliding-window attention (B, S, H, D). S padded to the query
+    block internally."""
     if interpret is None:
         interpret = _on_cpu()
     b, s, h, d = q.shape
-    bq = min(128, s) if s % 128 else 128
+    bq = _tiles("window_attention",
+                {"bq": min(128, s) if s % 128 else 128},
+                {"bq": tile}, s=s)["bq"]
     sp = ((s + bq - 1) // bq) * bq
     if sp != s:
         qp = _pad_to(q, bq, (1,))

@@ -106,6 +106,138 @@ def test_window_attention_respects_window(rng):
     np.testing.assert_allclose(out1[:, -1], out2[:, -1], atol=1e-5)
 
 
+# ------------------------------------------------- fused 3DG megakernel
+# Parity contract (DESIGN.md §14): the fused similarity -> min-max ->
+# adjacency grid is BIT-identical to the staged pallas stages at the same
+# tile (identical tile shapes + op order), and agrees with the pure-jnp
+# ref to float32 roundoff.  vs-ref equality is NOT bitwise by design:
+# XLA's SIMD remainder lanes evaluate elementwise exp slightly differently
+# for non-128-multiple widths (assumption log #18), which is why the
+# bitwise pin is fused-vs-staged, not fused-vs-jnp.
+@pytest.mark.parametrize("n", [7, 100, 130])
+def test_fused_adjacency_bitwise_vs_staged(rng, n):
+    u = jnp.asarray(rng.normal(size=(n, 16)).astype(np.float32))
+    fused = np.asarray(ops.fused_adjacency(u, eps=0.1, sigma2=0.01, tile=128))
+    v = ops.pairwise_similarity(u, tile=128)
+    staged = np.asarray(ops.similarity_to_adjacency(v, eps=0.1, sigma2=0.01,
+                                                    tile=128))
+    assert np.array_equal(fused, staged, equal_nan=True)
+
+
+@pytest.mark.parametrize("n", [7, 100, 130])
+def test_fused_pipeline_vs_ref(rng, n):
+    from repro.core.graph_device import minmax01, to_adjacency
+    from repro.kernels.ref import floyd_warshall_ref
+    u = jnp.asarray(rng.normal(size=(n, 16)).astype(np.float32))
+    r_f, h_f = ops.build_3dg_fused(u, eps=0.1, sigma2=0.01)
+    r_ref = to_adjacency(minmax01(u @ u.T), eps=0.1, sigma2=0.01)
+    h_ref = np.asarray(floyd_warshall_ref(r_ref))
+    for got, want in ((np.asarray(r_f), np.asarray(r_ref)),
+                      (np.asarray(h_f), h_ref)):
+        assert np.array_equal(np.isinf(got), np.isinf(want))
+        fin = np.isfinite(want)
+        np.testing.assert_allclose(got[fin], want[fin], atol=1e-5, rtol=1e-5)
+
+
+def test_fused_adjacency_high_eps_no_nan(rng):
+    """eps so high most edges drop: the inf no-edge entries must never
+    leak NaN onto the diagonal (the inf*0 hazard to_adjacency documents)."""
+    u = jnp.asarray(rng.normal(size=(33, 16)).astype(np.float32))
+    r = np.asarray(ops.fused_adjacency(u, eps=0.95, sigma2=0.01))
+    assert not np.any(np.isnan(r))
+    assert np.array_equal(np.diag(r), np.zeros(33, np.float32))
+
+
+def test_fused_pipeline_disconnected_clusters(rng):
+    """Two orthogonal feature clusters: fused APSP must keep cross-cluster
+    distances inf (padding rows must not create phantom paths)."""
+    n = 20
+    u = np.zeros((2 * n, 4), np.float32)
+    u[:n, 0] = 1.0 + 0.1 * rng.random(n).astype(np.float32)
+    u[n:, 1] = 1.0 + 0.1 * rng.random(n).astype(np.float32)
+    # dot-similarity across clusters is exactly 0 -> normalized < eps
+    _, h = ops.build_3dg_fused(jnp.asarray(u), eps=0.1, sigma2=0.01)
+    h = np.asarray(h)
+    assert np.all(np.isinf(h[:n, n:])) and np.all(np.isinf(h[n:, :n]))
+    assert np.all(np.isfinite(h[:n, :n])) and np.all(np.isfinite(h[n:, n:]))
+
+
+def test_fused_routing_matches_staged_build_h(rng):
+    """core.graph_device.build_h(pallas) — which routes through the fused
+    megakernel since PR 7 — must match the ref backend end to end."""
+    from repro.core.graph_device import GraphConfig, build_h
+    for sim in ("dot", "cosine", "functional"):
+        u = jnp.asarray(rng.normal(size=(67, 8)).astype(np.float32))
+        cfg = GraphConfig(similarity=sim)
+        got = np.asarray(build_h(u, cfg, backend="pallas"))
+        want = np.asarray(build_h(u, cfg, backend="ref"))
+        np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-5)
+
+
+# ------------------------------------------------------------- autotuner
+def test_autotune_determinism(tmp_path):
+    """Same timing table in -> byte-identical tuned_tiles.json out."""
+    from repro.kernels import autotune
+
+    def stub_timer(fn):               # deterministic: hash of the repr
+        stub_timer.calls += 1
+        return float(10 + stub_timer.calls % 7)
+    specs = [("floyd_warshall", {"n": 256}), ("swap_gain", {"m": 64, "n": 2048})]
+    texts = []
+    for rep in range(2):
+        stub_timer.calls = 0
+        table = autotune.tune(specs, timer=stub_timer, platform="cpu",
+                              base_table={}, verbose=False)
+        p = tmp_path / f"t{rep}.json"
+        autotune.save_table(table, p)
+        texts.append(p.read_text())
+    assert texts[0] == texts[1]
+    table = autotune.tune(specs, timer=stub_timer, platform="cpu",
+                          base_table={}, verbose=False)
+    assert set(table) == {"floyd_warshall|n256|cpu", "swap_gain|m64,n2048|cpu"}
+    for entry in table.values():
+        assert entry["mode"] in ("interpret", "compiled")
+        assert entry["tiles"] in [c[0] for c in entry["candidates"]]
+
+
+def test_autotune_pick_best_tie_break():
+    from repro.kernels.autotune import pick_best
+    timed = [({"tile": 128}, 2.0), ({"tile": 256}, 1.0), ({"tile": 512}, 1.0)]
+    assert pick_best(timed) == ({"tile": 256}, 1.0)
+
+
+def test_autotune_resolve_and_fallback(tmp_path):
+    from repro.kernels import autotune
+    path = tmp_path / "tiles.json"
+    autotune.save_table({
+        autotune.table_key("floyd_warshall", "n256", "cpu"):
+            {"tiles": {"tile": 256, "rogue_knob": 9}, "ms": 1.0,
+             "mode": "interpret", "candidates": []}}, path)
+    got = autotune.resolve("floyd_warshall", {"tile": 128}, platform="cpu",
+                           path=path, n=200)          # tier n256 -> tuned
+    assert got == {"tile": 256}                       # rogue knob filtered
+    got = autotune.resolve("floyd_warshall", {"tile": 128}, platform="cpu",
+                           path=path, n=2000)         # no n2048 entry
+    assert got == {"tile": 128}
+    assert autotune.shape_tier(n=130) == "n256"
+    assert autotune.shape_tier(p=640, n=100) == "n128,p1024"
+
+
+def test_tuned_table_checked_in_and_valid():
+    """The committed table parses, every key round-trips through
+    table_key, and every entry's winner is one of its candidates."""
+    from repro.kernels import autotune
+    table = autotune.load_table()
+    assert table, "kernels/tuned_tiles.json missing or empty"
+    for key, entry in table.items():
+        kernel, tier, platform = key.split("|")
+        assert autotune.table_key(kernel, tier, platform) == key
+        assert kernel in autotune.KERNELS
+        assert entry["mode"] in ("interpret", "compiled")
+        assert entry["tiles"] in [c[0] for c in entry["candidates"]]
+
+
+# ---------------------------------------------------------- window attn
 @pytest.mark.parametrize("s,dtype", [(128, jnp.float32), (256, jnp.bfloat16)])
 def test_flash_attention_full_causal(rng, s, dtype):
     """flash_attention == dense causal attention (the window covers all)."""
