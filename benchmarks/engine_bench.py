@@ -111,6 +111,10 @@ def run(quick: bool = True) -> list[dict]:
         t0 = time.time()
         hists = seng.run_batch(cells)          # includes the one-off compile
         scan_total_s = time.time() - t0
+        # the ProgramCache's compile-event timer (DESIGN.md §15) splits the
+        # one-off XLA compile out of the first-call wall-clock exactly,
+        # instead of inferring it as first-call minus second-call
+        compile_ms = seng.runtime_stats()["compile_ms"]
         t0 = time.time()
         hists = seng.run_batch(cells)          # steady state
         scan_run_s = time.time() - t0
@@ -123,6 +127,8 @@ def run(quick: bool = True) -> list[dict]:
             "host_s": round(host_s, 2),
             "scan_total_s": round(scan_total_s, 2),
             "scan_run_s": round(scan_run_s, 2),
+            "compile_ms": round(compile_ms, 1),
+            "steady_ms": round(scan_run_s * 1e3, 1),
             "speedup": round(host_s / max(scan_run_s, 1e-9), 1),
             "speedup_incl_compile": round(host_s / max(scan_total_s, 1e-9), 1),
             "host_best_loss_mean": round(float(np.mean(host_losses)), 4),
@@ -143,6 +149,8 @@ def run(quick: bool = True) -> list[dict]:
         "host_s": round(host_all, 2),
         "scan_total_s": round(total_all, 2),
         "scan_run_s": round(run_all, 2),
+        "compile_ms": round(sum(r["compile_ms"] for r in rows), 1),
+        "steady_ms": round(run_all * 1e3, 1),
         "speedup": round(host_all / max(run_all, 1e-9), 1),
         "speedup_incl_compile": round(host_all / max(total_all, 1e-9), 1),
         "host_best_loss_mean": float("nan"),
@@ -206,15 +214,16 @@ def _shard_rows(quick: bool = True) -> list[dict]:
         t0 = time.time()
         hists = eng.run_batch(cells)       # includes the one-off compile
         total_s = time.time() - t0
+        compile_ms = eng.runtime_stats()["compile_ms"]
         t0 = time.time()
         hists = eng.run_batch(cells)       # steady state
         run_s = time.time() - t0
-        timings[label] = (total_s, run_s,
+        timings[label] = (total_s, run_s, compile_ms,
                           float(np.mean([h.best_loss for h in hists])))
         print(f"[engine_bench --shard] {label}: run {run_s:.2f}s "
-              f"(+{total_s - run_s:.1f}s compile)", flush=True)
+              f"({compile_ms / 1e3:.1f}s compile)", flush=True)
 
-    (s_tot, s_run, s_loss), (p_tot, p_run, p_loss) = \
+    (s_tot, s_run, s_cms, s_loss), (p_tot, p_run, p_cms, p_loss) = \
         timings["single"], timings["shard"]
     rows = [{
         "table": "engine_bench_shard",
@@ -222,7 +231,9 @@ def _shard_rows(quick: bool = True) -> list[dict]:
         "devices": jax.device_count(), "backend": jax.default_backend(),
         "n_clients": N_CLIENTS, "rounds": rounds, "cells": len(cells_meta),
         "single_run_s": round(s_run, 3), "single_total_s": round(s_tot, 3),
+        "single_compile_ms": round(s_cms, 1),
         "shard_run_s": round(p_run, 3), "shard_total_s": round(p_tot, 3),
+        "shard_compile_ms": round(p_cms, 1),
         # >1 means the meshed program is slower — expected on forced CPU
         # host devices, where this tracks pure shard_map/collective overhead
         "shard_overhead_x": round(p_run / max(s_run, 1e-9), 2),

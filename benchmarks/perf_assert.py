@@ -1,5 +1,6 @@
 """CI perf gate: assert the committed kernel-bench records still show the
-expected Pallas winners (DESIGN.md §14).
+expected Pallas winners (DESIGN.md §14) AND the runtime-layer records still
+show the warm-start / pipelining wins (DESIGN.md §15).
 
 Loads ``results/BENCH_kernels.json`` (checked in — see ``.gitignore``'s
 ``!benchmarks/results/BENCH_*.json`` carve-out) and asserts every row the
@@ -18,6 +19,16 @@ at bench time from the recorded ``backend_mode``:
 Also asserts correctness invariants the records carry: ``fedgs_select``
 rows are bit-identical to the ref, every ``max_err`` is finite and small.
 
+``results/BENCH_runtime.json`` (benchmarks/runtime_bench.py) is gated with
+run-to-run tolerance below the committed-record acceptance bars:
+
+  * persistent-cache warm start: >= 3x compile-time reduction (committed
+    record shows >= 5x);
+  * pipelined segmented run_batch: >= 0.75x of the fused program's
+    steady-state rounds/sec (committed record shows >= 0.9x);
+  * ``decisions_bitwise`` must be true — the runtime layer may not change
+    a single sampled set (DESIGN.md §13).
+
   PYTHONPATH=src python -m benchmarks.perf_assert            # exit 1 on fail
 """
 from __future__ import annotations
@@ -27,9 +38,12 @@ import pathlib
 import sys
 
 BENCH = pathlib.Path(__file__).resolve().parent / "results" / "BENCH_kernels.json"
+BENCH_RUNTIME = BENCH.parent / "BENCH_runtime.json"
 
 TOLERANCE = 0.8        # >= 1.0x winner with 20% timing jitter allowance
 MAX_ERR = 1e-4         # parity ceiling for non-bit-exact rows
+WARM_SPEEDUP_MIN = 3.0       # committed record: >= 5x
+PIPELINE_RATIO_MIN = 0.75    # committed record: >= 0.9x of fused
 
 
 def check(record: dict) -> tuple[list[str], list[str]]:
@@ -60,12 +74,41 @@ def check(record: dict) -> tuple[list[str], list[str]]:
     return fails, lines
 
 
+def check_runtime(rows: list) -> tuple[list[str], list[str]]:
+    """Gate the runtime-layer record (DESIGN.md §15)."""
+    fails, lines = [], []
+    for r in rows:
+        warm = r.get("warm_speedup_x", 0.0)
+        ratio = r.get("pipelined_vs_fused", 0.0)
+        lines.append(f"runtime gate: warm start {warm:.1f}x "
+                     f"(floor {WARM_SPEEDUP_MIN}x), pipelined/fused "
+                     f"{ratio:.2f}x (floor {PIPELINE_RATIO_MIN}x), "
+                     f"decisions_bitwise={r.get('decisions_bitwise')}")
+        if warm < WARM_SPEEDUP_MIN:
+            fails.append(f"runtime: warm-start compile speedup {warm:.1f}x "
+                         f"< {WARM_SPEEDUP_MIN}x (persistent cache broken?)")
+        if ratio < PIPELINE_RATIO_MIN:
+            fails.append(f"runtime: pipelined segmented run at {ratio:.2f}x "
+                         f"of fused steady state < {PIPELINE_RATIO_MIN}x")
+        if not r.get("decisions_bitwise"):
+            fails.append("runtime: decisions not bitwise across runtime "
+                         "modes — the pipeline changed results (DESIGN §13)")
+    return fails, lines
+
+
 def main(argv=None) -> int:
     if not BENCH.exists():
         print(f"perf gate: {BENCH} missing — run "
               f"`python -m benchmarks.run --only kernels` and commit it")
         return 1
     fails, lines = check(json.loads(BENCH.read_text()))
+    if not BENCH_RUNTIME.exists():
+        fails.append(f"{BENCH_RUNTIME.name} missing — run "
+                     f"`python -m benchmarks.run --only runtime` and commit")
+    else:
+        rfails, rlines = check_runtime(json.loads(BENCH_RUNTIME.read_text()))
+        fails.extend(rfails)
+        lines.extend(rlines)
     for ln in lines:
         print(ln)
     if fails:

@@ -24,8 +24,8 @@ import time
 RESULTS = pathlib.Path(__file__).resolve().parent / "results"
 
 SECTIONS = ["table2", "fig4", "table3", "table4", "dynamic", "scaling",
-            "engine", "shard", "availability", "aggregator", "kernels",
-            "graph", "roofline", "variants"]
+            "engine", "shard", "runtime", "availability", "aggregator",
+            "kernels", "graph", "roofline", "variants"]
 
 
 def _section(name: str, quick: bool):
@@ -50,6 +50,8 @@ def _section(name: str, quick: bool):
         from benchmarks import sampler_scaling as m
     elif name == "engine":
         from benchmarks import engine_bench as m
+    elif name == "runtime":
+        from benchmarks import runtime_bench as m
     elif name == "availability":
         from benchmarks import availability_bench as m
     elif name == "aggregator":

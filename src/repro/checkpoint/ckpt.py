@@ -54,6 +54,10 @@ def _flatten(tree, prefix=""):
 
 def save_checkpoint(path: str, tree, metadata: dict | None = None):
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    # ONE device_get of the whole pytree: sharded jax leaves gather to host
+    # in a single batched transfer (the per-leaf np.asarray in _flatten then
+    # sees numpy and is a no-op) instead of one blocking copy per leaf
+    tree = jax.device_get(tree)
     flat = _flatten(tree)
     np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
     if metadata is not None:

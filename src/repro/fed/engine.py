@@ -26,6 +26,7 @@ from repro.core import graph as graph_mod
 from repro.data.fed_dataset import FedDataset
 from repro.fed.client import make_local_trainer, make_loss_prober
 from repro.fed.models import FedModel
+from repro.fed.runtime import AsyncCheckpointWriter, enable_compile_cache
 from repro.fed.server import ServerAggregator
 
 
@@ -45,6 +46,9 @@ class FLConfig:
     # K rounds (0 = static graph; paper §3.2 "dynamically built and polished
     # round by round")
     graph_refresh_every: int = 0
+    # persistent XLA compile cache (DESIGN.md §15): a re-launched run pays
+    # compile once per (program, topology); None = in-process cache only
+    compile_cache_dir: Optional[str] = None
 
 
 @dataclass
@@ -83,6 +87,8 @@ class FLEngine:
         self._prober = make_loss_prober(model.loss) if sampler.needs_losses else None
         self._eval = jax.jit(lambda p, x, y: (model.loss(p, x, y), model.accuracy(p, x, y)))
         self.counts = np.zeros(self.n)
+        if cfg.compile_cache_dir is not None:
+            enable_compile_cache(cfg.compile_cache_dir)
 
     # ------------------------------------------------------------- 3DG setup
     def install_oracle_graph(self, features: Optional[np.ndarray] = None,
@@ -193,6 +199,24 @@ class FLEngine:
         xv = jnp.asarray(self.ds.x_val)
         yv = jnp.asarray(self.ds.y_val)
 
+        # periodic saves go through the background writer so npz
+        # serialization + disk I/O overlap the next round's device compute;
+        # close() before returning drains the queue and re-raises any write
+        # error (DESIGN.md §15)
+        writer = AsyncCheckpointWriter() \
+            if (ckpt_path and ckpt_every) else None
+        try:
+            self._run_rounds(hist, params, start_round, xs, ys, sizes, xv,
+                             yv, progress, ckpt_path, ckpt_every, writer)
+        finally:
+            if writer is not None:
+                writer.close()
+        return hist
+
+    def _run_rounds(self, hist, params, start_round, xs, ys, sizes, xv, yv,
+                    progress, ckpt_path, ckpt_every, writer):
+        cfg = self.cfg
+        key0 = jax.random.PRNGKey(cfg.seed)
         for t in range(start_round, cfg.rounds):
             rng = np.random.default_rng(np.random.SeedSequence([cfg.seed, t]))
             key = jax.random.fold_in(key0, t)
@@ -204,7 +228,7 @@ class FLEngine:
             losses = None
             if self._prober is not None:
                 key, sub = jax.random.split(key)
-                losses = np.asarray(self._prober(
+                losses = jax.device_get(self._prober(
                     params, xs, ys, sizes, jax.random.split(sub, self.n)))
             sel = self.sampler.sample(
                 avail=avail, m=self.m, rng=rng, counts=self.counts,
@@ -234,15 +258,17 @@ class FLEngine:
                 hist.sampled.append(sel.tolist())
                 if progress:
                     progress(t, float(vl), float(va))
-            if ckpt_path and ckpt_every and (t + 1) % ckpt_every == 0:
+            if writer is not None and (t + 1) % ckpt_every == 0:
                 from repro.checkpoint.ckpt import save_checkpoint
-                save_checkpoint(ckpt_path,
-                                {"params": params, "counts": self.counts,
-                                 "round": np.asarray(t, np.int64),
-                                 "server": self._server.state},
-                                metadata={"round": t,
-                                          "sampler": self.sampler.name,
-                                          "aggregator": self._server
-                                          .process.name})
+                # snapshot on the main thread: params / server.state are
+                # rebound functionally each round (the old trees stay
+                # valid), but self.counts mutates in place — copy it
+                writer.submit(save_checkpoint, ckpt_path,
+                              {"params": params, "counts": self.counts.copy(),
+                               "round": np.asarray(t, np.int64),
+                               "server": self._server.state},
+                              metadata={"round": t,
+                                        "sampler": self.sampler.name,
+                                        "aggregator": self._server
+                                        .process.name})
         self.params = params
-        return hist

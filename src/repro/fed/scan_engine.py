@@ -117,6 +117,9 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.checkpoint.ckpt import load_checkpoint, save_checkpoint
+from repro.fed.runtime import (
+    AsyncCheckpointWriter, CarryHandle, ProgramCache, enable_compile_cache,
+)
 from repro.core.availability import AvailabilityMode, host_trace
 from repro.core.availability_device import AvailabilityProcess, proc_draw
 from repro.core.graph_device import (
@@ -179,6 +182,15 @@ class ScanConfig:
     mesh: Optional[tuple] = None
     cell_sharding: bool = True     # shard the cell-batch axis over "cells"
     silo_reduce: str = "gather"    # gather (bitwise) | psum (panel-sharded)
+    # runtime layer (DESIGN.md §15): donate the scan carry into each
+    # segment program (in-place HBM reuse; use-after-donation raises via
+    # CarryHandle), overlap device compute with host traj fetch + async
+    # checkpoint writes, persist XLA compiles across processes, and bound
+    # the in-process program cache
+    donate_carry: bool = True
+    async_pipeline: bool = True
+    compile_cache_dir: Optional[str] = None
+    program_cache_size: int = 32
 
     def __post_init__(self):
         if self.sampler not in SAMPLERS:
@@ -194,6 +206,9 @@ class ScanConfig:
         if self.silo_reduce not in SILO_REDUCES:
             raise ValueError(f"silo_reduce must be one of {SILO_REDUCES}, "
                              f"not {self.silo_reduce!r}")
+        if self.program_cache_size < 1:
+            raise ValueError(f"program_cache_size must be >= 1, "
+                             f"not {self.program_cache_size!r}")
         if self.mesh is not None:
             shape = tuple(int(s) for s in self.mesh)
             if len(shape) not in (1, 2) or any(s < 1 for s in shape):
@@ -527,9 +542,20 @@ class ScanEngine:
         self.n = ds.n_clients
         self.use_masks = use_masks
         self._sims: dict = {}         # (wm, silo, panel) -> closures
-        self._jits: dict = {}         # program key -> jit'd fn
+        # program key -> jit'd fn: bounded LRU with hit/miss/compile-ms
+        # counters (DESIGN.md §15) — the old unbounded dict leaked one
+        # program per (seg_len, variant) across heterogeneous sweeps
+        self._programs = ProgramCache(maxsize=cfg.program_cache_size)
         self._cspecs: dict = {}       # (wm, silo, panel) -> carry spec tree
         self._mesh_obj = None
+        if cfg.compile_cache_dir is not None:
+            enable_compile_cache(cfg.compile_cache_dir)
+
+    def runtime_stats(self) -> dict:
+        """Program-cache counters: hits, misses, evictions, compiles,
+        compile_ms, size (benchmarks split first-call compile from
+        steady-state run with these)."""
+        return self._programs.stats()
 
     # ----------------------------------------------------------- programs
     def _mesh(self):
@@ -572,8 +598,8 @@ class ScanEngine:
         wm = self._wm(cells)
         mesh, silo, panelf = self._variant(batched)
         panel = panelf(wm)
-        key = (wm, batched, silo, panel)
-        if key not in self._jits:
+
+        def build():
             fn = self._closures(wm, silo, panel)["simulate"]
             if batched:
                 fn = jax.vmap(fn)
@@ -581,8 +607,8 @@ class ScanEngine:
                 spec = engine_batch_spec(self.cfg.cell_sharding)
                 fn = shard_map(fn, mesh=mesh, in_specs=(spec,),
                                out_specs=spec, check_rep=False)
-            self._jits[key] = jax.jit(fn)
-        return self._jits[key]
+            return jax.jit(fn)
+        return self._programs.get((wm, batched, silo, panel), build)
 
     def _carry_specs(self, stacked: dict, wm: bool, silo: int,
                      panel: Optional[str], init_fn):
@@ -599,22 +625,26 @@ class ScanEngine:
     def _init_program(self, stacked: dict, wm: bool):
         mesh, silo, panelf = self._variant(True)
         panel = panelf(wm)
-        key = (wm, "init", silo, panel)
-        if key not in self._jits:
+
+        # NOT donated: the stacked cells stay live across every subsequent
+        # segment call (donating them here would invalidate the whole run —
+        # the donation-safety audit of DESIGN.md §15 rejects it)
+        def build():
             fn = jax.vmap(self._closures(wm, silo, panel)["init"])
             if mesh is not None:
                 cspecs = self._carry_specs(stacked, wm, silo, panel, fn)
                 spec = engine_batch_spec(self.cfg.cell_sharding)
                 fn = shard_map(fn, mesh=mesh, in_specs=(spec,),
                                out_specs=cspecs, check_rep=False)
-            self._jits[key] = jax.jit(fn)
-        return self._jits[key]
+            return jax.jit(fn)
+        return self._programs.get((wm, "init", silo, panel), build)
 
     def _segment_program(self, stacked: dict, wm: bool, seg_len: int):
         mesh, silo, panelf = self._variant(True)
         panel = panelf(wm)
-        key = (wm, "seg", seg_len, silo, panel)
-        if key not in self._jits:
+        donate = bool(self.cfg.donate_carry)
+
+        def build():
             cl = self._closures(wm, silo, panel)
             fn = jax.vmap(cl["segment"](seg_len), in_axes=(0, 0, None))
             if mesh is not None:
@@ -623,8 +653,14 @@ class ScanEngine:
                 spec = engine_batch_spec(self.cfg.cell_sharding)
                 fn = shard_map(fn, mesh=mesh, in_specs=(spec, cspecs, P()),
                                out_specs=(cspecs, spec), check_rep=False)
-            self._jits[key] = jax.jit(fn)
-        return self._jits[key]
+            # donate the carry (arg 1): the (params, moments, (N, P) memory
+            # panel, chain + sampler state) buffers are reused in place
+            # across segments instead of fresh HBM allocations per segment;
+            # callers interact through CarryHandle, whose consume-once
+            # semantics turn use-after-donation into a loud error
+            return jax.jit(fn, donate_argnums=(1,) if donate else ())
+        return self._programs.get((wm, "seg", seg_len, silo, panel, donate),
+                                  build)
 
     def _pad_cells(self, cells: list[dict]) -> list[dict]:
         """Pad an uneven batch to a multiple of the "cells" axis size by
@@ -697,6 +733,11 @@ class ScanEngine:
         c["agg_key"] = jax.random.PRNGKey(seed + 0xA66)
         if self.cfg.graph_refresh_every > 0:
             c["init_key"] = jax.random.PRNGKey(seed + 778)
+        elif isinstance(h, jax.ShapeDtypeStruct):
+            # abstract H for compile-only dry-runs (lower_batch(abstract=
+            # True)): a datacenter-N (N, N) matrix lowers without ever
+            # materializing on this host
+            c["h"] = h
         elif h is not None:
             c["h"] = jnp.asarray(h, jnp.float32)
         else:
@@ -718,10 +759,153 @@ class ScanEngine:
 
     def run(self, cell: dict) -> ScanHistory:
         """Execute one cell; the whole trajectory is a single device program
-        (always single-device — the mesh applies to ``run_batch``)."""
-        out = jax.block_until_ready(self._program([cell], False)(cell))
+        (always single-device — the mesh applies to ``run_batch``).  The
+        output pytree comes back in ONE ``jax.device_get`` transfer (which
+        also synchronizes), not one ``np.asarray`` per history field."""
+        out = jax.device_get(self._program([cell], False)(cell))
         self.params = out["params"]
         return self._to_history(out)
+
+    # ------------------------------------------------- segmented runtime
+    def init_carry(self, cells: list[dict]) -> CarryHandle:
+        """Build the full scan carry for these cells and wrap it in a
+        donation-safe handle (DESIGN.md §15): ``run_segment`` consumes the
+        handle and returns a fresh one; touching a consumed handle raises."""
+        cells_p = self._pad_cells(cells)
+        wm = self._wm(cells_p)
+        stacked = stack_cells(cells_p)
+        return CarryHandle(self._init_program(stacked, wm)(stacked))
+
+    def run_segment(self, cells: list[dict], carry: CarryHandle,
+                    t0: int, seg_len: int):
+        """Dispatch one ``seg_len``-round segment starting at round ``t0``
+        (asynchronously — nothing blocks until the outputs are consumed).
+        The carry handle is CONSUMED: with ``cfg.donate_carry`` its device
+        buffers are donated to the segment program and reused in place.
+        Returns ``(new_handle, traj_device)``."""
+        cells_p = self._pad_cells(cells)
+        wm = self._wm(cells_p)
+        return self._run_segment(stack_cells(cells_p), wm, carry, t0,
+                                 seg_len)
+
+    def _run_segment(self, stacked: dict, wm: bool, carry: CarryHandle,
+                     t0: int, seg_len: int):
+        fn = self._segment_program(stacked, wm, seg_len)
+        new_carry, traj = fn(stacked, carry.consume(), jnp.int32(t0))
+        return CarryHandle(new_carry), traj
+
+    def run_batch_stream(self, cells: list[dict], *,
+                         ckpt_path: Optional[str] = None,
+                         ckpt_every: int = 0, resume: bool = False):
+        """Generator driving the segmented scan as an async pipeline:
+        yields ``(t_start, seg_len, traj_host)`` per segment IN ORDER,
+        where ``traj_host`` leaves are (B_padded, seg_len, ...) numpy
+        arrays — incremental history streaming for a service front-end
+        (``launch/serve.py``) instead of one post-scan gather.
+
+        Pipelining (``cfg.async_pipeline``): segment k+1 is dispatched
+        before segment k's trajectory is fetched, so the device→host
+        transfer (one ``jax.device_get`` per segment) and the npz
+        checkpoint write (a background ``AsyncCheckpointWriter`` thread)
+        overlap segment k+1's device compute.  On checkpoint boundaries
+        the carry is gathered to host BEFORE the next (donating) dispatch
+        — the one mandatory sync of the loop.  With
+        ``cfg.async_pipeline=False`` every segment blocks and writes
+        inline (the pre-runtime-layer PR 6 behavior); either way the
+        dispatched per-round programs are identical, so results are
+        bitwise equal (assumption log #19).
+
+        After exhaustion ``self.params`` / ``self.final_counts`` hold the
+        final state (host copies, pad cells included)."""
+        cfg = self.cfg
+        b = len(cells)
+        cells_p = self._pad_cells(cells)
+        wm = self._wm(cells_p)
+        stacked = stack_cells(cells_p)
+        rounds = cfg.rounds
+        every = int(ckpt_every) if ckpt_every else rounds
+        concat = lambda parts: jax.tree_util.tree_map(        # noqa: E731
+            lambda *xs: np.concatenate(xs, axis=1), *parts)
+        t0, parts, carry = 0, [], None
+        if resume and ckpt_path is not None:
+            p = ckpt_path if ckpt_path.endswith(".npz") else ckpt_path + ".npz"
+            if os.path.exists(p):
+                state = load_checkpoint(ckpt_path)
+                t0 = int(np.asarray(state["round"]))
+                carry = jax.tree_util.tree_map(jnp.asarray, state["carry"])
+                parts.append(state["traj"])
+                yield 0, t0, state["traj"]
+        if carry is None:
+            carry = self._init_program(stacked, wm)(stacked)
+        handle = CarryHandle(carry)
+        writer = AsyncCheckpointWriter() \
+            if (ckpt_path is not None and cfg.async_pipeline) else None
+        pending = None                      # (t_start, seg_len, traj_device)
+
+        def meta_of(t_next):
+            return {"round": t_next, "rounds": rounds, "b": b,
+                    "cells": len(cells_p), "mesh": cfg.mesh}
+        try:
+            while t0 < rounds:
+                k = min(every, rounds - t0)
+                handle, traj_dev = self._run_segment(stacked, wm, handle,
+                                                     t0, k)
+                t1 = t0 + k
+                need_ckpt = ckpt_path is not None and t1 < rounds
+                if not cfg.async_pipeline:
+                    # PR 6 semantics: block, fetch, write inline
+                    traj_h = jax.device_get(traj_dev)
+                    parts.append(traj_h)
+                    if need_ckpt:
+                        save_checkpoint(
+                            ckpt_path,
+                            {"carry": jax.device_get(handle.tree),
+                             "round": np.int64(t1), "traj": concat(parts)},
+                            metadata=meta_of(t1))
+                    yield t0, k, traj_h
+                elif need_ckpt:
+                    # the checkpoint needs the cumulative trajectory AND
+                    # the post-segment carry on host; the carry gather
+                    # must land before the next donating dispatch.  The
+                    # concat + npz write run on the writer thread,
+                    # overlapping the next segment's compute.
+                    if pending is not None:
+                        ph = jax.device_get(pending[2])
+                        parts.append(ph)
+                        yield pending[0], pending[1], ph
+                        pending = None
+                    traj_h = jax.device_get(traj_dev)
+                    parts.append(traj_h)
+                    carry_h = jax.device_get(handle.tree)
+                    snapshot = list(parts)
+                    writer.submit(
+                        lambda ch=carry_h, sn=snapshot, tn=t1:
+                        save_checkpoint(
+                            ckpt_path, {"carry": ch, "round": np.int64(tn),
+                                        "traj": concat(sn)},
+                            metadata=meta_of(tn)))
+                    yield t0, k, traj_h
+                else:
+                    # free-running: fetch the PREVIOUS segment while this
+                    # one computes
+                    if pending is not None:
+                        ph = jax.device_get(pending[2])
+                        parts.append(ph)
+                        yield pending[0], pending[1], ph
+                    pending = (t0, k, traj_dev)
+                t0 = t1
+            if pending is not None:
+                ph = jax.device_get(pending[2])
+                parts.append(ph)
+                yield pending[0], pending[1], ph
+            final = jax.device_get({"params": handle.tree["agg"]["prev"],
+                                    "counts": handle.tree["counts"]})
+            self.params = jax.tree_util.tree_map(lambda x: x[:b],
+                                                 final["params"])
+            self.final_counts = final["counts"][:b]
+        finally:
+            if writer is not None:
+                writer.close()
 
     def run_batch(self, cells: list[dict], *,
                   ckpt_path: Optional[str] = None, ckpt_every: int = 0,
@@ -740,55 +924,55 @@ class ScanEngine:
         bitwise at ``ckpt_every=1`` (one-round segments compile identically
         on every device count; longer scans pick up ulp-level eval drift
         from SPMD-/length-dependent while-body fusion).
+
+        Runtime layer (DESIGN.md §15): the segmented path runs donated +
+        pipelined through ``run_batch_stream`` (bitwise-identical results —
+        the compiled per-round programs are unchanged); ``ckpt_every``
+        WITHOUT a ``ckpt_path`` now streams the scan in segments too
+        (previously it silently ran fused).
         """
         b = len(cells)
         cells_p = self._pad_cells(cells)
-        if ckpt_path is None and not resume:
+        if ckpt_path is None and not resume and not ckpt_every:
             fn = self._program(cells_p, True)
-            out = jax.block_until_ready(fn(stack_cells(cells_p)))
+            # ONE device_get of the whole output pytree (one transfer +
+            # sync), not one np.asarray round-trip per history field
+            out = jax.device_get(fn(stack_cells(cells_p)))
             self.params = jax.tree_util.tree_map(lambda x: x[:b],
                                                  out["params"])
             return [self._to_history(out, i) for i in range(b)]
 
-        wm = self._wm(cells_p)
-        stacked = stack_cells(cells_p)
-        rounds = self.cfg.rounds
-        np_of = lambda tree: jax.tree_util.tree_map(np.asarray, tree)  # noqa: E731
-        t0, parts, carry = 0, [], None
-        if resume and ckpt_path is not None:
-            p = ckpt_path if ckpt_path.endswith(".npz") else ckpt_path + ".npz"
-            if os.path.exists(p):
-                state = load_checkpoint(ckpt_path)
-                t0 = int(np.asarray(state["round"]))
-                carry = state["carry"]
-                parts.append(state["traj"])
-        if carry is None:
-            carry = self._init_program(stacked, wm)(stacked)
-        every = int(ckpt_every) if ckpt_every else rounds
-        while t0 < rounds:
-            k = min(every, rounds - t0)
-            carry, traj = jax.block_until_ready(
-                self._segment_program(stacked, wm, k)(
-                    stacked, carry, jnp.int32(t0)))
-            parts.append(np_of(traj))
-            t0 += k
-            if ckpt_path is not None and t0 < rounds:
-                save_checkpoint(
-                    ckpt_path,
-                    {"carry": np_of(carry), "round": np.int64(t0),
-                     "traj": jax.tree_util.tree_map(
-                         lambda *xs: np.concatenate(xs, axis=1), *parts)},
-                    metadata={"round": t0, "rounds": rounds, "b": b,
-                              "cells": len(cells_p),
-                              "mesh": self.cfg.mesh})
+        parts = [traj for _, _, traj in self.run_batch_stream(
+            cells, ckpt_path=ckpt_path, ckpt_every=ckpt_every,
+            resume=resume)]
         traj = jax.tree_util.tree_map(lambda *xs: np.concatenate(xs, axis=1),
                                       *parts)
-        out = {**traj, "params": np_of(carry["agg"]["prev"]),
-               "counts": np.asarray(carry["counts"])}
-        self.params = jax.tree_util.tree_map(lambda x: x[:b], out["params"])
+        # the stream already set self.params / self.final_counts (B-sliced)
+        out = {**traj, "counts": self.final_counts}
         return [self._to_history(out, i) for i in range(b)]
 
-    def lower_batch(self, cells: list[dict]):
-        """Lower (without running) — for compile-time measurement."""
+    def lower_batch(self, cells: list[dict], *, abstract: bool = False):
+        """Lower (without running) — for compile-time measurement.
+
+        ``abstract=True`` lowers against ``ShapeDtypeStruct``s instead of
+        device arrays (the stacked-cell structure comes from
+        ``jax.eval_shape`` over ``stack_cells``), so datacenter-N cells —
+        whose (N, N) ``h`` could never materialize on this host — still
+        produce HLO (the compile-only silo-axis dry-run,
+        ``launch/fedsim.py::datacenter_cell_dryrun``)."""
         cells_p = self._pad_cells(cells)
-        return self._program(cells_p, True).lower(stack_cells(cells_p))
+        stacked = jax.eval_shape(stack_cells, cells_p) if abstract \
+            else stack_cells(cells_p)
+        return self._program(cells_p, True).lower(stacked)
+
+    def carry_shapes(self, cells: list[dict]):
+        """Abstract (per-device local) carry pytree for these cells —
+        what one device holds per scan step.  Used by the compile-only
+        dry-run to pin the carry footprint (a silo-sharded memory panel
+        must show its (N/silo, P) rows here)."""
+        cells_p = self._pad_cells(cells)
+        wm = self._wm(cells_p)
+        _, silo, panelf = self._variant(True)
+        stacked = jax.eval_shape(stack_cells, cells_p)
+        return jax.eval_shape(
+            jax.vmap(self._closures(wm, silo, panelf(wm))["init"]), stacked)

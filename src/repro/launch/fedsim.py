@@ -148,6 +148,55 @@ def sweep_program(mesh_shape: tuple, *, n_clients: int = 32, rounds: int = 8,
     return compiled, hlo_analyze(compiled.as_text())
 
 
+def datacenter_cell_dryrun(n_clients: int = 100_000, mesh: tuple = (1, 8), *,
+                           rounds: int = 2, m: int = 32,
+                           aggregator: str = "memory",
+                           samples_per_client: int = 4, dim: int = 8,
+                           classes: int = 4):
+    """Compile-only proof of the silo axis at datacenter N (the ROADMAP
+    leftover from PR 6): lower ONE N=10^5 sweep cell on a (cells, silo)
+    mesh with the psum-sharded memory panel — HLO only, never executed.
+    The (N, N) graph H alone would be 40 GB at N=10^5, so the cell's H is
+    a ``jax.ShapeDtypeStruct`` and the lowering runs fully abstract
+    (``ScanEngine.lower_batch(abstract=True)``).
+
+    Returns ``(lowered, carry_shapes)``: the jax ``Lowered`` program (call
+    ``.as_text()`` for the HLO the CI dry-run step pins) and the abstract
+    scan-carry pytree, whose memory-panel leaf must show (N / silo, P)
+    rows — a carry-size regression (e.g. the panel silently going global
+    again) surfaces as a shape change here."""
+    from repro.core.availability_device import make_process
+    from repro.data.fed_dataset import FedDataset
+    from repro.fed.models import logistic_regression
+    from repro.fed.scan_engine import ScanConfig, ScanEngine
+
+    silo = mesh[1] if len(mesh) > 1 else 1
+    if n_clients % max(silo, 1):
+        raise ValueError(f"N={n_clients} must divide by silo={silo}")
+    # tiny per-client payload — client COUNT is the thing under test
+    s = samples_per_client
+    ds = FedDataset(
+        x=np.zeros((n_clients, s, dim), np.float32),
+        y=np.zeros((n_clients, s), np.int32),
+        sizes=np.full((n_clients,), s, np.int64),
+        x_val=np.zeros((8, dim), np.float32),
+        y_val=np.zeros((8,), np.int32),
+        num_classes=classes,
+        label_dist=np.zeros((n_clients, classes)))
+    cfg = ScanConfig(rounds=rounds, m=m, local_steps=1, batch_size=2,
+                     sampler="uniform", aggregator=aggregator,
+                     mesh=tuple(mesh), silo_reduce="psum")
+    eng = ScanEngine(ds, logistic_regression(dim=dim, classes=classes), cfg)
+    cells = [eng.cell(
+        seed=0,
+        process=make_process("GE", n_clients=n_clients, data_sizes=ds.sizes,
+                             rounds=rounds),
+        h=jax.ShapeDtypeStruct((n_clients, n_clients), jnp.float32))
+        for _ in range(mesh[0])]
+    lowered = eng.lower_batch(cells, abstract=True)
+    return lowered, eng.carry_shapes(cells)
+
+
 def run(n_clients: int, *, multi_pod: bool, sample_frac: float = 0.1,
         n_max: int = 512, local_steps: int = 10, batch: int = 10,
         force: bool = False, solver_backend: str = "ref",

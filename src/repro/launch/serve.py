@@ -1,16 +1,27 @@
-"""Batched serving entry point: prefill a prompt batch, then decode tokens.
+"""Serving entry points: the LM decode path and the federated-simulation
+service (ROADMAP "simulation-as-a-service").
+
+LM path — prefill a prompt batch, then decode tokens:
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --reduced \
       --batch 8 --prompt-len 64 --gen 32
 
-On a real accelerator mesh the same program runs sharded (the dry-run proves
-the decode_32k / long_500k shardings lower); on CPU this drives the reduced
-configs end-to-end and reports tokens/s.
+Federated-simulation path — a long-lived ``SimService`` over ONE hot
+``ScanEngine``: heterogeneous sweep-cell requests (mixed samplers /
+availability scenarios / aggregators) batch into a single ``run_batch``
+program, and per-round metrics stream back segment by segment through the
+engine's donated/pipelined ``run_batch_stream`` (DESIGN.md §15) instead of
+arriving post-scan.  With ``--compile-cache-dir`` a restarted service
+re-loads its XLA programs from the persistent cache:
+
+  PYTHONPATH=src python -m repro.launch.serve --fedsim --cells 4 \
+      --rounds 24 --segment 8 --compile-cache-dir /tmp/jaxcache
 """
 from __future__ import annotations
 
 import argparse
 import time
+from dataclasses import dataclass
 
 import numpy as np
 
@@ -19,6 +30,115 @@ import jax.numpy as jnp
 
 from repro.configs.registry import get_config
 from repro.models import lm
+
+
+# ------------------------------------------------- simulation-as-a-service
+@dataclass
+class SegmentUpdate:
+    """One streamed per-request slice of a scan segment."""
+    request: int               # submit() ticket
+    t0: int                    # first round of the segment
+    rounds: int                # segment length
+    val_loss: np.ndarray       # (rounds,) — NaN off the eval cadence
+    val_acc: np.ndarray        # (rounds,)
+    sel: np.ndarray            # (rounds, M) sampled sets (padded)
+    valid: np.ndarray          # (rounds, M)
+
+
+class SimService:
+    """Queue sweep-cell requests, execute them as ONE batched scan program,
+    stream per-segment metrics back incrementally.
+
+    The service owns a single ``ScanEngine``: its ``ProgramCache`` keeps the
+    compiled programs hot across ``drain()`` calls (same static shapes =
+    zero recompiles), and ``ScanConfig.compile_cache_dir`` persists them
+    across service restarts.  ``submit`` accepts everything
+    ``ScanEngine.cell`` does — the ``lax.switch`` subsystems mean arbitrary
+    sampler/availability/aggregator mixes still compile to one program."""
+
+    def __init__(self, engine):
+        self.engine = engine
+        self._pending: list[tuple[int, dict]] = []
+        self._next = 0
+        self.histories: dict[int, object] = {}   # request -> ScanHistory
+
+    def submit(self, **cell_kwargs) -> int:
+        """Queue one sweep-cell request; returns its ticket."""
+        rid = self._next
+        self._next += 1
+        self._pending.append((rid, self.engine.cell(**cell_kwargs)))
+        return rid
+
+    def drain(self, *, segment: int = 0, ckpt_path=None, resume=False):
+        """Run every pending request as one batched program, yielding a
+        ``SegmentUpdate`` per (request, segment) as soon as that segment's
+        trajectory lands on host — segment k+1 computes while k streams.
+        ``segment=0`` runs the whole horizon as a single segment.  Final
+        ``ScanHistory`` objects land in ``self.histories``."""
+        if not self._pending:
+            return
+        ids = [rid for rid, _ in self._pending]
+        cells = [c for _, c in self._pending]
+        self._pending = []
+        parts = []
+        for t0, k, traj in self.engine.run_batch_stream(
+                cells, ckpt_every=segment, ckpt_path=ckpt_path,
+                resume=resume):
+            parts.append(traj)
+            for j, rid in enumerate(ids):
+                yield SegmentUpdate(
+                    request=rid, t0=t0, rounds=k,
+                    val_loss=traj["val_loss"][j], val_acc=traj["val_acc"][j],
+                    sel=traj["sel"][j], valid=traj["valid"][j])
+        full = jax.tree_util.tree_map(
+            lambda *xs: np.concatenate(xs, axis=1), *parts)
+        out = {**full, "counts": self.engine.final_counts}
+        for j, rid in enumerate(ids):
+            self.histories[rid] = self.engine._to_history(out, j)
+
+    def stats(self) -> dict:
+        """The engine's program-cache counters (hits/misses/compile_ms)."""
+        return self.engine.runtime_stats()
+
+
+def _fedsim_main(args):
+    from repro.core.availability_device import make_process
+    from repro.data.synthetic import make_synthetic
+    from repro.fed.models import logistic_regression
+    from repro.fed.scan_engine import ScanConfig, ScanEngine
+
+    ds = make_synthetic(n_clients=args.n_clients, alpha=0.5, beta=0.5,
+                        seed=args.seed)
+    cfg = ScanConfig(rounds=args.rounds, m=4, local_steps=2, batch_size=8,
+                     eval_every=1, sampler="uniform",
+                     compile_cache_dir=args.compile_cache_dir)
+    svc = SimService(ScanEngine(ds, logistic_regression(), cfg))
+    scenarios = ("GE", "CLUSTER", "DRIFT", "DEADLINE")
+    tickets = [svc.submit(
+        seed=i, avail_seed=100 + i,
+        process=make_process(scenarios[i % 4], n_clients=ds.n_clients,
+                             data_sizes=ds.sizes,
+                             label_sets=ds.label_sets(),
+                             num_labels=ds.num_classes,
+                             rounds=args.rounds, seed=7 + i))
+        for i in range(args.cells)]
+    t0 = time.time()
+    n_updates = 0
+    for upd in svc.drain(segment=args.segment):
+        n_updates += 1
+        loss = upd.val_loss[np.isfinite(upd.val_loss)]
+        print(f"req {upd.request} rounds [{upd.t0}, {upd.t0 + upd.rounds}) "
+              f"loss {loss[-1]:.4f}" if loss.size else
+              f"req {upd.request} rounds [{upd.t0}, {upd.t0 + upd.rounds})")
+    wall = time.time() - t0
+    st = svc.stats()
+    print(f"fedsim: {len(tickets)} cells x {args.rounds} rounds, "
+          f"{n_updates} streamed updates in {wall:.2f}s "
+          f"({len(tickets) * args.rounds / max(wall, 1e-9):.1f} "
+          f"cell-rounds/s)")
+    print(f"programs: {st['misses']} built ({st['compiles']} compiles, "
+          f"{st['compile_ms']:.0f} ms), {st['hits']} cache hits")
+    return [svc.histories[t] for t in tickets]
 
 
 def main(argv=None):
@@ -30,7 +150,20 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    # federated-simulation service mode (SimService over one hot ScanEngine)
+    ap.add_argument("--fedsim", action="store_true",
+                    help="serve federated sweep cells instead of LM decode")
+    ap.add_argument("--cells", type=int, default=4)
+    ap.add_argument("--rounds", type=int, default=24)
+    ap.add_argument("--segment", type=int, default=8,
+                    help="streaming segment length (0 = one segment)")
+    ap.add_argument("--n-clients", type=int, default=16)
+    ap.add_argument("--compile-cache-dir", default=None,
+                    help="persistent XLA compile cache directory")
     args = ap.parse_args(argv)
+
+    if args.fedsim:
+        return _fedsim_main(args)
 
     cfg = get_config(args.arch)
     if args.reduced:
