@@ -39,6 +39,7 @@ import sys
 
 BENCH = pathlib.Path(__file__).resolve().parent / "results" / "BENCH_kernels.json"
 BENCH_RUNTIME = BENCH.parent / "BENCH_runtime.json"
+BENCH_ROBUST = BENCH.parent / "BENCH_robustness.json"
 
 TOLERANCE = 0.8        # >= 1.0x winner with 20% timing jitter allowance
 MAX_ERR = 1e-4         # parity ceiling for non-bit-exact rows
@@ -96,6 +97,24 @@ def check_runtime(rows: list) -> tuple[list[str], list[str]]:
     return fails, lines
 
 
+def check_robustness(record: dict) -> tuple[list[str], list[str]]:
+    """Gate the robustness record (DESIGN.md §16): Krum ref|pallas selected
+    sets bit-identical, and the defenses actually defend — under 20%
+    sign-flip, krum and trimmed-mean must beat fedavg's final val-acc."""
+    fails, lines = [], []
+    lines.append(f"robustness gate: krum_parity_ok="
+                 f"{record.get('krum_parity_ok')}, "
+                 f"robust_beats_fedavg_signflip="
+                 f"{record.get('robust_beats_fedavg_signflip')}")
+    if not record.get("krum_parity_ok"):
+        fails.append("robustness: krum ref|pallas selected sets diverge "
+                     "(kernel panel regression?)")
+    if not record.get("robust_beats_fedavg_signflip"):
+        fails.append("robustness: krum/trimmed-mean no longer beat fedavg "
+                     "under 20% sign-flip — a defense regressed")
+    return fails, lines
+
+
 def main(argv=None) -> int:
     if not BENCH.exists():
         print(f"perf gate: {BENCH} missing — run "
@@ -109,6 +128,15 @@ def main(argv=None) -> int:
         rfails, rlines = check_runtime(json.loads(BENCH_RUNTIME.read_text()))
         fails.extend(rfails)
         lines.extend(rlines)
+    if not BENCH_ROBUST.exists():
+        fails.append(f"{BENCH_ROBUST.name} missing — run "
+                     f"`python -m benchmarks.run --only robustness` and "
+                     f"commit")
+    else:
+        bfails, blines = check_robustness(
+            json.loads(BENCH_ROBUST.read_text()))
+        fails.extend(bfails)
+        lines.extend(blines)
     for ln in lines:
         print(ln)
     if fails:

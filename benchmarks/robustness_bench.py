@@ -1,0 +1,216 @@
+"""Robustness bench: the attack x aggregator matrix, as ONE mixed program.
+
+Part 1 — Krum kernel parity: the (m, m) pairwise squared-distance panel
+(``kernels/ops.krum_distances``) against the pure-jnp expansion at bench
+tiers, recording panel max |diff| (f32 reassociation roundoff) and — the
+load-bearing contract — whether the SELECTED index sets of the full
+``krum_select`` recipe are bit-identical ref vs pallas
+(``krum_parity_ok``; ``perf_assert`` gates it).
+
+Part 2 — the robustness matrix: every (attack x aggregator) pair runs as a
+cell of ONE mixed ``run_batch`` program — fault families and aggregator
+families both dispatch through per-cell ``lax.switch`` indices, so the
+benign baseline, the sign-flip / model-replacement / straggler cells, and
+the fedavg / median / trimmed-mean / krum servers all batch together
+(the scenario-diversity headline of ROADMAP item 7).  Paired cells share
+seed + availability stream, so a row isolates the (attack, defense) effect.
+The record carries ``robust_beats_fedavg_signflip``: under 20% sign-flip,
+krum AND trimmed-mean must end at higher val-acc than fedavg on the same
+seeds (``perf_assert`` gates this too).
+
+Dumped to ``benchmarks/results/BENCH_robustness.json`` (CI quick pass).
+
+  PYTHONPATH=src python -m benchmarks.robustness_bench [--quick|--full]
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results"
+BENCH_PATH = RESULTS / "BENCH_robustness.json"
+
+# (family, byz frac, family knobs): sign-flip amplified 5x so the attack
+# actually breaks the weighted mean — at scale 1 fedavg's size weighting
+# dilutes a 20% minority and the matrix shows nothing
+ATTACKS = [("none", 0.0, {}), ("sign_flip", 0.2, {"scale": 5.0}),
+           ("scaled", 0.2, {}), ("straggler_stale", 0.3, {})]
+DEFENSES = ["fedavg", "median", "trimmed_mean", "krum"]
+
+
+def _time(fn, reps=2):
+    fn()
+    t0 = time.time()
+    for _ in range(reps):
+        fn()
+    return (time.time() - t0) / reps
+
+
+# --------------------------------------------- part 1: krum kernel parity
+def _kernel_rows(quick: bool) -> list[dict]:
+    from repro.fed.aggregator_device import krum_pairwise_ref, krum_select
+    from repro.kernels.ops import krum_distances
+
+    ref = jax.jit(krum_pairwise_ref)
+    pal = jax.jit(lambda x: krum_distances(x))
+    sizes = [(64, 512), (128, 2048), (256, 4096)]
+    if not quick:
+        sizes += [(512, 16384)]
+    rng = np.random.default_rng(0)
+    rows = []
+    for m, p in sizes:
+        x = jnp.asarray(rng.normal(size=(m, p)).astype(np.float32))
+        valid = jnp.asarray(rng.random(m) < 0.95)
+        d_ref = np.asarray(ref(x))
+        d_pal = np.asarray(pal(x))
+        maxdiff = float(np.max(np.abs(d_ref - d_pal)))
+        f = max(1, m // 5)
+        sel_ref, _ = krum_select(x, valid, f, 3, backend="ref")
+        sel_pal, _ = krum_select(x, valid, f, 3, backend="pallas")
+        sel_ok = bool(np.array_equal(np.asarray(sel_ref),
+                                     np.asarray(sel_pal)))
+        # the contract CI must fail on, not bury: selection bit-parity
+        assert sel_ok, f"krum selections diverge at m={m}, P={p}"
+        t_ref = _time(lambda: np.asarray(ref(x)))
+        t_pal = _time(lambda: np.asarray(pal(x)))
+        rows.append({"table": "robustness_kernel", "m": m, "p": p,
+                     "ref_s": round(t_ref, 4), "pallas_s": round(t_pal, 4),
+                     "speedup": round(t_ref / max(t_pal, 1e-9), 2),
+                     "panel_max_abs_diff": maxdiff,
+                     "selection_bit_equal": sel_ok})
+        print(f"[robustness_bench] m={m:4d} P={p:6d}: ref {t_ref:7.4f}s  "
+              f"pallas {t_pal:7.4f}s ({rows[-1]['speedup']:5.2f}x, "
+              f"panel maxdiff {maxdiff:.1e}, sel bit-equal {sel_ok})",
+              flush=True)
+    return rows
+
+
+# --------------------------------------------- part 2: the attack matrix
+def _matrix_rows(quick: bool) -> list[dict]:
+    from repro.core.availability import make_mode
+    from repro.data.synthetic import make_synthetic
+    from repro.fed.aggregator_device import make_aggregator_process
+    from repro.fed.faults_device import make_fault_process
+    from repro.fed.models import logistic_regression
+    from repro.fed.scan_engine import ScanConfig, ScanEngine
+
+    n = 30 if quick else 100
+    rounds = 40 if quick else 100
+    # m ODD: the lower median of an even v sits a full order statistic
+    # below center (measured -0.2 sigma per coordinate at v=6) and the
+    # bias compounds across rounds; odd v makes it the true middle row
+    m = max(5, n // 3 - (n // 3 + 1) % 2)
+    ds = make_synthetic(n_clients=n, alpha=0.5, beta=0.5, seed=0)
+    cfg = ScanConfig(rounds=rounds, m=m, local_steps=5, batch_size=10,
+                     lr=0.1, eval_every=1, sampler="uniform")
+    eng = ScanEngine(ds, logistic_regression(), cfg)
+    mode = make_mode("IDL", n_clients=n, data_sizes=ds.sizes,
+                     label_sets=ds.label_sets(), num_labels=ds.num_classes,
+                     seed=99)
+    # krum must tolerate the worst-case sampled-adversary count:
+    # E[byz in S_t] = frac * m, but a uniform draw can exceed it — size f
+    # above the mean while keeping nn = m - f - 2 rows in the score
+    f_krum = max(1, min(int(np.ceil(0.2 * m)) + 1, (m - 3) // 2))
+    defenses = {
+        "fedavg": lambda: None,
+        "median": lambda: make_aggregator_process("median"),
+        "trimmed_mean": lambda: make_aggregator_process("trimmed_mean",
+                                                        beta_trim=0.25),
+        "krum": lambda: make_aggregator_process("multikrum", krum_f=f_krum,
+                                                krum_multi=max(2, m // 2)),
+    }
+    grid = [(aname, frac, kw, dname) for (aname, frac, kw) in ATTACKS
+            for dname in DEFENSES]
+    # every (attack, defense) pair shares seed + avail stream: the sampler
+    # draw and the honest local updates are identical across a row's cells,
+    # so the matrix isolates (attack, defense)
+    cells = [eng.cell(seed=0, mode=mode, avail_seed=17,
+                      fault_process=make_fault_process(aname, n, frac=frac,
+                                                       **kw),
+                      aggregator_process=defenses[dname]())
+             for (aname, frac, kw, dname) in grid]
+    t0 = time.time()
+    hists = eng.run_batch(cells)       # ONE mixed attack x defense program
+    wall = time.time() - t0
+    rows = []
+    for (aname, frac, kw, dname), hh in zip(grid, hists):
+        rows.append({"table": "robustness_matrix", "attack": aname,
+                     "byz_frac": frac, "aggregator": dname,
+                     "n_clients": n, "rounds": rounds, "m": m,
+                     "final_acc": round(float(hh.val_acc[-1]), 4),
+                     "best_loss": round(hh.best_loss, 4),
+                     "final_loss": round(float(hh.val_loss[-1]), 4),
+                     "batch_wall_s": round(wall, 2)})
+        print(f"[robustness_bench] {aname:15s}({frac:.1f}) x {dname:12s}: "
+              f"final acc {rows[-1]['final_acc']:.4f}  "
+              f"best loss {rows[-1]['best_loss']:.4f}", flush=True)
+    return rows
+
+
+def _flags(rows: list[dict]) -> dict:
+    acc = {(r["attack"], r["aggregator"]): r["final_acc"]
+           for r in rows if r["table"] == "robustness_matrix"}
+    sf = {d: acc.get(("sign_flip", d)) for d in DEFENSES}
+    robust_ok = (sf["fedavg"] is not None
+                 and sf["krum"] > sf["fedavg"]
+                 and sf["trimmed_mean"] > sf["fedavg"])
+    krum_ok = all(r["selection_bit_equal"] for r in rows
+                  if r["table"] == "robustness_kernel")
+    return {"krum_parity_ok": krum_ok,
+            "robust_beats_fedavg_signflip": robust_ok,
+            "signflip_final_acc": sf}
+
+
+def run(quick: bool = True) -> list[dict]:
+    rows = _kernel_rows(quick) + _matrix_rows(quick)
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    from benchmarks.common import pallas_backend_mode
+    record = {"bench": "robustness", "backend": jax.default_backend(),
+              "backend_mode": pallas_backend_mode(),
+              "pallas_interpret": jax.default_backend() == "cpu",
+              **_flags(rows), "rows": rows}
+    BENCH_PATH.write_text(json.dumps(record, indent=1))
+    return rows
+
+
+def summarize(rows) -> list[str]:
+    out = ["", "== krum pairwise-distance panel: ref vs pallas =="]
+    out.append(f"{'m':>5s} {'P':>7s} {'ref (s)':>9s} {'pallas (s)':>11s} "
+               f"{'speedup':>8s} {'panel maxdiff':>14s} {'sel ==':>7s}")
+    for r in rows:
+        if r["table"] != "robustness_kernel":
+            continue
+        out.append(f"{r['m']:5d} {r['p']:7d} {r['ref_s']:9.4f} "
+                   f"{r['pallas_s']:11.4f} {r['speedup']:7.2f}x "
+                   f"{r['panel_max_abs_diff']:14.1e} "
+                   f"{str(r['selection_bit_equal']):>7s}")
+    out.append("")
+    out.append("== attack x aggregator matrix (one mixed run_batch) ==")
+    out.append(f"{'attack':>16s} {'frac':>5s} {'aggregator':>13s} "
+               f"{'final acc':>10s} {'best loss':>10s}")
+    for r in rows:
+        if r["table"] != "robustness_matrix":
+            continue
+        out.append(f"{r['attack']:>16s} {r['byz_frac']:5.1f} "
+                   f"{r['aggregator']:>13s} {r['final_acc']:10.4f} "
+                   f"{r['best_loss']:10.4f}")
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="the CI pass (default unless --full)")
+    ap.add_argument("--full", action="store_true",
+                    help="N=100 clients, 100 rounds, the m=512 P=16384 "
+                         "kernel tier")
+    args = ap.parse_args()
+    for line in summarize(run(quick=not args.full)):
+        print(line)

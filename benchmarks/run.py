@@ -25,7 +25,7 @@ RESULTS = pathlib.Path(__file__).resolve().parent / "results"
 
 SECTIONS = ["table2", "fig4", "table3", "table4", "dynamic", "scaling",
             "engine", "shard", "runtime", "availability", "aggregator",
-            "kernels", "graph", "roofline", "variants"]
+            "robustness", "kernels", "graph", "roofline", "variants"]
 
 
 def _section(name: str, quick: bool):
@@ -56,6 +56,8 @@ def _section(name: str, quick: bool):
         from benchmarks import availability_bench as m
     elif name == "aggregator":
         from benchmarks import aggregator_bench as m
+    elif name == "robustness":
+        from benchmarks import robustness_bench as m
     elif name == "kernels":
         from benchmarks import kernel_bench as m
     elif name == "graph":

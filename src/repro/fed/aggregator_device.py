@@ -51,7 +51,27 @@ Families (``FAMILIES`` — the switch order; == ``scan_engine.AGGREGATORS``):
                                w_k mem_k`` over ALL N clients with
                                staleness-discounted weights
                                ``w_k ∝ n_k gamma^(t - tau_k)``
+  median    MedianProcess      coordinate-wise lower median of the valid
+                               updates — 1/2 breakdown point per
+                               coordinate (robust-statistics classic)
+  trimmed_  TrimmedMeanProcess per-coordinate beta-trimmed mean: drop the
+  mean                         k = floor(beta v) smallest and largest
+                               entries, average the rest (Yin et al. 2018)
+  krum      KrumProcess        Krum / multi-Krum (Blanchard et al. 2017):
+                               score_i = sum of the v − f − 2 smallest
+                               squared distances to the other updates;
+                               keep the k lowest-scoring updates and
+                               average them uniformly.  The (m, m)
+                               distance panel dispatches ``ref | pallas``
+                               (``kernels/krum.py``)
   ========= ================== ===========================================
+
+The three robust families are the fault-tolerance counterpart of the
+``fed/faults_device.py`` injection seam: they deliberately IGNORE the
+Eq. 18 size weights (a data-rich Byzantine client must not buy itself
+extra mass) and map NaN-poisoned coordinates to +inf before sorting, so
+the PR-5 NaN-containment semantics hold for them too — a poisoned update
+is an extreme order statistic, trimmed/out-voted like any other outlier.
 
 The runtime representation is a uniform *params* pytree (family index,
 packed ``theta`` knobs) plus a uniform *state* pytree (``prev`` global
@@ -85,7 +105,8 @@ from jax import flatten_util
 
 from repro.core.sampler_device import select_k
 
-FAMILIES = ("fedavg", "fedavgm", "fedadam", "fedprox_w", "memory")
+FAMILIES = ("fedavg", "fedavgm", "fedadam", "fedprox_w", "memory",
+            "median", "trimmed_mean", "krum")
 BACKENDS = ("ref", "pallas")
 
 THETA_DIM = 6          # packed per-family scalar knobs (see the branch readers)
@@ -178,6 +199,108 @@ def memory_scatter_reduce_ref(mem, upd, sel, valid, w):
     shipped path): O(mP) masked row scatter + one (N,)·(N, P) tensordot."""
     mem2 = mem.at[sel].set(jnp.where(valid[:, None], upd, mem[sel]))
     return mem2, jnp.tensordot(w, mem2, axes=(0, 0))
+
+
+# ----------------------------------------------------- robust combine rules
+# Shared by the switch branches, the numpy-oracle tests and the robustness
+# bench, so "branch vs oracle" always pins the shipped math.  All three
+# operate on the flat (M, P) update panel with a (M,) valid mask, map
+# NaN-poisoned coordinates and pad rows to +inf before sorting (one mapping
+# buys both NaN containment and the Byzantine breakdown bound), and ignore
+# the Eq. 18 size weights (see the module docstring).
+def coordinate_median(updf, valid):
+    """Coordinate-wise LOWER median — sorted index ``(v − 1) // 2`` of the
+    v valid entries per coordinate.  With f < v/2 arbitrarily corrupted
+    rows (±inf included) the median index always lands on an honest order
+    statistic: at most f entries sort below it and at most f above.
+    Returns ``(median (P,), v)``."""
+    v = jnp.sum(valid.astype(jnp.int32))
+    x = jnp.where(jnp.isnan(updf), jnp.inf, updf)
+    x = jnp.where(valid[:, None], x, jnp.inf)
+    srt = jnp.sort(x, axis=0)
+    return srt[jnp.maximum((v - 1) // 2, 0)], v
+
+
+def trimmed_mean_combine(updf, valid, beta):
+    """Per-coordinate beta-trimmed mean (Yin et al. 2018): sort the v valid
+    entries, drop the ``k = min(floor(beta v), (v − 1) // 2)`` smallest and
+    largest, average the rest — op order is sum-then-divide over the kept
+    window (assumption log #21; the oracle mirrors it).  ``k >= f`` removes
+    every one-sided corruption; the f32 product ``beta * v`` floors exactly
+    like the numpy-f32 oracle.  Returns ``(mean (P,), v)``."""
+    v = jnp.sum(valid.astype(jnp.int32))
+    x = jnp.where(jnp.isnan(updf), jnp.inf, updf)
+    x = jnp.where(valid[:, None], x, jnp.inf)
+    srt = jnp.sort(x, axis=0)
+    k = jnp.maximum(jnp.minimum(
+        jnp.floor(beta * v.astype(jnp.float32)).astype(jnp.int32),
+        (v - 1) // 2), 0)
+    ii = jnp.arange(updf.shape[0])[:, None]
+    keep = (ii >= k) & (ii < v - k)
+    kept = jnp.sum(jnp.where(keep, srt, 0.0), axis=0)
+    return kept / jnp.maximum(v - 2 * k, 1).astype(jnp.float32), v
+
+
+def krum_pairwise_ref(updf):
+    """REF backend of the Krum squared-distance panel, shared by the switch
+    branch, the bench and the ref-vs-pallas parity tests:
+    ``D = ||x_i||² + ||x_j||² − 2 X Xᵀ``."""
+    x = updf.astype(jnp.float32)
+    n2 = jnp.sum(x * x, axis=1)
+    return n2[:, None] + n2[None, :] - 2.0 * (x @ x.T)
+
+
+def krum_select(updf, valid, f_byz, multi, *, backend: str = "ref",
+                interpret: bool | None = None):
+    """Krum / multi-Krum selection (Blanchard et al., NeurIPS 2017) over
+    the valid rows of the flat (M, P) panel.
+
+    score_i = sum of the ``nn = clip(v − f − 2, 1, m − 1)`` smallest
+    squared distances from row i to the other valid rows; the ``k =
+    clip(multi, 1, v)`` lowest-scoring rows win.  Rank ties break by row
+    index (double STABLE argsort — ``jnp.argsort`` is stable, matching the
+    ``np.argsort(kind="stable")`` oracle bit-for-bit).  Distance hygiene:
+    the expansion is clamped at 0, NaN entries (inf − inf of ±inf-poisoned
+    pairs, or NaN-poisoned rows) map to +inf, and diagonal / invalid pairs
+    are +inf — so a poisoned row's score is +inf and it can only be chosen
+    when k exceeds the finite-score rows (``chosen`` is additionally
+    masked by ``valid`` so pad rows NEVER win a tie against a real row).
+    ``v < f + 3`` (outside Blanchard's m >= 2f + 3 regime) degrades
+    gracefully to nearest-neighbor scoring via the nn clamp.  Returns
+    ``(chosen (M,) bool, scores (M,) f32)``."""
+    m = updf.shape[0]
+    if backend == "pallas":
+        from repro.kernels.ops import krum_distances
+        d = krum_distances(updf.astype(jnp.float32), interpret=interpret)
+    else:
+        d = krum_pairwise_ref(updf)
+    d = jnp.maximum(d, 0.0)
+    d = jnp.where(jnp.isnan(d), jnp.inf, d)
+    pair_ok = valid[:, None] & valid[None, :] & ~jnp.eye(m, dtype=bool)
+    d = jnp.where(pair_ok, d, jnp.inf)
+    v = jnp.sum(valid.astype(jnp.int32))
+    nn = jnp.clip(v - f_byz - 2, 1, max(m - 1, 1))
+    ds = jnp.sort(d, axis=1)
+    take = jnp.arange(m)[None, :] < nn
+    scores = jnp.sum(jnp.where(take, ds, 0.0), axis=1)
+    scores = jnp.where(valid, scores, jnp.inf)
+    kk = jnp.clip(multi, 1, jnp.maximum(v, 1))
+    rank = jnp.argsort(jnp.argsort(scores))
+    chosen = (rank < kk) & valid
+    return chosen, scores
+
+
+def krum_combine(updf, valid, f_byz, multi, *, backend: str = "ref",
+                 interpret: bool | None = None):
+    """:func:`krum_select` + the UNWEIGHTED mean of the chosen rows
+    (multi-Krum averages uniformly).  Returns ``(combined (P,), chosen,
+    scores)``."""
+    chosen, scores = krum_select(updf, valid, f_byz, multi,
+                                 backend=backend, interpret=interpret)
+    cnt = jnp.sum(chosen.astype(jnp.float32))
+    out = jnp.sum(jnp.where(chosen[:, None], updf.astype(jnp.float32), 0.0),
+                  axis=0) / jnp.maximum(cnt, 1.0)
+    return out, chosen, scores
 
 
 # ------------------------------------------------------- the switch step
@@ -317,9 +440,38 @@ def make_aggregator_step(n: int, m: int, params_like, *, data_sizes=None,
         new = guard_zero_weight(unravel(red), state["prev"], total)
         return new, {**state, "prev": new, "mem": mem, "tau": tau}
 
+    def _median(ap, state, key, upd, w, s, avail, t, sel, valid):
+        """Coordinate-wise lower median of the valid updates (weights
+        ignored — see :func:`coordinate_median`)."""
+        med, v = coordinate_median(jax.vmap(ravel)(upd), valid)
+        new = guard_zero_weight(unravel(med), state["prev"], v)
+        return new, {**state, "prev": new}
+
+    def _trimmed_mean(ap, state, key, upd, w, s, avail, t, sel, valid):
+        """Per-coordinate beta-trimmed mean, ``beta = theta[0]``."""
+        beta = ap["theta"][0]
+        tm, v = trimmed_mean_combine(jax.vmap(ravel)(upd), valid, beta)
+        new = guard_zero_weight(unravel(tm), state["prev"], v)
+        return new, {**state, "prev": new}
+
+    def _krum(ap, state, key, upd, w, s, avail, t, sel, valid):
+        """Krum / multi-Krum, ``f = theta[0]``, ``k = theta[1]``; the
+        distance panel routes through the module ``backend`` knob (the
+        same ``agg_backend`` that routes the memory scatter)."""
+        f_byz = jnp.round(ap["theta"][0]).astype(jnp.int32)
+        multi = jnp.round(ap["theta"][1]).astype(jnp.int32)
+        out, chosen, _ = krum_combine(jax.vmap(ravel)(upd), valid, f_byz,
+                                      multi, backend=backend,
+                                      interpret=interpret)
+        new = guard_zero_weight(unravel(out), state["prev"],
+                                jnp.sum(chosen.astype(jnp.int32)))
+        return new, {**state, "prev": new}
+
     branches = {"fedavg": _fedavg, "fedavgm": _fedavgm, "fedadam": _fedadam,
                 "fedprox_w": _fedprox_w,
-                "memory": _memory if memory_enabled else _fedavg}
+                "memory": _memory if memory_enabled else _fedavg,
+                "median": _median, "trimmed_mean": _trimmed_mean,
+                "krum": _krum}
 
     def step(aparams, state, key, stacked_updates, weights, s, avail, t,
              sel=None, valid=None):
@@ -447,9 +599,51 @@ class MemoryProcess(AggregatorProcess):
         return np.array([max(self.gamma, 1e-6)])
 
 
+@dataclass
+class MedianProcess(AggregatorProcess):
+    """Coordinate-wise lower median (1/2 breakdown per coordinate)."""
+    name: str = "median"
+    family = "median"
+
+
+@dataclass
+class TrimmedMeanProcess(AggregatorProcess):
+    """Per-coordinate beta-trimmed mean (Yin et al. 2018); ``beta`` is the
+    per-side trim fraction (per-cell traced, so beta-variants batch)."""
+    beta: float = 0.2
+    name: str = "trimmed_mean"
+    family = "trimmed_mean"
+
+    def __post_init__(self):
+        self.name = f"trimmed_mean(beta={self.beta})"
+
+    def _theta(self):
+        return np.array([self.beta])
+
+
+@dataclass
+class KrumProcess(AggregatorProcess):
+    """Krum / multi-Krum (Blanchard et al. 2017): ``f`` is the Byzantine
+    budget the score defends against, ``multi`` the number of selected
+    updates averaged (1 = classic Krum)."""
+    f: int = 1
+    multi: int = 1
+    name: str = "krum"
+    family = "krum"
+
+    def __post_init__(self):
+        self.name = (f"krum(f={self.f})" if self.multi <= 1
+                     else f"multikrum(f={self.f},k={self.multi})")
+
+    def _theta(self):
+        return np.array([float(self.f), float(self.multi)])
+
+
 def make_aggregator_process(name: str, *, server_lr: float | None = None,
                             beta: float = 0.9, mu: float = 0.1,
-                            gamma: float = 0.9) -> AggregatorProcess:
+                            gamma: float = 0.9, beta_trim: float = 0.2,
+                            krum_f: int = 1,
+                            krum_multi: int = 1) -> AggregatorProcess:
     """Family names (= ``scan_engine.AGGREGATORS``) -> processes."""
     name = name.lower()
     if name == "fedavg":
@@ -464,4 +658,12 @@ def make_aggregator_process(name: str, *, server_lr: float | None = None,
         return FedProxWProcess(mu=mu)
     if name == "memory":
         return MemoryProcess(gamma=gamma)
+    if name == "median":
+        return MedianProcess()
+    if name in ("trimmed_mean", "trimmedmean"):
+        return TrimmedMeanProcess(beta=beta_trim)
+    if name in ("krum", "multikrum"):
+        return KrumProcess(f=krum_f,
+                           multi=krum_multi if name == "krum" else
+                           max(krum_multi, 2))
     raise ValueError(f"unknown aggregator family {name!r}")

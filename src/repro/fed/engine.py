@@ -25,6 +25,7 @@ from repro.core.sampler import Sampler, FedGSSampler
 from repro.core import graph as graph_mod
 from repro.data.fed_dataset import FedDataset
 from repro.fed.client import make_local_trainer, make_loss_prober
+from repro.fed.faults_device import HostFaultInjector, make_fault_process
 from repro.fed.models import FedModel
 from repro.fed.runtime import AsyncCheckpointWriter, enable_compile_cache
 from repro.fed.server import ServerAggregator
@@ -71,16 +72,34 @@ class History:
 class FLEngine:
     def __init__(self, ds: FedDataset, model: FedModel, sampler: Sampler,
                  mode: AvailabilityMode, cfg: FLConfig, *,
-                 aggregator=None, agg_backend: str = "ref"):
+                 aggregator=None, agg_backend: str = "ref",
+                 fault=None, fault_frac: float = 0.0,
+                 fault_seed: Optional[int] = None):
         """``aggregator`` is any ``fed.aggregator_device.AggregatorProcess``
         (default FedAvg — bit-parity with the legacy Eq. 18 path);
-        ``agg_backend`` routes the memory family's scatter+reduction."""
+        ``agg_backend`` routes the memory family's scatter+reduction.
+        ``fault`` is a ``fed.faults_device.FaultProcess`` (or a family name
+        string, built with ``fault_frac`` adversarial clients) — corruption
+        is injected between local training and ``server.apply`` through
+        ``HostFaultInjector``, the same branch code and
+        ``fold_in(PRNGKey(fault_seed), t)`` stream the scan engine traces,
+        so a matching scan cell replays the host run bit-exactly.
+        ``fault_seed`` defaults to ``cfg.seed + 0xFA17`` (the scan cell
+        convention)."""
         self.ds, self.model, self.sampler, self.mode, self.cfg = ds, model, sampler, mode, cfg
         self.n = ds.n_clients
         self.m = max(1, int(round(cfg.sample_frac * self.n)))
         self._server = ServerAggregator(aggregator, n_clients=self.n,
                                         data_sizes=ds.sizes,
                                         backend=agg_backend, seed=cfg.seed)
+        if isinstance(fault, str):
+            fault = make_fault_process(fault, self.n, frac=fault_frac)
+        if fault is not None and fault.family != "none":
+            self._faults = HostFaultInjector(
+                fault, fault_seed=cfg.seed + 0xFA17
+                if fault_seed is None else fault_seed)
+        else:
+            self._faults = None
         self._trainer = make_local_trainer(
             model.loss, local_steps=cfg.local_steps,
             batch_size=cfg.batch_size, prox_mu=cfg.prox_mu)
@@ -172,6 +191,10 @@ class FLEngine:
         # pre-§13 format dropped this state, pinned fixed by
         # tests/test_checkpoint_resume.py)
         self._server.init(params)
+        # fault-injector state (AR(1) latency chain + stale panel) follows
+        # the same init-then-overwrite-on-resume protocol as server state
+        if self._faults is not None:
+            self._faults.init(params)
         if resume and ckpt_path:
             import os
             from repro.checkpoint.ckpt import load_checkpoint
@@ -180,18 +203,27 @@ class FLEngine:
                 like = {"params": params, "counts": self.counts,
                         "round": np.zeros((), np.int64),
                         "server": self._server.state}
+                if self._faults is not None:
+                    like["faults"] = self._faults.state
                 try:
                     state = load_checkpoint(ckpt_path, like=like)
                     self._server.state = jax.tree_util.tree_map(
                         jnp.asarray, state["server"])
-                except KeyError:      # pre-§13 checkpoint: no server state —
-                    like.pop("server")                # aggregator restarts
+                except KeyError:      # older checkpoint: missing server or
+                    like.pop("server")      # fault state — those restart
+                    like.pop("faults", None)
                     state = load_checkpoint(ckpt_path, like=like)
                 params = jax.tree_util.tree_map(jnp.asarray, state["params"])
                 self.counts = np.asarray(state["counts"], np.float64)
                 start_round = int(state["round"]) + 1
                 if "server" not in state:
                     self._server.init(params)
+                if self._faults is not None:
+                    if "faults" in state:
+                        self._faults.state = jax.tree_util.tree_map(
+                            jnp.asarray, state["faults"])
+                    else:
+                        self._faults.init(params)
 
         xs = jnp.asarray(self.ds.x)
         ys = jnp.asarray(self.ds.y)
@@ -239,6 +271,8 @@ class FLEngine:
             key, sub = jax.random.split(key)
             local = self._trainer(params, xs[sel], ys[sel], sizes[sel],
                                   jnp.float32(lr), jax.random.split(sub, len(sel)))
+            if self._faults is not None:
+                local = self._faults.inject(local, params, sel, avail, t)
             params = self._server.apply(
                 local, self.ds.sizes[sel].astype(np.float32), sel, avail, t)
             self.counts[sel] += 1
@@ -263,10 +297,12 @@ class FLEngine:
                 # snapshot on the main thread: params / server.state are
                 # rebound functionally each round (the old trees stay
                 # valid), but self.counts mutates in place — copy it
-                writer.submit(save_checkpoint, ckpt_path,
-                              {"params": params, "counts": self.counts.copy(),
-                               "round": np.asarray(t, np.int64),
-                               "server": self._server.state},
+                snap = {"params": params, "counts": self.counts.copy(),
+                        "round": np.asarray(t, np.int64),
+                        "server": self._server.state}
+                if self._faults is not None:
+                    snap["faults"] = self._faults.state
+                writer.submit(save_checkpoint, ckpt_path, snap,
                               metadata={"round": t,
                                         "sampler": self.sampler.name,
                                         "aggregator": self._server

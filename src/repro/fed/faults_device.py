@@ -1,0 +1,418 @@
+"""Device-native Byzantine/straggler fault-injection subsystem.
+
+Every scenario the engines simulated before this module was *benign*:
+clients disappear (core/availability_device.py), but the updates that do
+arrive are always honest.  The robustness literature the ROADMAP's
+scenario-diversity item points at (Blanchard et al.'s Krum, trimmed-mean /
+coordinate-median breakdown analyses, straggler-staleness models) needs the
+opposite: clients that LIE.  This module makes the lie a first-class
+process abstraction, mirroring ``AvailabilityProcess`` exactly — ONE pure,
+jit/vmap/scan-traceable implementation that the scan engine carries through
+``lax.scan`` between local training and aggregation, the host engine wraps
+eagerly (:class:`HostFaultInjector`), and mixed benign/adversarial sweep
+cells batch through a single ``run_batch`` program.
+
+A :class:`FaultProcess` is
+
+    ``init(key) -> state``                                    (eager, host)
+    ``corrupt(state, key, updf, prevf, avail, t, sel, valid)
+        -> (updf, state)``                              (pure, traceable)
+
+where ``updf`` is the (M, P) FLAT panel of locally-trained client params
+(the ``aggregator_device._flat_template`` convention — the engines ravel
+the stacked pytree once, corrupt, and unravel), ``prevf`` the flat previous
+global params, and ``sel``/``valid`` the round's gathered client slots.
+Every family compiles to ONE ``lax.switch`` branch index
+(:func:`make_fault_step`), so cells of DIFFERENT fault families — and
+benign cells, whose ``none`` branch is a bitwise identity — vmap-batch
+together.
+
+Families (``FAMILIES`` — the switch order):
+
+  =============== ===================== ==================================
+  family          class                 corrupted update of a byz slot
+  =============== ===================== ==================================
+  none            NoFault               identity (the benign default)
+  sign_flip       SignFlipFault         ``prev - scale (theta_k - prev)``
+                                        — the update delta reversed
+  gaussian_noise  GaussianNoiseFault    ``theta_k + sigma eps``, eps ~
+                                        N(0, I) per coordinate
+  scaled          ScaledFault           ``prev + boost (theta_k - prev)``
+                                        — model-replacement boosting
+                                        (Bagdasaryan et al.)
+  straggler_stale StragglerStaleFault   the client's LAST on-time update
+                                        (a tau-round-old row of a carried
+                                        (N, P) stale panel); lateness is
+                                        the AR(1) latency chain of the
+                                        PR-3 deadline machinery
+  =============== ===================== ==================================
+
+Which clients are adversarial is a fixed host-side mask (``byz``):
+``ceil(frac * N)`` clients drawn by a seeded permutation, so the attacker
+identity is deterministic per (frac, byz_seed) and identical across the
+paired cells of a bench row.  Corruption applies to a sampled slot iff its
+client is in the mask AND the slot is valid (pads stay untouched).
+
+The runtime representation is a uniform *params* pytree (family index,
+packed ``theta`` knobs, the (N,) ``byz`` mask, per-client ``aux`` mean
+latencies) plus a uniform *state* pytree (``latency`` (N,) AR(1) chain;
+the engines merge in the flat (rows, P) ``stale`` panel via
+:func:`init_fault_state` because P is only known once the model is —
+exactly how the aggregator's memory panel is sized).  ``stale_enabled=
+False`` aliases the straggler branch to ``none`` so a no-straggler program
+carries a 0-row panel without tracing the scatter (the ``memory_enabled``
+pattern of ``make_aggregator_step``).
+
+Seed-stream convention (matches availability, DESIGN.md assumption log
+#10): per round the engines derive ``fkey = fold_in(fault_key, t)``; the
+noise draw uses ``fkey`` itself, the AR(1) latency transition uses
+``fold_in(fkey, 2)`` (``_STEP_SALT``), and ``init`` consumes the raw
+``fault_key`` — init and round draws cannot collide, and a segmented
+resume replays the identical per-round stream (no cross-round rng carry).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.fed.aggregator_device import _flat_template
+
+FAMILIES = ("none", "sign_flip", "gaussian_noise", "scaled",
+            "straggler_stale")
+
+THETA_DIM = 6          # packed per-family scalar knobs (see the branch readers)
+_STEP_SALT = 2         # fold_in salt of the AR(1) latency-transition stream
+
+
+# ------------------------------------------------------------ state helpers
+def init_fault_state(state: dict, params0, stale_rows: int) -> dict:
+    """Merge the flat (rows, P) stale-update panel into a process's carried
+    state.  Every row starts as flat(params0) — a straggler's first late
+    round ships the INITIAL model, the same round-0 pseudo-update
+    convention the memory aggregator uses (DESIGN.md assumption log #15).
+    ``stale_rows=0`` keeps the uniform pytree structure with an empty
+    panel (the no-straggler program variants)."""
+    ravel, _, _ = _flat_template(params0)
+    flat0 = ravel(params0)
+    return {**state, "stale": jnp.tile(flat0[None, :], (stale_rows, 1))}
+
+
+# ------------------------------------------------------- per-family branches
+# Each branch: (fparams, state, key, updf (M, P), prevf (P,), avail, t,
+# sel, valid, byzm) -> (updf, new state).  All branches return the SAME
+# pytree structure so lax.switch can dispatch on a traced (per-cell,
+# vmap-batched) family index; ``byzm`` (M,) is the precomputed
+# byz-and-valid slot mask.
+def _corrupt_none(fp, state, key, updf, prevf, avail, t, sel, valid, byzm):
+    return updf, state
+
+
+def _corrupt_sign_flip(fp, state, key, updf, prevf, avail, t, sel, valid,
+                       byzm):
+    """Reverse (and optionally amplify) the update delta: the byz slot
+    ships ``prev - scale (theta_k - prev)`` — at scale 1 exactly the
+    mirror image of the honest update through the previous model."""
+    scale = fp["theta"][0]
+    flipped = prevf[None, :] - scale * (updf - prevf[None, :])
+    return jnp.where(byzm[:, None], flipped, updf), state
+
+
+def _corrupt_gaussian(fp, state, key, updf, prevf, avail, t, sel, valid,
+                      byzm):
+    """Additive N(0, sigma^2 I) noise on the byz slots' params."""
+    sigma = fp["theta"][0]
+    noise = sigma * jax.random.normal(key, updf.shape)
+    return jnp.where(byzm[:, None], updf + noise, updf), state
+
+
+def _corrupt_scaled(fp, state, key, updf, prevf, avail, t, sel, valid,
+                    byzm):
+    """Model-replacement boosting: the byz slot ships
+    ``prev + boost (theta_k - prev)`` — after Eq. 18's 1/M dilution the
+    attacker's delta survives at full strength when boost ~ M."""
+    boost = fp["theta"][0]
+    boosted = prevf[None, :] + boost * (updf - prevf[None, :])
+    return jnp.where(byzm[:, None], boosted, updf), state
+
+
+def _corrupt_straggler(fp, state, key, updf, prevf, avail, t, sel, valid,
+                       byzm):
+    """Staleness, not malice: byz ("slow") clients carry the PR-3 AR(1)
+    latency chain ``l' = rho l + (1 - rho) mu_k + sigma eps`` and, whenever
+    sampled while ``l' > deadline``, ship the row of the carried (N, P)
+    stale panel — their last ON-TIME update (tau rounds old).  On-time
+    sampled slots (honest ones always) refresh their panel row with the
+    fresh update, so staleness compounds only across consecutive late
+    draws."""
+    rho, sigma, deadline = fp["theta"][0], fp["theta"][1], fp["theta"][2]
+    mu = fp["aux"]
+    lat = rho * state["latency"] + (1.0 - rho) * mu \
+        + sigma * jax.random.normal(jax.random.fold_in(key, _STEP_SALT),
+                                    mu.shape)
+    late = byzm & (lat[sel] > deadline)
+    stale_rows = state["stale"][sel]                      # pre-refresh read
+    out = jnp.where(late[:, None], stale_rows, updf)
+    refresh = valid & ~late
+    stale = state["stale"].at[sel].set(
+        jnp.where(refresh[:, None], updf, stale_rows))
+    return out, {**state, "latency": lat, "stale": stale}
+
+
+_BRANCHES = {"none": _corrupt_none, "sign_flip": _corrupt_sign_flip,
+             "gaussian_noise": _corrupt_gaussian, "scaled": _corrupt_scaled,
+             "straggler_stale": _corrupt_straggler}
+
+
+def make_fault_step(n: int, m: int, *, stale_enabled: bool = False,
+                    family: Optional[str] = None):
+    """Compile-time constructor of the ONE per-round corruption step
+
+        ``corrupt(fparams, state, key, updf, prevf, avail, t, sel, valid)
+            -> (updf, state)``
+
+    dispatching ``lax.switch`` on the cell's family index, so cells of
+    DIFFERENT fault families (and benign cells) batch through one vmapped
+    program.  ``stale_enabled=False`` aliases the straggler branch to the
+    identity so a no-straggler program can carry a 0-row stale panel
+    without tracing the gather/scatter (callers — ``ScanEngine`` — must
+    dispatch straggler cells to a stale-enabled program; the
+    ``memory_enabled`` convention of ``make_aggregator_step``).
+    ``family`` names a single branch for the eager host path — SAME branch
+    code, identical numerics, but nothing else traces."""
+    if family is not None and family not in FAMILIES:
+        raise ValueError(f"family must be one of {FAMILIES}, not {family!r}")
+    if family == "straggler_stale" and not stale_enabled:
+        raise ValueError("family='straggler_stale' requires "
+                         "stale_enabled=True")
+    branches = dict(_BRANCHES)
+    if not stale_enabled:
+        branches["straggler_stale"] = _corrupt_none
+
+    def corrupt(fparams, state, key, updf, prevf, avail, t, sel=None,
+                valid=None):
+        t = jnp.asarray(t, jnp.int32)
+        byzm = fparams["byz"][sel] & valid
+        if family is not None:
+            return branches[family](fparams, state, key, updf, prevf,
+                                    avail, t, sel, valid, byzm)
+        return jax.lax.switch(fparams["family"],
+                              [branches[f] for f in FAMILIES],
+                              fparams, state, key, updf, prevf, avail, t,
+                              sel, valid, byzm)
+
+    return corrupt
+
+
+# ------------------------------------------------------------ the processes
+@dataclass
+class FaultProcess:
+    """Base class.  ``params()``/``init(key)`` are eager host-side
+    constructors of the per-cell runtime pytrees; :meth:`corrupt` is the
+    pure traceable entry point (single-process convenience over
+    :func:`make_fault_step`, guaranteed identical because it IS the switch
+    path).  Every family fills the SAME params pytree so heterogeneous
+    fault cells stack along a vmap batch axis
+    (``scan_engine.stack_cells``)."""
+    n: int
+    frac: float = 0.0
+    byz_seed: int = 0
+    name: str = "none"
+
+    family = "none"
+
+    def _theta(self) -> np.ndarray:
+        return np.zeros(0)
+
+    def _aux(self) -> np.ndarray:
+        return np.zeros(self.n)
+
+    def byz_mask(self) -> np.ndarray:
+        """(N,) bool: the ``ceil(frac * N)`` adversarial clients, drawn by
+        a seeded permutation — deterministic attacker identity per
+        (frac, byz_seed), shared across the paired cells of a sweep."""
+        mask = np.zeros(self.n, bool)
+        k = int(np.ceil(self.frac * self.n)) if self.frac > 0 else 0
+        if k:
+            rng = np.random.default_rng(self.byz_seed)
+            mask[rng.permutation(self.n)[:k]] = True
+        return mask
+
+    def params(self) -> dict:
+        theta = np.zeros(THETA_DIM, np.float32)
+        th = np.asarray(self._theta(), np.float32)
+        theta[:th.shape[0]] = th
+        return {"family": jnp.int32(FAMILIES.index(self.family)),
+                "theta": jnp.asarray(theta),
+                "byz": jnp.asarray(self.byz_mask()),
+                "aux": jnp.asarray(self._aux(), jnp.float32)}
+
+    def init(self, key: jax.Array) -> dict:
+        """Initial carried state (stationary AR(1) draw where one exists).
+        The stale panel is merged in by the engine via
+        :func:`init_fault_state` (P is model-dependent)."""
+        return {"latency": jnp.zeros((self.n,), jnp.float32)}
+
+    # -- traceable entry point --------------------------------------------
+    def corrupt(self, state, key, updf, prevf, avail, t, sel, valid):
+        step = make_fault_step(
+            self.n, int(updf.shape[0]),
+            stale_enabled=self.family == "straggler_stale",
+            family=self.family)
+        return step(self.params(), state, key, updf, prevf, avail, t, sel,
+                    valid)
+
+
+@dataclass
+class NoFault(FaultProcess):
+    """The benign identity (every slot honest)."""
+    name: str = "none"
+    family = "none"
+
+
+@dataclass
+class SignFlipFault(FaultProcess):
+    """Reversed update delta, optionally amplified (``scale`` > 1)."""
+    frac: float = 0.2
+    scale: float = 1.0
+    name: str = "sign_flip"
+    family = "sign_flip"
+
+    def _theta(self):
+        return np.array([self.scale])
+
+
+@dataclass
+class GaussianNoiseFault(FaultProcess):
+    """Additive per-coordinate N(0, sigma^2) noise on byz updates."""
+    frac: float = 0.2
+    sigma: float = 1.0
+    name: str = "gaussian_noise"
+    family = "gaussian_noise"
+
+    def _theta(self):
+        return np.array([self.sigma])
+
+
+@dataclass
+class ScaledFault(FaultProcess):
+    """Model-replacement boosting: the delta amplified ``boost``-fold."""
+    frac: float = 0.2
+    boost: float = 10.0
+    name: str = "scaled"
+    family = "scaled"
+
+    def _theta(self):
+        return np.array([self.boost])
+
+
+@dataclass
+class StragglerStaleFault(FaultProcess):
+    """AR(1)-latency stragglers shipping their last on-time update.  The
+    latency chain is EXACTLY the PR-3 ``DeadlineProcess`` machinery
+    (``l' = rho l + (1 - rho) mu_k + sigma eps``, stationary init
+    ``N(mu_k, sigma^2 / (1 - rho^2))``) — but instead of dropping the
+    late client, the round keeps it and its update is stale."""
+    frac: float = 0.3
+    rho: float = 0.8
+    sigma: float = 0.2
+    deadline: float = 1.0
+    mu: Optional[np.ndarray] = None      # (N,) mean latencies; default U[.5, 1.5]
+    mu_seed: int = 0
+    name: str = "straggler_stale"
+    family = "straggler_stale"
+
+    def _theta(self):
+        return np.array([self.rho, self.sigma, self.deadline])
+
+    def _mu(self) -> np.ndarray:
+        if self.mu is not None:
+            return np.asarray(self.mu, np.float64)
+        rng = np.random.default_rng(self.mu_seed)
+        return rng.uniform(0.5, 1.5, self.n)
+
+    def _aux(self):
+        return self._mu()
+
+    @property
+    def stationary_sd(self) -> float:
+        return self.sigma / np.sqrt(max(1.0 - self.rho ** 2, 1e-12))
+
+    def init(self, key):
+        mu = jnp.asarray(self._mu(), jnp.float32)
+        lat = mu + self.stationary_sd * jax.random.normal(key, mu.shape)
+        return {"latency": lat}
+
+
+def make_fault_process(name: str, n_clients: int, *, frac: float = 0.2,
+                       byz_seed: int = 0, **kw) -> FaultProcess:
+    """Family names (= ``scan_engine.FAULTS``) -> processes.  ``frac`` is
+    the adversarial fraction (ignored by ``none``); extra kwargs reach the
+    family constructor (scale / sigma / boost / rho / deadline / ...)."""
+    name = name.lower()
+    if name == "none":
+        return NoFault(n_clients)
+    if name == "sign_flip":
+        return SignFlipFault(n_clients, frac=frac, byz_seed=byz_seed, **kw)
+    if name == "gaussian_noise":
+        return GaussianNoiseFault(n_clients, frac=frac, byz_seed=byz_seed,
+                                  **kw)
+    if name == "scaled":
+        return ScaledFault(n_clients, frac=frac, byz_seed=byz_seed, **kw)
+    if name in ("straggler_stale", "straggler"):
+        return StragglerStaleFault(n_clients, frac=frac, byz_seed=byz_seed,
+                                   **kw)
+    raise ValueError(f"unknown fault family {name!r}")
+
+
+# ---------------------------------------------------------------- host face
+class HostFaultInjector:
+    """Thin eager host face over the device switch step — the
+    ``ServerAggregator`` pattern: ``FLEngine`` / ``launch/train.py`` call
+    :meth:`inject` between local training and ``server.apply``, the state
+    (latency chain + stale panel) carries across rounds, and because it is
+    the SAME branch code on the SAME ``fold_in(PRNGKey(fault_seed), t)``
+    stream, a scan cell with matching seeds replays the host corruption
+    bit-exactly (precondition: every round samples the full M, as for
+    trainer-key parity — DESIGN.md §5)."""
+
+    def __init__(self, process: FaultProcess, *, fault_seed: int = 0):
+        self.process = process
+        self.n = int(process.n)
+        self._key = jax.random.PRNGKey(fault_seed)
+        self._steps: dict[int, object] = {}
+        self._ravel = None
+        self._unravel = None
+        self.state = None
+
+    def init(self, params0):
+        self._ravel, self._unravel, _ = _flat_template(params0)
+        rows = self.n if self.process.family == "straggler_stale" else 0
+        self.state = init_fault_state(self.process.init(self._key), params0,
+                                      rows)
+        return self.state
+
+    def _step(self, m: int):
+        if m not in self._steps:
+            step = make_fault_step(
+                self.n, m,
+                stale_enabled=self.process.family == "straggler_stale",
+                family=self.process.family)
+            self._steps[m] = jax.jit(step)
+        return self._steps[m]
+
+    def inject(self, stacked_updates, prev_params, sel, avail, t: int):
+        assert self.state is not None, "call init(params0) first"
+        sel = np.asarray(sel, int)
+        updf = jax.vmap(self._ravel)(stacked_updates)
+        updf, self.state = self._step(len(sel))(
+            self.process.params(), self.state,
+            jax.random.fold_in(self._key, t), updf,
+            self._ravel(prev_params), jnp.asarray(avail, bool),
+            jnp.int32(t), jnp.asarray(sel, jnp.int32),
+            jnp.ones(len(sel), bool))
+        return jax.vmap(self._unravel)(updf)

@@ -132,10 +132,14 @@ from repro.core.sampler_device import (
 from repro.core.fairness import count_variance_device, gini_device
 from repro.data.fed_dataset import FedDataset
 from repro.fed.aggregator_device import (
-    AggregatorProcess, init_agg_state, make_aggregator_process,
-    make_aggregator_step,
+    AggregatorProcess, _flat_template, init_agg_state,
+    make_aggregator_process, make_aggregator_step,
 )
 from repro.fed.aggregator_device import FAMILIES as AGG_FAMILIES
+from repro.fed.faults_device import (
+    FaultProcess, init_fault_state, make_fault_process, make_fault_step,
+)
+from repro.fed.faults_device import FAMILIES as FAULT_FAMILIES
 from repro.fed.client import make_local_trainer
 from repro.fed.models import FedModel
 from repro.launch.mesh import make_engine_mesh
@@ -145,7 +149,10 @@ from repro.sharding.rules import (
 
 SAMPLERS = FAMILIES            # ("fedgs", "uniform", "md", "poc")
 AGGREGATORS = AGG_FAMILIES     # ("fedavg", "fedavgm", "fedadam",
-                               #  "fedprox_w", "memory")
+                               #  "fedprox_w", "memory", "median",
+                               #  "trimmed_mean", "krum")
+FAULTS = FAULT_FAMILIES        # ("none", "sign_flip", "gaussian_noise",
+                               #  "scaled", "straggler_stale")
 SILO_REDUCES = ("gather", "psum")
 
 
@@ -173,8 +180,15 @@ class ScanConfig:
     graph_backend: str = "ref"     # ref | pallas (dynamic-3DG rebuild path)
     solver_backend: str = "ref"    # ref | pallas (FedGS Eq. 16 solve)
     aggregator: str = "fedavg"     # fedavg | fedavgm | fedadam | fedprox_w
-                                   # | memory (per-cell overridable)
-    agg_backend: str = "ref"       # ref | pallas (memory scatter+reduce)
+                                   # | memory | median | trimmed_mean | krum
+                                   # (per-cell overridable)
+    agg_backend: str = "ref"       # ref | pallas (memory scatter+reduce and
+                                   # krum distance panel)
+    # fault injection (fed/faults_device): engine-level default family +
+    # Byzantine fraction, per-cell overridable via cell(fault_process=...)
+    fault: str = "none"            # none | sign_flip | gaussian_noise |
+                                   # scaled | straggler_stale
+    fault_frac: float = 0.0        # adversarial client fraction (ceil(f*N))
     probe_size: int = 64
     probe_seed: int = 777
     # mesh scale-out (DESIGN.md §13): (cells,) or (cells, silo) device grid
@@ -206,6 +220,12 @@ class ScanConfig:
         if self.silo_reduce not in SILO_REDUCES:
             raise ValueError(f"silo_reduce must be one of {SILO_REDUCES}, "
                              f"not {self.silo_reduce!r}")
+        if self.fault not in FAULTS:
+            raise ValueError(f"scan engine supports faults {FAULTS}, "
+                             f"not {self.fault!r}")
+        if not 0.0 <= self.fault_frac <= 1.0:
+            raise ValueError(f"fault_frac must be in [0, 1], "
+                             f"not {self.fault_frac!r}")
         if self.program_cache_size < 1:
             raise ValueError(f"program_cache_size must be >= 1, "
                              f"not {self.program_cache_size!r}")
@@ -294,6 +314,7 @@ class ScanHistory:
 # ---------------------------------------------------------------- the program
 def _build_simulate(ds: FedDataset, model: FedModel, cfg: ScanConfig,
                     use_masks: bool, with_memory: bool = False, *,
+                    with_fault: bool = False, with_stale: bool = False,
                     silo: int = 1, panel_axis: Optional[str] = None):
     """Closure-captures the (cell-shared) dataset and returns the pure
     per-cell closures the engine jit/vmap/shard_maps:
@@ -317,6 +338,10 @@ def _build_simulate(ds: FedDataset, model: FedModel, cfg: ScanConfig,
     update-memory panel: the engine compiles the panel-carrying variant
     only when a memory-family cell is actually in play (the common
     fedavg sweep keeps the pre-subsystem carry: params + counts + H).
+    ``with_fault`` / ``with_stale`` gate the fault-injection seam the same
+    way: only a batch with an actual fault cell carries the fault state
+    (and only a straggler cell carries the (N, P) stale-update panel), so
+    the benign default program — and its checkpoints — are unchanged.
 
     ``silo > 1`` chunks the vmap'd local-training client axis over the
     shard_map "silo" mesh axis (each silo trains ceil(M/s) clients with the
@@ -392,6 +417,16 @@ def _build_simulate(ds: FedDataset, model: FedModel, cfg: ScanConfig,
         n, m, jax.eval_shape(model.init, jax.random.PRNGKey(0)),
         data_sizes=ds.sizes, backend=cfg.agg_backend,
         memory_enabled=with_memory, panel_axis=panel_axis)
+
+    # ... and the fault-injection seam (fed/faults_device) BETWEEN local
+    # training and aggregation: per-cell lax.switch over the fault family,
+    # operating on the flat (M, P) update panel.  The ravel->unravel
+    # round-trip is a bitwise identity, so benign cells inside a faulted
+    # batch match their no-fault program bitwise.
+    if with_fault:
+        fault_step = make_fault_step(n, m, stale_enabled=with_stale)
+        fravel, funravel, _ = _flat_template(
+            jax.eval_shape(model.init, jax.random.PRNGKey(0)))
     if panel_axis is not None and n % silo:
         raise ValueError(f"silo_reduce='psum' row-shards the (N, P) memory "
                          f"panel: N={n} must divide by silo={silo}")
@@ -420,11 +455,17 @@ def _build_simulate(ds: FedDataset, model: FedModel, cfg: ScanConfig,
             h0 = cell["h"]
         astate0 = init_agg_state(params0, n, memory_rows=mem_rows,
                                  tau_rows=n if with_memory else 0)
-        return {"agg": astate0,
-                "counts": jnp.zeros((n,), jnp.float32),
-                "h": h0, "emb": emb0,
-                "proc": cell.get("proc_state", {}),
-                "sampler": cell.get("sampler_state", {})}
+        carry0 = {"agg": astate0,
+                  "counts": jnp.zeros((n,), jnp.float32),
+                  "h": h0, "emb": emb0,
+                  "proc": cell.get("proc_state", {}),
+                  "sampler": cell.get("sampler_state", {})}
+        if with_fault:
+            # latency chain from the cell's eager init; the (rows, P)
+            # stale-update panel is sized here because P is model-dependent
+            carry0["fault"] = init_fault_state(
+                cell["fault_state"], params0, n if with_stale else 0)
+        return carry0
 
     def step(cell, carry, t):
         astate, counts = carry["agg"], carry["counts"]
@@ -476,6 +517,19 @@ def _build_simulate(ds: FedDataset, model: FedModel, cfg: ScanConfig,
             local = trainer(params, xs[sel], ys[sel], sizes_i[sel], lr,
                             keys_m)
 
+        # 3b. fault injection — the per-cell fault switch corrupts the
+        # byz slots of the flat (M, P) update panel BETWEEN training and
+        # aggregation (sign flips, noise, boosting, stale straggler
+        # replays); benign cells pass through the identity branch
+        if with_fault:
+            fstate = carry["fault"]
+            updf, fstate = fault_step(
+                cell["fault"], fstate,
+                jax.random.fold_in(cell["fault_key"], t),
+                jax.vmap(fravel)(local), fravel(params), avail, t, sel,
+                valid)
+            local = jax.vmap(funravel)(updf)
+
         # 4. server update — the aggregator switch step dispatches on
         # the cell's family (Eq. 18 weights: pads carry zero weight;
         # the fedavg branch is bit-identical to the legacy aggregate())
@@ -512,8 +566,11 @@ def _build_simulate(ds: FedDataset, model: FedModel, cfg: ScanConfig,
         gini = gini_device(counts)
         out = {"val_loss": vl, "val_acc": va, "count_var": cvar,
                "gini": gini, "sel": sel.astype(jnp.int32), "valid": valid}
-        return {"agg": astate, "counts": counts, "h": h, "emb": emb,
-                "proc": pstate, "sampler": sstate}, out
+        carry1 = {"agg": astate, "counts": counts, "h": h, "emb": emb,
+                  "proc": pstate, "sampler": sstate}
+        if with_fault:
+            carry1["fault"] = fstate
+        return carry1, out
 
     def segment(seg_len: int):
         def run_segment(cell, carry, t0):
@@ -541,12 +598,12 @@ class ScanEngine:
         self.ds, self.model, self.cfg = ds, model, cfg
         self.n = ds.n_clients
         self.use_masks = use_masks
-        self._sims: dict = {}         # (wm, silo, panel) -> closures
+        self._sims: dict = {}         # ((wm, wf, ws), silo, panel) -> closures
         # program key -> jit'd fn: bounded LRU with hit/miss/compile-ms
         # counters (DESIGN.md §15) — the old unbounded dict leaked one
         # program per (seg_len, variant) across heterogeneous sweeps
         self._programs = ProgramCache(maxsize=cfg.program_cache_size)
-        self._cspecs: dict = {}       # (wm, silo, panel) -> carry spec tree
+        self._cspecs: dict = {}       # (flags, silo, panel) -> carry specs
         self._mesh_obj = None
         if cfg.compile_cache_dir is not None:
             enable_compile_cache(cfg.compile_cache_dir)
@@ -565,11 +622,23 @@ class ScanEngine:
             self._mesh_obj = make_engine_mesh(self.cfg.mesh)
         return self._mesh_obj
 
-    def _wm(self, cells: list[dict]) -> bool:
-        """Does this batch need the (N, P) update-memory panel?"""
+    def _flags(self, cells: list[dict]) -> tuple:
+        """Static program-variant flags for this batch: ``(wm, wf, ws)`` —
+        does any cell need the (N, P) update-memory panel / the fault seam
+        / the straggler stale panel?  Each flag widens the carry (and the
+        traced step) only for batches that actually use the feature, so
+        the benign default program is unchanged."""
         midx = AGGREGATORS.index("memory")
-        return self.cfg.aggregator == "memory" or any(
+        wm = self.cfg.aggregator == "memory" or any(
             int(np.asarray(c["agg"]["family"])) == midx for c in cells)
+        nidx = FAULTS.index("none")
+        sidx = FAULTS.index("straggler_stale")
+        fams = [int(np.asarray(c["fault"]["family"]))
+                for c in cells if "fault" in c]
+        wf = self.cfg.fault != "none" or any(f != nidx for f in fams)
+        ws = self.cfg.fault == "straggler_stale" or any(
+            f == sidx for f in fams)
+        return wm, wf, ws
 
     def _variant(self, batched: bool):
         """(mesh, silo, panel_axis-factory) for this run shape."""
@@ -581,26 +650,29 @@ class ScanEngine:
                 silo > 1 and self.cfg.silo_reduce == "psum" and wm) else None
         return mesh, silo, panel
 
-    def _closures(self, wm: bool, silo: int, panel: Optional[str]):
-        key = (wm, silo, panel)
+    def _closures(self, flags: tuple, silo: int, panel: Optional[str]):
+        wm, wf, ws = flags
+        key = (flags, silo, panel)
         if key not in self._sims:
             self._sims[key] = _build_simulate(
                 self.ds, self.model, self.cfg, self.use_masks,
-                with_memory=wm, silo=silo, panel_axis=panel)
+                with_memory=wm, with_fault=wf, with_stale=ws, silo=silo,
+                panel_axis=panel)
         return self._sims[key]
 
     def _program(self, cells: list[dict], batched: bool):
         """The compiled full-run program variant for these cells: the (N, P)
-        update-memory panel rides the scan carry ONLY when a memory-family
-        cell (or the engine default) asks for it — the common fedavg sweep
-        keeps the lean carry.  With a mesh, the batched program is
-        shard_map'd over ("cells", "silo")."""
-        wm = self._wm(cells)
+        update-memory panel — and likewise the fault seam and its stale
+        panel — ride the scan carry ONLY when a cell (or the engine
+        default) asks for them — the common fedavg sweep keeps the lean
+        carry.  With a mesh, the batched program is shard_map'd over
+        ("cells", "silo")."""
+        flags = self._flags(cells)
         mesh, silo, panelf = self._variant(batched)
-        panel = panelf(wm)
+        panel = panelf(flags[0])
 
         def build():
-            fn = self._closures(wm, silo, panel)["simulate"]
+            fn = self._closures(flags, silo, panel)["simulate"]
             if batched:
                 fn = jax.vmap(fn)
             if mesh is not None:
@@ -608,13 +680,13 @@ class ScanEngine:
                 fn = shard_map(fn, mesh=mesh, in_specs=(spec,),
                                out_specs=spec, check_rep=False)
             return jax.jit(fn)
-        return self._programs.get((wm, batched, silo, panel), build)
+        return self._programs.get((flags, batched, silo, panel), build)
 
-    def _carry_specs(self, stacked: dict, wm: bool, silo: int,
+    def _carry_specs(self, stacked: dict, flags: tuple, silo: int,
                      panel: Optional[str], init_fn):
         """PartitionSpec tree for the carry (structure from an abstract
         eval — shapes themselves are not consulted beyond rank)."""
-        key = (wm, silo, panel)
+        key = (flags, silo, panel)
         if key not in self._cspecs:
             shapes = jax.eval_shape(init_fn, stacked)
             self._cspecs[key] = engine_carry_specs(
@@ -622,33 +694,33 @@ class ScanEngine:
                 panel_sharded=panel is not None)
         return self._cspecs[key]
 
-    def _init_program(self, stacked: dict, wm: bool):
+    def _init_program(self, stacked: dict, flags: tuple):
         mesh, silo, panelf = self._variant(True)
-        panel = panelf(wm)
+        panel = panelf(flags[0])
 
         # NOT donated: the stacked cells stay live across every subsequent
         # segment call (donating them here would invalidate the whole run —
         # the donation-safety audit of DESIGN.md §15 rejects it)
         def build():
-            fn = jax.vmap(self._closures(wm, silo, panel)["init"])
+            fn = jax.vmap(self._closures(flags, silo, panel)["init"])
             if mesh is not None:
-                cspecs = self._carry_specs(stacked, wm, silo, panel, fn)
+                cspecs = self._carry_specs(stacked, flags, silo, panel, fn)
                 spec = engine_batch_spec(self.cfg.cell_sharding)
                 fn = shard_map(fn, mesh=mesh, in_specs=(spec,),
                                out_specs=cspecs, check_rep=False)
             return jax.jit(fn)
-        return self._programs.get((wm, "init", silo, panel), build)
+        return self._programs.get((flags, "init", silo, panel), build)
 
-    def _segment_program(self, stacked: dict, wm: bool, seg_len: int):
+    def _segment_program(self, stacked: dict, flags: tuple, seg_len: int):
         mesh, silo, panelf = self._variant(True)
-        panel = panelf(wm)
+        panel = panelf(flags[0])
         donate = bool(self.cfg.donate_carry)
 
         def build():
-            cl = self._closures(wm, silo, panel)
+            cl = self._closures(flags, silo, panel)
             fn = jax.vmap(cl["segment"](seg_len), in_axes=(0, 0, None))
             if mesh is not None:
-                cspecs = self._carry_specs(stacked, wm, silo, panel,
+                cspecs = self._carry_specs(stacked, flags, silo, panel,
                                            jax.vmap(cl["init"]))
                 spec = engine_batch_spec(self.cfg.cell_sharding)
                 fn = shard_map(fn, mesh=mesh, in_specs=(spec, cspecs, P()),
@@ -659,8 +731,8 @@ class ScanEngine:
             # callers interact through CarryHandle, whose consume-once
             # semantics turn use-after-donation into a loud error
             return jax.jit(fn, donate_argnums=(1,) if donate else ())
-        return self._programs.get((wm, "seg", seg_len, silo, panel, donate),
-                                  build)
+        return self._programs.get((flags, "seg", seg_len, silo, panel,
+                                   donate), build)
 
     def _pad_cells(self, cells: list[dict]) -> list[dict]:
         """Pad an uneven batch to a multiple of the "cells" axis size by
@@ -679,7 +751,9 @@ class ScanEngine:
              h: Optional[np.ndarray] = None, avail_seed: int = 1234,
              sampler_seed: Optional[int] = None,
              sampler_process: Optional[SamplerProcess] = None,
-             aggregator_process: Optional[AggregatorProcess] = None) -> dict:
+             aggregator_process: Optional[AggregatorProcess] = None,
+             fault_process: Optional[FaultProcess] = None,
+             fault_seed: Optional[int] = None) -> dict:
         """One sweep cell = (seed, availability, sampler params) pytree.
 
         Mask path (``use_masks=True``): pass ``masks`` (rounds, N), e.g. from
@@ -707,6 +781,15 @@ class ScanEngine:
         the cell's own ``params0``, and its (N, P) update-memory panel is
         carried only by the program variant that actually has a
         memory-family cell (``_program``).
+
+        FAULT INJECTION is per-cell as well: ``fault_process`` (any
+        ``fed.faults_device.FaultProcess``; defaults to the engine-level
+        ``cfg.fault``/``cfg.fault_frac`` family — ``none`` by default)
+        compiles to a ``lax.switch`` index, so benign and adversarial
+        cells batch through one ``run_batch`` program; every cell carries
+        the (small) fault params + latency state for stacking uniformity,
+        but the scan carries fault state only in program variants with an
+        actual fault cell (``_flags``).
         """
         c: dict = {"key": jax.random.PRNGKey(seed)}
         if self.use_masks:
@@ -731,6 +814,13 @@ class ScanEngine:
             make_aggregator_process(self.cfg.aggregator)
         c["agg"] = aproc.params()
         c["agg_key"] = jax.random.PRNGKey(seed + 0xA66)
+        fproc = fault_process if fault_process is not None else \
+            make_fault_process(self.cfg.fault, self.n,
+                               frac=self.cfg.fault_frac)
+        c["fault"] = fproc.params()
+        c["fault_key"] = jax.random.PRNGKey(
+            seed + 0xFA17 if fault_seed is None else fault_seed)
+        c["fault_state"] = fproc.init(c["fault_key"])
         if self.cfg.graph_refresh_every > 0:
             c["init_key"] = jax.random.PRNGKey(seed + 778)
         elif isinstance(h, jax.ShapeDtypeStruct):
@@ -772,9 +862,9 @@ class ScanEngine:
         donation-safe handle (DESIGN.md §15): ``run_segment`` consumes the
         handle and returns a fresh one; touching a consumed handle raises."""
         cells_p = self._pad_cells(cells)
-        wm = self._wm(cells_p)
+        flags = self._flags(cells_p)
         stacked = stack_cells(cells_p)
-        return CarryHandle(self._init_program(stacked, wm)(stacked))
+        return CarryHandle(self._init_program(stacked, flags)(stacked))
 
     def run_segment(self, cells: list[dict], carry: CarryHandle,
                     t0: int, seg_len: int):
@@ -784,13 +874,13 @@ class ScanEngine:
         buffers are donated to the segment program and reused in place.
         Returns ``(new_handle, traj_device)``."""
         cells_p = self._pad_cells(cells)
-        wm = self._wm(cells_p)
-        return self._run_segment(stack_cells(cells_p), wm, carry, t0,
+        flags = self._flags(cells_p)
+        return self._run_segment(stack_cells(cells_p), flags, carry, t0,
                                  seg_len)
 
-    def _run_segment(self, stacked: dict, wm: bool, carry: CarryHandle,
+    def _run_segment(self, stacked: dict, flags: tuple, carry: CarryHandle,
                      t0: int, seg_len: int):
-        fn = self._segment_program(stacked, wm, seg_len)
+        fn = self._segment_program(stacked, flags, seg_len)
         new_carry, traj = fn(stacked, carry.consume(), jnp.int32(t0))
         return CarryHandle(new_carry), traj
 
@@ -820,7 +910,7 @@ class ScanEngine:
         cfg = self.cfg
         b = len(cells)
         cells_p = self._pad_cells(cells)
-        wm = self._wm(cells_p)
+        flags = self._flags(cells_p)
         stacked = stack_cells(cells_p)
         rounds = cfg.rounds
         every = int(ckpt_every) if ckpt_every else rounds
@@ -836,7 +926,7 @@ class ScanEngine:
                 parts.append(state["traj"])
                 yield 0, t0, state["traj"]
         if carry is None:
-            carry = self._init_program(stacked, wm)(stacked)
+            carry = self._init_program(stacked, flags)(stacked)
         handle = CarryHandle(carry)
         writer = AsyncCheckpointWriter() \
             if (ckpt_path is not None and cfg.async_pipeline) else None
@@ -848,7 +938,7 @@ class ScanEngine:
         try:
             while t0 < rounds:
                 k = min(every, rounds - t0)
-                handle, traj_dev = self._run_segment(stacked, wm, handle,
+                handle, traj_dev = self._run_segment(stacked, flags, handle,
                                                      t0, k)
                 t1 = t0 + k
                 need_ckpt = ckpt_path is not None and t1 < rounds
@@ -971,8 +1061,9 @@ class ScanEngine:
         dry-run to pin the carry footprint (a silo-sharded memory panel
         must show its (N/silo, P) rows here)."""
         cells_p = self._pad_cells(cells)
-        wm = self._wm(cells_p)
+        flags = self._flags(cells_p)
         _, silo, panelf = self._variant(True)
         stacked = jax.eval_shape(stack_cells, cells_p)
         return jax.eval_shape(
-            jax.vmap(self._closures(wm, silo, panelf(wm))["init"]), stacked)
+            jax.vmap(self._closures(flags, silo, panelf(flags[0]))["init"]),
+            stacked)

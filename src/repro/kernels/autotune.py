@@ -179,6 +179,16 @@ def _agg_run(tiles, mem, upd, sel, valid, w):
                                 tile_p=tiles["tile_p"])
 
 
+def _krum_setup(m, p):
+    rng = np.random.default_rng(_RNG_SEED)
+    return (jnp.asarray(rng.standard_normal((m, p)).astype(np.float32)),)
+
+
+def _krum_run(tiles, x):
+    from repro.kernels import ops
+    return ops.krum_distances(x, tile=tiles["tile"], tile_k=tiles["tile_k"])
+
+
 KERNELS = {
     "floyd_warshall": dict(
         candidates=lambda n: [{"tile": t} for t in (128, 256, 512)
@@ -204,6 +214,12 @@ KERNELS = {
             for tn in (128, 512) if tn <= max(128, _p2(n))
             for tp in (256, 1024, 2048) if tp <= max(256, _p2(p))],
         setup=_agg_setup, run=_agg_run),
+    "krum_pairwise": dict(
+        candidates=lambda m, p: [
+            {"tile": tm, "tile_k": tk}
+            for tm in (128, 256) if tm <= max(128, _p2(m))
+            for tk in (128, 512, 2048) if tk <= max(128, _p2(p))],
+        setup=_krum_setup, run=_krum_run),
 }
 
 
@@ -223,6 +239,9 @@ def default_specs(max_n: int = 1024):
     for n, p in ((256, 1024), (1024, 2048), (4096, 4096)):
         if n * p <= max_n * 4096:
             specs.append(("memory_aggregate", {"n": n, "p": p}))
+    for m, p in ((128, 1024), (256, 4096)):
+        if m * p <= max_n * 4096:
+            specs.append(("krum_pairwise", {"m": m, "p": p}))
     return specs
 
 

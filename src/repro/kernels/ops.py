@@ -26,6 +26,7 @@ from repro.kernels.aggregate import AGG_TM, AGG_TN, AGG_TP, memagg_pallas
 from repro.kernels.autotune import resolve
 from repro.kernels.floyd_warshall import floyd_warshall_pallas, TILE
 from repro.kernels.graph_fused import fused_adjacency_pallas, FUSED_TILE
+from repro.kernels.krum import krum_pallas, KRUM_TM, KRUM_TK
 from repro.kernels.pairwise_similarity import (
     similarity_pallas, adjacency_pallas, TILE_N, TILE_K,
 )
@@ -274,6 +275,29 @@ def swap_best_fused(h: jax.Array, z: jax.Array, scale: jax.Array,
                                        interpret=interpret)
     npad = hsp.shape[1]
     return val[0, 0], flat[0, 0] // npad, flat[0, 0] % npad
+
+
+# -------------------------------------------------- Krum pairwise distances
+def krum_distances(x: jax.Array, *, tile: int | str = "auto",
+                   tile_k: int | str = "auto",
+                   interpret: bool | None = None) -> jax.Array:
+    """Pairwise squared-distance panel D[i, j] = ||x_i − x_j||² over the
+    (m, P) flattened update matrix — the Krum score's hot inner loop
+    (``kernels/krum.py``).  Zero-pads m and P to tile multiples (zero P
+    columns contribute 0 to every distance; pad-row entries are sliced
+    off), so callers see clean (m, m).  The expansion can go slightly
+    negative / asymmetric at f32 roundoff for near-identical rows — the
+    aggregator's shared post-process clamps at 0, both backends alike."""
+    if interpret is None:
+        interpret = _on_cpu()
+    m, p = x.shape
+    t = _tiles("krum_pairwise", {"tile": KRUM_TM, "tile_k": KRUM_TK},
+               {"tile": tile, "tile_k": tile_k}, m=m, p=p)
+    xp = _pad_to(x.astype(jnp.float32), t["tile"], (0,))
+    xp = _pad_to(xp, t["tile_k"], (1,))
+    d = krum_pallas(xp, tile_m=t["tile"], tile_k=t["tile_k"],
+                    interpret=interpret)
+    return d[:m, :m]
 
 
 # ------------------------------------------------- memory-rectified reduce

@@ -36,6 +36,8 @@ from repro.core.fairness import count_variance
 from repro.data.lm_stream import token_batches
 from repro.fed.aggregator_device import FAMILIES as AGGREGATORS
 from repro.fed.aggregator_device import make_aggregator_process
+from repro.fed.faults_device import FAMILIES as FAULTS
+from repro.fed.faults_device import HostFaultInjector, make_fault_process
 from repro.fed.server import ServerAggregator
 from repro.models import lm
 from repro.optim.optimizers import adamw
@@ -79,6 +81,14 @@ def main(argv=None):
     ap.add_argument("--agg-backend", default="ref", choices=("ref", "pallas"),
                     help="memory-family scatter+reduce: pure-jnp ref or "
                          "the fused Pallas panel kernel")
+    ap.add_argument("--fault", default="none", choices=FAULTS,
+                    help="Byzantine/straggler fault family injected between "
+                         "local training and aggregation "
+                         "(fed/faults_device.py); pair with a robust "
+                         "--aggregator (median/trimmed_mean/krum)")
+    ap.add_argument("--byzantine-frac", type=float, default=0.0,
+                    help="fraction of clients made adversarial (ceil(frac*N) "
+                         "by a seeded permutation; identity fixed per seed)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default=None,
                     help="checkpoint path: saves params+counts every 10 "
@@ -166,6 +176,12 @@ def main(argv=None):
             start = int(state["round"]) + 1
             print(f"resumed from {p} at round {start}")
     server.init(params)
+    faults = None
+    if args.fault != "none":
+        faults = HostFaultInjector(
+            make_fault_process(args.fault, n, frac=args.byzantine_frac),
+            fault_seed=args.seed + 0xFA17)
+        faults.init(params)
     t0 = time.time()
     for t in range(start, args.rounds):
         avail = mode.sample(t, avail_rng)
@@ -184,6 +200,8 @@ def main(argv=None):
             locals_.append(pk)
             losses.append(float(lk))
         stacked = jax.tree_util.tree_map(lambda *x: jnp.stack(x), *locals_)
+        if faults is not None:
+            stacked = faults.inject(stacked, params, sel, avail, t)
         params = server.apply(stacked, sizes[sel].astype(np.float32),
                               sel, avail, t)
         counts[sel] += 1

@@ -234,3 +234,75 @@ def test_flengine_checkpoint_carries_server_state(ds16, tmp_path):
     assert np.all(np.isfinite(h_old.val_loss))
     # momentum restarted from zero: the old format's tail drifts
     assert h_old.val_loss != h_full.val_loss[split:]
+
+
+# ------------------------------------------------- fault-injection carry
+def test_scan_resume_bitwise_fault_krum(ds16, tmp_path):
+    """The PR-9 combo: krum x sign_flip x GE (plus a straggler x
+    trimmed-mean cell so the (N, P) stale panel rides the carry too) —
+    fused == segmented == fresh-engine-resumed, decisions bitwise and the
+    FaultProcess state (AR(1) latency chain, stale panel) round-tripping
+    through the npz exactly like the aggregator slots."""
+    from repro.fed.faults_device import make_fault_process
+    ds = ds16
+    rounds = 6
+    cells_of = lambda eng: [                 # noqa: E731
+        eng.cell(seed=0, process=_proc("GE", ds, rounds, seed=3),
+                 avail_seed=70,
+                 fault_process=make_fault_process("sign_flip",
+                                                  ds.n_clients, frac=0.25),
+                 aggregator_process=make_aggregator_process(
+                     "krum", krum_f=1)),
+        eng.cell(seed=1, process=_proc("GE", ds, rounds, seed=4),
+                 avail_seed=71,
+                 fault_process=make_fault_process("straggler_stale",
+                                                  ds.n_clients, frac=0.5),
+                 aggregator_process=make_aggregator_process(
+                     "trimmed_mean", beta_trim=0.25)),
+    ]
+    eng = ScanEngine(ds, logistic_regression(), _scan_cfg(rounds))
+    fused = eng.run_batch(cells_of(eng))
+    ck = str(tmp_path / "ck")
+    seg = eng.run_batch(cells_of(eng), ckpt_path=ck, ckpt_every=3)
+    eng2 = ScanEngine(ds, logistic_regression(), _scan_cfg(rounds))
+    res = eng2.run_batch(cells_of(eng2), ckpt_path=ck, resume=True,
+                         ckpt_every=3)
+    for i in range(2):
+        _assert_hist_bitwise(seg[i], res[i], f"fault res {i}")
+        for f in ("sel", "valid", "counts"):
+            np.testing.assert_array_equal(
+                getattr(fused[i], f), getattr(seg[i], f),
+                err_msg=f"fault fused {i}: {f}")
+        np.testing.assert_allclose(seg[i].val_loss, fused[i].val_loss,
+                                   atol=2e-6)
+
+
+def test_flengine_fault_resume_bitwise(ds16, tmp_path):
+    """FLEngine checkpoints now carry the ``faults`` subtree: a
+    straggler-stale run saved at round 4 resumes bitwise (stale panel +
+    latency chain restored), and the npz actually contains the keys."""
+    h_full = _fl_build_fault(ds16, 8).run()
+    ck = str(tmp_path / "ck")
+    head = _fl_build_fault(ds16, 8)
+    head.cfg.rounds = 4
+    head.run(ckpt_path=ck, ckpt_every=4)
+    with np.load(ck + ".npz") as z:
+        assert any(k.startswith("faults/") for k in z.files)
+    res = _fl_build_fault(ds16, 8)
+    h_res = res.run(ckpt_path=ck, resume=True)
+    assert h_res.rounds == list(range(4, 8))
+    assert h_full.val_loss[4:] == h_res.val_loss
+    assert h_full.sampled[4:] == h_res.sampled
+
+
+def _fl_build_fault(ds, rounds):
+    from repro.fed.faults_device import make_fault_process
+    proc = _proc("GE", ds, rounds)
+    cfg = FLConfig(rounds=rounds, sample_frac=0.25, local_steps=2,
+                   batch_size=8, eval_every=1, seed=0, avail_seed=1234)
+    return FLEngine(ds, logistic_regression(), make_sampler("uniform"),
+                    ProcessMode(proc, avail_seed=1234), cfg,
+                    fault=make_fault_process("straggler_stale",
+                                             ds.n_clients, frac=0.5),
+                    aggregator=make_aggregator_process("trimmed_mean",
+                                                       beta_trim=0.25))

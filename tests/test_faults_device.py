@@ -1,0 +1,286 @@
+"""The fault-injection subsystem (fed/faults_device.py):
+
+* oracle parity — every corruption family pinned against a plain-numpy
+  oracle on the flat (M, P) panel (byz-and-valid masking, sign-flip /
+  boost algebra, the AR(1) latency chain + stale-panel refresh protocol);
+* the switch — jitted ``lax.switch`` dispatch is bitwise equal to the
+  jitted single-family branch for every family (the engines always jit,
+  so this IS the engine-level contract);
+* identity guarantees — the ``none`` family and ``stale_enabled=False``
+  straggler aliasing are exact identities; benign cells carry NO fault
+  state (the program-variant gating);
+* engine integration — FLEngine's ``HostFaultInjector`` path replays the
+  matching ScanEngine cell (shared masks, sampler, fault stream), and a
+  MIXED fault-family ``run_batch`` equals the per-cell runs bitwise.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.availability import make_mode
+from repro.fed.aggregator_device import make_aggregator_process
+from repro.fed.faults_device import (
+    FAMILIES, GaussianNoiseFault, NoFault, ScaledFault, SignFlipFault,
+    StragglerStaleFault, init_fault_state, make_fault_process,
+    make_fault_step,
+)
+from repro.fed.models import logistic_regression
+from repro.fed.scan_engine import ScanConfig, ScanEngine
+
+N, M, P = 12, 5, 32
+
+
+def _fixture(rng, proc, *, p=P):
+    """Params/state/panel inputs for one corrupt() application."""
+    key = jax.random.PRNGKey(3)
+    fp = proc.params()
+    state = proc.init(key)
+    if proc.family == "straggler_stale":
+        rows = jnp.asarray(rng.normal(size=(N, p)).astype(np.float32))
+        state = {**state, "stale": rows}
+    else:
+        state = {**state, "stale": jnp.zeros((0, p), jnp.float32)}
+    updf = jnp.asarray(rng.normal(size=(M, p)).astype(np.float32))
+    prevf = jnp.asarray(rng.normal(size=(p,)).astype(np.float32))
+    sel = jnp.asarray(rng.choice(N, size=M, replace=False), jnp.int32)
+    valid = jnp.asarray(rng.random(M) < 0.8)
+    avail = jnp.ones(N, bool)
+    return fp, state, key, updf, prevf, avail, sel, valid
+
+
+def _run(proc, fix, t=4, family=None):
+    fp, state, key, updf, prevf, avail, sel, valid = fix
+    step = make_fault_step(N, M,
+                           stale_enabled=proc.family == "straggler_stale",
+                           family=family)
+    step = jax.jit(step)
+    out, state2 = step(fp, state, jax.random.fold_in(key, t), updf, prevf,
+                       avail, t, sel, valid)
+    return np.asarray(out), state2
+
+
+# ------------------------------------------------------------ the byz mask
+def test_byz_mask_deterministic():
+    p = SignFlipFault(N, frac=0.3, byz_seed=5)
+    m1, m2 = p.byz_mask(), SignFlipFault(N, frac=0.3, byz_seed=5).byz_mask()
+    assert np.array_equal(m1, m2)
+    assert m1.sum() == int(np.ceil(0.3 * N))
+    assert not np.array_equal(m1, SignFlipFault(N, frac=0.3,
+                                                byz_seed=6).byz_mask())
+    assert NoFault(N).byz_mask().sum() == 0
+    assert SignFlipFault(N, frac=0.0).byz_mask().sum() == 0
+
+
+# ------------------------------------------------------- per-family oracles
+def test_none_is_bitwise_identity(rng):
+    proc = NoFault(N)
+    fix = _fixture(rng, proc)
+    out, state2 = _run(proc, fix)
+    np.testing.assert_array_equal(out, np.asarray(fix[3]))
+    np.testing.assert_array_equal(np.asarray(state2["latency"]),
+                                  np.asarray(fix[1]["latency"]))
+
+
+@pytest.mark.parametrize("family,knob", [("sign_flip", 3.0), ("scaled", 7.0)])
+def test_flip_boost_numpy_oracle(rng, family, knob):
+    """sign_flip / scaled are elementwise f32 algebra on the byz-and-valid
+    slots: ``prev -/+ knob (theta_k - prev)``.  XLA fuses the
+    multiply-subtract into an FMA, so corrupted slots sit within 1 ulp of
+    the separate-op numpy oracle; honest slots are untouched BITWISE."""
+    proc = SignFlipFault(N, frac=0.4, scale=knob) if family == "sign_flip" \
+        else ScaledFault(N, frac=0.4, boost=knob)
+    fix = _fixture(rng, proc)
+    fp, _, _, updf, prevf, _, sel, valid = fix
+    out, _ = _run(proc, fix)
+
+    u, pv = np.asarray(updf), np.asarray(prevf)
+    byzm = proc.byz_mask()[np.asarray(sel)] & np.asarray(valid)
+    sgn = np.float32(-knob if family == "sign_flip" else knob)
+    oracle = np.where(byzm[:, None], pv[None, :] + sgn * (u - pv[None, :]),
+                      u).astype(np.float32)
+    np.testing.assert_allclose(out, oracle, rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(out[~byzm], u[~byzm])
+    assert byzm.any() and not byzm.all()        # both paths exercised
+
+
+def test_gaussian_oracle_masks_and_stream(rng):
+    """Noise lands ONLY on byz-and-valid slots; the draw is a function of
+    the round key alone (shape (M, P)), so the oracle replays it with the
+    same jax draw and pins the masking numpy-side."""
+    proc = GaussianNoiseFault(N, frac=0.4, sigma=0.7)
+    fix = _fixture(rng, proc)
+    fp, _, key, updf, prevf, _, sel, valid = fix
+    t = 4
+    out, _ = _run(proc, fix, t=t)
+    noise = np.asarray(jax.random.normal(jax.random.fold_in(key, t),
+                                         updf.shape))
+    byzm = proc.byz_mask()[np.asarray(sel)] & np.asarray(valid)
+    oracle = np.where(byzm[:, None],
+                      np.asarray(updf) + np.float32(0.7) * noise,
+                      np.asarray(updf)).astype(np.float32)
+    np.testing.assert_allclose(out, oracle, atol=1e-6)
+    np.testing.assert_array_equal(out[~byzm], np.asarray(updf)[~byzm])
+
+
+def test_straggler_numpy_oracle_multiround(rng):
+    """5 rounds of the AR(1) chain + stale panel against a numpy replay:
+    late byz slots ship their pre-refresh panel row; on-time valid slots
+    refresh their row; latency follows ``l' = rho l + (1-rho) mu + s eps``
+    with the eps drawn from ``fold_in(fold_in(key, t), 2)``."""
+    proc = StragglerStaleFault(N, frac=0.5, rho=0.7, sigma=0.3,
+                               deadline=1.0)
+    key = jax.random.PRNGKey(3)
+    state = init_fault_state(proc.init(key),
+                             {"w": jnp.zeros((P,), jnp.float32)}, N)
+    # flat template of a (P,)-param model: panel rows are flat zeros
+    fp = proc.params()
+    step = jax.jit(make_fault_step(N, M, stale_enabled=True))
+
+    lat = np.array(state["latency"], np.float32)
+    stale = np.array(state["stale"], np.float32)
+    mu, byz = np.asarray(fp["aux"], np.float32), proc.byz_mask()
+    avail = jnp.ones(N, bool)
+    for t in range(5):
+        updf = jnp.asarray(rng.normal(size=(M, P)).astype(np.float32))
+        prevf = jnp.asarray(rng.normal(size=(P,)).astype(np.float32))
+        sel = rng.choice(N, size=M, replace=False)
+        valid = rng.random(M) < 0.8
+        fkey = jax.random.fold_in(key, t)
+        out, state = step(fp, state, fkey, updf, prevf, avail, t,
+                          jnp.asarray(sel, jnp.int32), jnp.asarray(valid))
+        eps = np.asarray(jax.random.normal(jax.random.fold_in(fkey, 2),
+                                           (N,)))
+        lat = (np.float32(0.7) * lat + np.float32(1.0 - 0.7) * mu
+               + np.float32(0.3) * eps).astype(np.float32)
+        byzm = byz[sel] & valid
+        late = byzm & (lat[sel] > 1.0)
+        oracle = np.where(late[:, None], stale[sel], np.asarray(updf))
+        refresh = valid & ~late
+        stale[sel[refresh]] = np.asarray(updf)[refresh]
+        np.testing.assert_allclose(np.asarray(out), oracle, atol=1e-6,
+                                   err_msg=f"round {t}")
+        np.testing.assert_allclose(np.asarray(state["latency"]), lat,
+                                   atol=1e-5, err_msg=f"round {t} latency")
+        np.testing.assert_allclose(np.asarray(state["stale"]), stale,
+                                   atol=1e-6, err_msg=f"round {t} stale")
+
+
+# ---------------------------------------------------------------- the switch
+@pytest.mark.parametrize("family", FAMILIES)
+def test_switch_equals_single_family_branch_jitted(rng, family):
+    """Jitted lax.switch dispatch == jitted direct branch, bitwise — the
+    engines always jit, so this is the engine-level parity contract (eager
+    dispatch may differ by 1 ulp through FMA fusion; see DESIGN.md §16)."""
+    proc = make_fault_process(family, N, frac=0.4)
+    fix = _fixture(rng, proc)
+    out_sw, st_sw = _run(proc, fix, family=None)
+    out_br, st_br = _run(proc, fix, family=family)
+    np.testing.assert_array_equal(out_sw, out_br)
+    for a, b in zip(jax.tree_util.tree_leaves(st_sw),
+                    jax.tree_util.tree_leaves(st_br)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_stale_disabled_aliases_straggler_to_none(rng):
+    proc = StragglerStaleFault(N, frac=0.5, deadline=-10.0)   # always late
+    fix = _fixture(rng, proc)
+    fp, state, key, updf, prevf, avail, sel, valid = fix
+    state0 = {**state, "stale": jnp.zeros((0, P), jnp.float32)}
+    step = jax.jit(make_fault_step(N, M, stale_enabled=False))
+    out, _ = step(fp, state0, key, updf, prevf, avail, 0, sel, valid)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(updf))
+    with pytest.raises(ValueError):
+        make_fault_step(N, M, stale_enabled=False, family="straggler_stale")
+
+
+# ------------------------------------------------------- engine integration
+@pytest.fixture(scope="module")
+def ds12():
+    from repro.data.synthetic import make_synthetic
+    return make_synthetic(n_clients=12, alpha=0.5, beta=0.5, seed=0)
+
+
+def _mode(ds, seed=7):
+    return make_mode("IDL", n_clients=ds.n_clients, data_sizes=ds.sizes,
+                     label_sets=ds.label_sets(), num_labels=ds.num_classes,
+                     seed=seed)
+
+
+def test_benign_cells_carry_no_fault_state(ds12):
+    """Program-variant gating: an all-benign batch compiles WITHOUT the
+    fault slot in the carry (default programs and checkpoints are bitwise
+    those of the pre-fault repo), and a faulted batch adds it."""
+    eng = ScanEngine(ds12, logistic_regression(),
+                     ScanConfig(rounds=3, m=3, local_steps=2, batch_size=8,
+                                sampler="uniform"))
+    benign = [eng.cell(seed=0, mode=_mode(ds12))]
+    faulted = [eng.cell(seed=0, mode=_mode(ds12),
+                        fault_process=SignFlipFault(ds12.n_clients,
+                                                    frac=0.25))]
+    assert "fault" not in eng.carry_shapes(benign)
+    assert "fault" in eng.carry_shapes(faulted)
+
+
+def test_mixed_fault_batch_equals_per_cell(ds12):
+    """One mixed-family run_batch (benign + every corruption family +
+    straggler) == the per-cell runs, bitwise — and the benign cell is
+    unperturbed by sharing a program with adversarial ones."""
+    ds = ds12
+    eng = ScanEngine(ds, logistic_regression(),
+                     ScanConfig(rounds=5, m=3, local_steps=2, batch_size=8,
+                                sampler="uniform"))
+    cells = [eng.cell(seed=0, mode=_mode(ds))] + [
+        eng.cell(seed=0, mode=_mode(ds),
+                 fault_process=make_fault_process(f, ds.n_clients, frac=0.3))
+        for f in FAMILIES[1:]]
+    batch = eng.run_batch(cells)
+    benign_solo = eng.run(eng.cell(seed=0, mode=_mode(ds)))
+    np.testing.assert_array_equal(batch[0].val_loss, benign_solo.val_loss)
+    np.testing.assert_array_equal(batch[0].sel, benign_solo.sel)
+    for i, c in enumerate(cells):
+        solo = eng.run(c)
+        np.testing.assert_array_equal(batch[i].val_loss, solo.val_loss,
+                                      err_msg=f"cell {i}")
+        np.testing.assert_array_equal(batch[i].sel, solo.sel,
+                                      err_msg=f"cell {i}")
+
+
+@pytest.mark.parametrize("fault,agg", [("sign_flip", "krum"),
+                                       ("scaled", "trimmed_mean")])
+def test_flengine_matches_scan_cell_under_faults(ds12, fault, agg):
+    """FLEngine + HostFaultInjector == the matching ScanEngine cell: same
+    masks, the deterministic FedGS sampler, the same fault stream ->
+    identical sampled sets and val-loss to f32 round-off (the
+    test_scan_engine parity harness, now through the corruption seam)."""
+    from repro.core.sampler import FedGSSampler
+    from repro.fed.engine import FLConfig, FLEngine
+    from repro.fed.scan_engine import precompute_masks
+
+    ds, rounds = ds12, 6
+    mode = _mode(ds)
+    cfg = FLConfig(rounds=rounds, sample_frac=0.25, local_steps=2,
+                   batch_size=8, lr=0.1, eval_every=1, seed=3)
+    fproc = make_fault_process(fault, ds.n_clients, frac=0.3)
+    eng = FLEngine(ds, logistic_regression(),
+                   FedGSSampler(alpha=1.0, max_sweeps=16), mode,
+                   cfg, fault=fproc,
+                   aggregator=make_aggregator_process(agg))
+    eng.install_oracle_graph(ds.opt_params)
+    hist = eng.run()
+
+    masks = precompute_masks(mode, rounds, cfg.avail_seed)
+    assert masks.sum(1).min() >= eng.m
+    seng = ScanEngine(ds, logistic_regression(),
+                      ScanConfig(rounds=rounds, m=eng.m, local_steps=2,
+                                 batch_size=8, lr=0.1, eval_every=1,
+                                 sampler="fedgs", max_sweeps=16),
+                      use_masks=True)
+    sh = seng.run(seng.cell(seed=3, masks=masks, alpha=1.0,
+                            h=eng.sampler._h, fault_process=fproc,
+                            fault_seed=cfg.seed + 0xFA17,
+                            aggregator_process=make_aggregator_process(agg)))
+    for i, t in enumerate(hist.rounds):
+        assert hist.sampled[i] == sh.sampled(t).tolist(), f"round {t}"
+    np.testing.assert_allclose(hist.val_loss, sh.val_loss, atol=2e-5)

@@ -204,3 +204,68 @@ def test_checkpoint_roundtrip_exact(tree):
         x, y = np.asarray(x), np.asarray(y)
         assert x.dtype == y.dtype and x.shape == y.shape
         np.testing.assert_array_equal(x, y)
+
+
+# ------------------------------------------------- Byzantine breakdown point
+@st.composite
+def corrupted_panel(draw):
+    """(honest (h, p), corrupted (f, p), f) with f < (h + f) / 2: a
+    minority of rows carrying ARBITRARY corruptions — huge finite values
+    ([1e3, 1e6], either sign) or +/-inf."""
+    h = draw(st.integers(3, 8))
+    f = draw(st.integers(1, min(h - 1, 3)))          # f < m/2 guaranteed
+    p = draw(st.integers(1, 6))
+    seed = draw(st.integers(0, 2 ** 31 - 1))
+    rng = np.random.default_rng(seed)
+    honest = rng.normal(size=(h, p)).astype(np.float32)
+    kind = draw(st.sampled_from(["inf", "big", "mixed"]))
+    mag = rng.uniform(1e3, 1e6, size=(f, p)).astype(np.float32)
+    sgn = np.where(rng.random((f, p)) < 0.5, -1, 1).astype(np.float32)
+    bad = sgn * mag
+    if kind == "inf":
+        bad = sgn * np.float32(np.inf)
+    elif kind == "mixed":
+        bad = np.where(rng.random((f, p)) < 0.3, sgn * np.float32(np.inf),
+                       bad)
+    return honest, bad, f, seed
+
+
+@settings(max_examples=30, deadline=None)
+@given(corrupted_panel())
+def test_robust_aggregators_respect_breakdown_point(panel):
+    """With f < m/2 arbitrarily corrupted rows (+/-inf included), the
+    median / trimmed-mean / Krum outputs stay inside the honest rows'
+    per-coordinate convex hull (+eps) — the Byzantine breakdown-point
+    property.  Plain fedavg demonstrably FAILS the same property: one
+    unbounded row drags the weighted mean out of the hull."""
+    import jax.numpy as jnp
+    from repro.fed.aggregator_device import (
+        coordinate_median, fedavg_combine, krum_combine,
+        trimmed_mean_combine,
+    )
+    honest, bad, f, seed = panel
+    rng = np.random.default_rng(seed + 1)
+    x = np.concatenate([honest, bad], axis=0)
+    perm = rng.permutation(x.shape[0])        # corruption order-independent
+    x = x[perm]
+    m = x.shape[0]
+    xj, valid = jnp.asarray(x), jnp.ones(m, bool)
+    lo = honest.min(0) - 1e-4
+    hi = honest.max(0) + 1e-4
+    med, _ = coordinate_median(xj, valid)
+    # trim exactly enough for the one-sided worst case: k >= f needs
+    # beta*m >= f, and beta < 0.5 keeps a non-empty window
+    beta = min((f + 0.5) / m, 0.49)
+    tm, _ = trimmed_mean_combine(xj, valid, jnp.float32(beta))
+    km, chosen, _ = krum_combine(xj, valid, f, max(1, m - 2 * f - 2))
+    for name, got in (("median", med), ("trimmed_mean", tm), ("krum", km)):
+        got = np.asarray(got)
+        assert np.isfinite(got).all(), name
+        assert (got >= lo).all() and (got <= hi).all(), \
+            f"{name} left the honest hull"
+    # Krum never averages a corrupted row in
+    bad_rows = np.flatnonzero(perm >= honest.shape[0])
+    assert not np.asarray(chosen)[bad_rows].any()
+    # fedavg fails: the unbounded rows drag the mean out of the hull
+    fa = np.asarray(fedavg_combine(xj, jnp.ones(m, jnp.float32)))
+    assert not ((fa >= lo).all() and (fa <= hi).all())

@@ -1,0 +1,266 @@
+"""The robust aggregator families (fed/aggregator_device.py: median /
+trimmed_mean / krum):
+
+* numpy oracles — every combine rule pinned against a plain-numpy
+  implementation, including exact ties, f = 0, all-adversarial and
+  NaN-poisoned panels (the PR-5 NaN-containment story holds: a minority of
+  poisoned rows can NEVER leak NaN/inf into the combined params);
+* Krum per Blanchard et al. (NeurIPS 2017) — the selected index sets are
+  bit-identical to a float64 numpy oracle, tie-break by row index (stable
+  argsort), and ref|pallas backends select identically;
+* switch integration — the robust branches through ``make_aggregator_step``
+  match the direct combine + zero-weight guard, and a MIXED robust-family
+  ``run_batch`` equals the per-cell runs bitwise.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.availability import make_mode
+from repro.fed.aggregator_device import (
+    KrumProcess, MedianProcess, TrimmedMeanProcess, coordinate_median,
+    init_agg_state, krum_combine, krum_pairwise_ref, krum_select,
+    make_aggregator_process, make_aggregator_step, trimmed_mean_combine,
+)
+from repro.fed.models import logistic_regression
+from repro.fed.scan_engine import ScanConfig, ScanEngine
+
+M, P = 7, 24
+
+
+def _panel(rng, m=M, p=P):
+    return jnp.asarray(rng.normal(size=(m, p)).astype(np.float32))
+
+
+# -------------------------------------------------------------- numpy oracles
+def _median_oracle(x, valid):
+    x = np.where(np.isnan(x), np.inf, np.asarray(x, np.float32))
+    x = np.where(np.asarray(valid)[:, None], x, np.inf)
+    v = int(np.sum(valid))
+    return np.sort(x, axis=0)[max((v - 1) // 2, 0)], v
+
+
+def _trimmed_oracle(x, valid, beta):
+    x = np.where(np.isnan(x), np.inf, np.asarray(x, np.float32))
+    x = np.where(np.asarray(valid)[:, None], x, np.inf)
+    v = int(np.sum(valid))
+    # f32 product, matching the XLA op order (DESIGN.md assumption log #21)
+    k = max(min(int(np.floor(np.float32(beta) * np.float32(v))),
+                (v - 1) // 2), 0)
+    srt = np.sort(x, axis=0)
+    keep = (np.arange(x.shape[0])[:, None] >= k) \
+        & (np.arange(x.shape[0])[:, None] < v - k)
+    return (np.sum(np.where(keep, srt, np.float32(0)), axis=0,
+                   dtype=np.float32)
+            / np.float32(max(v - 2 * k, 1))), v
+
+
+def _krum_oracle(x, valid, f, multi):
+    """Blanchard et al. in float64: exact ||xi - xj||^2, nn smallest
+    distances summed, k lowest scores win, ties by row index (stable)."""
+    x = np.asarray(x, np.float64)
+    m = x.shape[0]
+    valid = np.asarray(valid)
+    d = np.sum((x[:, None, :] - x[None, :, :]) ** 2, axis=-1)
+    d[np.isnan(d)] = np.inf
+    pair_ok = valid[:, None] & valid[None, :] & ~np.eye(m, dtype=bool)
+    d[~pair_ok] = np.inf
+    v = int(valid.sum())
+    nn = int(np.clip(v - f - 2, 1, max(m - 1, 1)))
+    ds = np.sort(d, axis=1)
+    scores = np.where(np.isfinite(ds[:, :nn]), ds[:, :nn], 0).sum(1) \
+        + np.where(np.isinf(ds[:, :nn]), np.inf, 0).sum(1)
+    scores[~valid] = np.inf
+    kk = int(np.clip(multi, 1, max(v, 1)))
+    rank = np.argsort(np.argsort(scores, kind="stable"), kind="stable")
+    return (rank < kk) & valid, scores
+
+
+@pytest.mark.parametrize("mask", ["all", "some", "one"])
+def test_median_oracle(rng, mask):
+    x = _panel(rng)
+    valid = {"all": np.ones(M, bool),
+             "some": rng.random(M) < 0.6,
+             "one": np.eye(M, dtype=bool)[2]}[mask]
+    if not valid.any():
+        valid[0] = True
+    med, v = coordinate_median(x, jnp.asarray(valid))
+    om, ov = _median_oracle(x, valid)
+    assert int(v) == ov
+    np.testing.assert_array_equal(np.asarray(med), om)
+
+
+def test_median_exact_ties(rng):
+    """Duplicate rows: the lower median is an exact copy of a tied value."""
+    row = rng.normal(size=P).astype(np.float32)
+    x = jnp.asarray(np.stack([row] * 4 + [row + 5, row - 5, row + 9]))
+    med, _ = coordinate_median(x, jnp.ones(7, bool))
+    np.testing.assert_array_equal(np.asarray(med), row)
+
+
+@pytest.mark.parametrize("beta", [0.0, 0.1, 0.25, 0.49, 0.9])
+def test_trimmed_mean_oracle(rng, beta):
+    x = _panel(rng)
+    valid = jnp.asarray(rng.random(M) < 0.8)
+    if not bool(valid.any()):
+        valid = valid.at[0].set(True)
+    tm, v = trimmed_mean_combine(x, valid, jnp.float32(beta))
+    ot, ov = _trimmed_oracle(x, np.asarray(valid), beta)
+    assert int(v) == ov
+    np.testing.assert_allclose(np.asarray(tm), ot, atol=1e-6)
+
+
+def test_trimmed_beta_zero_is_plain_mean(rng):
+    x = _panel(rng)
+    tm, _ = trimmed_mean_combine(x, jnp.ones(M, bool), jnp.float32(0.0))
+    np.testing.assert_allclose(np.asarray(tm),
+                               np.asarray(x).mean(0), atol=1e-6)
+
+
+@pytest.mark.parametrize("f,multi", [(0, 1), (1, 1), (2, 3), (1, 7)])
+def test_krum_oracle_blanchard(rng, f, multi):
+    x = _panel(rng)
+    valid = jnp.asarray(rng.random(M) < 0.85)
+    if not bool(valid.any()):
+        valid = valid.at[0].set(True)
+    chosen, scores = krum_select(x, valid, f, multi)
+    ochosen, oscores = _krum_oracle(x, np.asarray(valid), f, multi)
+    np.testing.assert_array_equal(np.asarray(chosen), ochosen)
+    fin = np.isfinite(oscores)
+    np.testing.assert_allclose(np.asarray(scores)[fin], oscores[fin],
+                               rtol=2e-4)
+
+
+def test_krum_exact_tie_breaks_by_row_index(rng):
+    """Identical rows have identical scores; the stable double argsort
+    picks the LOWEST indices — bit-reproducible tie-breaking."""
+    row = rng.normal(size=P).astype(np.float32)
+    x = jnp.asarray(np.stack([row] * 5 + [row + 100]))
+    chosen, _ = krum_select(x, jnp.ones(6, bool), 1, 2)
+    np.testing.assert_array_equal(np.asarray(chosen),
+                                  [True, True, False, False, False, False])
+
+
+def test_krum_all_adversarial_scores_inf(rng):
+    """Every row NaN-poisoned: all scores +inf, but the selection still
+    returns exactly k valid rows (stable order) — breakdown exceeded is
+    a documented degradation, not a crash."""
+    x = jnp.full((5, P), jnp.nan)
+    chosen, scores = krum_select(x, jnp.ones(5, bool), 1, 2)
+    assert bool(jnp.isinf(scores).all())
+    np.testing.assert_array_equal(np.asarray(chosen),
+                                  [True, True, False, False, False])
+
+
+def test_nan_containment_minority_poison(rng):
+    """f < m/2 NaN-poisoned rows: median / trimmed-mean / krum outputs are
+    finite and ignore the poison (the PR-5 NaN-containment invariant now
+    extends to the robust families)."""
+    x = np.array(_panel(rng))
+    x[1] = np.nan
+    x[4] = np.nan
+    xj, valid = jnp.asarray(x), jnp.ones(M, bool)
+    med, _ = coordinate_median(xj, valid)
+    tm, _ = trimmed_mean_combine(xj, valid, jnp.float32(0.3))
+    out, chosen, _ = krum_combine(xj, valid, 2, 3)
+    honest = np.delete(x, [1, 4], axis=0)
+    for got in (med, tm, out):
+        got = np.asarray(got)
+        assert np.isfinite(got).all()
+        assert (got >= honest.min(0) - 1e-5).all()
+        assert (got <= honest.max(0) + 1e-5).all()
+    assert not bool(chosen[1]) and not bool(chosen[4])
+
+
+# --------------------------------------------------------- ref vs pallas
+@pytest.mark.parametrize("m,p", [(5, 7), (16, 64), (33, 130), (64, 256)])
+def test_krum_selection_ref_pallas_bit_identical(rng, m, p):
+    """The load-bearing kernel contract: ref and pallas distance panels
+    agree to f32 roundoff, and the SELECTED sets are bit-identical —
+    at non-tile shapes (zero-padding) and under jit."""
+    from repro.kernels.ops import krum_distances
+    x = jnp.asarray(rng.normal(size=(m, p)).astype(np.float32) * 3)
+    valid = jnp.asarray(rng.random(m) < 0.9)
+    if not bool(valid.any()):
+        valid = valid.at[0].set(True)
+    d_ref = np.asarray(krum_pairwise_ref(x))
+    d_pal = np.asarray(krum_distances(x))
+    np.testing.assert_allclose(np.maximum(d_ref, 0), np.maximum(d_pal, 0),
+                               atol=1e-2, rtol=1e-4)
+    f = max(1, m // 5)
+    sel_ref, _ = jax.jit(
+        lambda a, b: krum_select(a, b, f, 3, backend="ref"))(x, valid)
+    sel_pal, _ = jax.jit(
+        lambda a, b: krum_select(a, b, f, 3, backend="pallas"))(x, valid)
+    np.testing.assert_array_equal(np.asarray(sel_ref), np.asarray(sel_pal))
+
+
+# ------------------------------------------------------- switch integration
+def _tree_params(rng, dim=4, classes=3):
+    return {"w": jnp.asarray(rng.normal(size=(dim, classes)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(classes,)), jnp.float32)}
+
+
+def _tree_stacked(rng, m, dim=4, classes=3):
+    return {"w": jnp.asarray(rng.normal(size=(m, dim, classes)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(m, classes)), jnp.float32)}
+
+
+@pytest.mark.parametrize("proc", [MedianProcess(), TrimmedMeanProcess(0.25),
+                                  KrumProcess(f=1, multi=2)])
+def test_switch_matches_process_apply(rng, proc):
+    """make_aggregator_step's lax.switch dispatch == the process's own
+    apply for every robust family, params and state bitwise."""
+    n, m = 10, 4
+    prev = _tree_params(rng)
+    state = init_agg_state(prev, n)
+    upd = _tree_stacked(rng, m)
+    w = jnp.asarray(rng.random(m) + 0.5, jnp.float32)
+    sel = np.sort(rng.choice(n, size=m, replace=False))
+    s = np.zeros(n, bool)
+    s[sel] = True
+    key = jax.random.PRNGKey(0)
+    avail = jnp.ones(n, bool)
+    p1, st1 = proc.apply(state, key, upd, w, jnp.asarray(s), avail, 3)
+    step = make_aggregator_step(n, m, prev)
+    p2, st2 = step(proc.params(), state, key, upd, w, jnp.asarray(s),
+                   avail, 3)
+    for a, b in zip(jax.tree_util.tree_leaves((p1, st1)),
+                    jax.tree_util.tree_leaves((p2, st2))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_factory_names_and_knobs():
+    assert make_aggregator_process("median").name == "median"
+    tm = make_aggregator_process("trimmed_mean", beta_trim=0.3)
+    assert "0.3" in tm.name
+    k = make_aggregator_process("krum", krum_f=2)
+    assert k.f == 2 and k.multi == 1
+    mk = make_aggregator_process("multikrum", krum_f=1, krum_multi=4)
+    assert mk.multi == 4
+
+
+def test_mixed_robust_batch_equals_per_cell():
+    """fedavg + median + trimmed_mean + krum cells as ONE run_batch == the
+    per-cell runs bitwise — including the Krum cell's sampled sets (the
+    switch shares a program across aggregator families)."""
+    from repro.data.synthetic import make_synthetic
+    ds = make_synthetic(n_clients=12, alpha=0.5, beta=0.5, seed=0)
+    eng = ScanEngine(ds, logistic_regression(),
+                     ScanConfig(rounds=5, m=4, local_steps=2, batch_size=8,
+                                sampler="uniform"))
+    mode = make_mode("IDL", n_clients=ds.n_clients, data_sizes=ds.sizes,
+                     label_sets=ds.label_sets(), num_labels=ds.num_classes,
+                     seed=7)
+    cells = [eng.cell(seed=0, mode=mode,
+                      aggregator_process=make_aggregator_process(a))
+             for a in ("fedavg", "median", "trimmed_mean", "krum")]
+    batch = eng.run_batch(cells)
+    for i, c in enumerate(cells):
+        solo = eng.run(c)
+        np.testing.assert_array_equal(batch[i].val_loss, solo.val_loss,
+                                      err_msg=f"cell {i}")
+        np.testing.assert_array_equal(batch[i].sel, solo.sel,
+                                      err_msg=f"cell {i}")
