@@ -29,6 +29,12 @@ run-to-run tolerance below the committed-record acceptance bars:
   * ``decisions_bitwise`` must be true — the runtime layer may not change
     a single sampled set (DESIGN.md §13).
 
+``results/BENCH_telemetry.json`` (benchmarks/telemetry_bench.py) gates
+the observability layer (DESIGN.md §17): in-scan health channel <= 5%
+steady-state overhead, ``bitwise_noninterference`` true (telemetry-on
+history + checkpoints identical to telemetry-off, assumption log #24),
+and JSONL sink throughput above the floor.
+
   PYTHONPATH=src python -m benchmarks.perf_assert            # exit 1 on fail
 """
 from __future__ import annotations
@@ -40,11 +46,14 @@ import sys
 BENCH = pathlib.Path(__file__).resolve().parent / "results" / "BENCH_kernels.json"
 BENCH_RUNTIME = BENCH.parent / "BENCH_runtime.json"
 BENCH_ROBUST = BENCH.parent / "BENCH_robustness.json"
+BENCH_TELEMETRY = BENCH.parent / "BENCH_telemetry.json"
 
 TOLERANCE = 0.8        # >= 1.0x winner with 20% timing jitter allowance
 MAX_ERR = 1e-4         # parity ceiling for non-bit-exact rows
 WARM_SPEEDUP_MIN = 3.0       # committed record: >= 5x
 PIPELINE_RATIO_MIN = 0.75    # committed record: >= 0.9x of fused
+TELEMETRY_OVERHEAD_MAX = 5.0     # % steady-state, DESIGN.md §17
+JSONL_EVENTS_PER_S_MIN = 10_000  # sink must absorb per-round emission
 
 
 def check(record: dict) -> tuple[list[str], list[str]]:
@@ -115,6 +124,34 @@ def check_robustness(record: dict) -> tuple[list[str], list[str]]:
     return fails, lines
 
 
+def check_telemetry(rows: list) -> tuple[list[str], list[str]]:
+    """Gate the telemetry record (DESIGN.md §17): the in-scan health
+    channel must stay <= 5% steady-state overhead, must be BITWISE
+    non-interfering (history + checkpoints identical on-vs-off,
+    assumption log #24), and the JSONL sink must sustain well above
+    engine round rates."""
+    fails, lines = [], []
+    for r in rows:
+        ov = r.get("overhead_pct", 1e9)
+        ev = r.get("jsonl_events_per_s", 0.0)
+        lines.append(f"telemetry gate: overhead {ov:+.1f}% "
+                     f"(max {TELEMETRY_OVERHEAD_MAX}%), bitwise="
+                     f"{r.get('bitwise_noninterference')}, sink "
+                     f"{ev:,.0f} ev/s (floor {JSONL_EVENTS_PER_S_MIN:,})")
+        if ov > TELEMETRY_OVERHEAD_MAX:
+            fails.append(f"telemetry: {ov:+.1f}% steady-state overhead > "
+                         f"{TELEMETRY_OVERHEAD_MAX}% — the health channel "
+                         f"is no longer riding the existing transfer")
+        if not r.get("bitwise_noninterference"):
+            fails.append("telemetry: history/checkpoints differ on-vs-off "
+                         "— the channel leaked into results (assumption "
+                         "log #24 broken)")
+        if ev < JSONL_EVENTS_PER_S_MIN:
+            fails.append(f"telemetry: JSONL sink {ev:,.0f} events/s < "
+                         f"{JSONL_EVENTS_PER_S_MIN:,}")
+    return fails, lines
+
+
 def main(argv=None) -> int:
     if not BENCH.exists():
         print(f"perf gate: {BENCH} missing — run "
@@ -137,6 +174,15 @@ def main(argv=None) -> int:
             json.loads(BENCH_ROBUST.read_text()))
         fails.extend(bfails)
         lines.extend(blines)
+    if not BENCH_TELEMETRY.exists():
+        fails.append(f"{BENCH_TELEMETRY.name} missing — run "
+                     f"`python -m benchmarks.run --only telemetry` and "
+                     f"commit")
+    else:
+        tfails, tlines = check_telemetry(
+            json.loads(BENCH_TELEMETRY.read_text()))
+        fails.extend(tfails)
+        lines.extend(tlines)
     for ln in lines:
         print(ln)
     if fails:

@@ -24,8 +24,9 @@ import time
 RESULTS = pathlib.Path(__file__).resolve().parent / "results"
 
 SECTIONS = ["table2", "fig4", "table3", "table4", "dynamic", "scaling",
-            "engine", "shard", "runtime", "availability", "aggregator",
-            "robustness", "kernels", "graph", "roofline", "variants"]
+            "engine", "shard", "runtime", "telemetry", "availability",
+            "aggregator", "robustness", "kernels", "graph", "roofline",
+            "variants"]
 
 
 def _section(name: str, quick: bool):
@@ -52,6 +53,8 @@ def _section(name: str, quick: bool):
         from benchmarks import engine_bench as m
     elif name == "runtime":
         from benchmarks import runtime_bench as m
+    elif name == "telemetry":
+        from benchmarks import telemetry_bench as m
     elif name == "availability":
         from benchmarks import availability_bench as m
     elif name == "aggregator":

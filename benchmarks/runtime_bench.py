@@ -119,6 +119,10 @@ def run(quick: bool = True) -> list[dict]:
     with tempfile.TemporaryDirectory() as td:
         pipe_ck_s, _ = steady(eng, cells, ckpt_every=seg,
                               ckpt_path=os.path.join(td, "ck"))
+        # checkpoint-writer backpressure counters from the timed run
+        # (DESIGN.md §17): queue high-watermark + total blocked ms show
+        # whether the npz writes ever stalled the dispatch loop
+        writer_stats = eng.runtime_stats().get("checkpoint_writer")
     leg_eng, leg_cells = _mk(rounds, donate_carry=False, async_pipeline=False)
     leg_s, leg_h = steady(leg_eng, leg_cells, ckpt_every=seg)
     with tempfile.TemporaryDirectory() as td:
@@ -160,6 +164,7 @@ def run(quick: bool = True) -> list[dict]:
         "pipelined_vs_legacy": round(leg_s / max(pipe_s, 1e-9), 3),
         "ckpt_overlap_x": round(leg_ck_s / max(pipe_ck_s, 1e-9), 3),
         "decisions_bitwise": decisions_ok,
+        "checkpoint_writer": writer_stats,
     }
     print(f"[runtime_bench] steady: fused {fused_s:.2f}s, pipelined "
           f"{pipe_s:.2f}s ({row['pipelined_vs_fused']:.2f}x of fused), "

@@ -27,8 +27,11 @@ from repro.data.fed_dataset import FedDataset
 from repro.fed.client import make_local_trainer, make_loss_prober
 from repro.fed.faults_device import HostFaultInjector, make_fault_process
 from repro.fed.models import FedModel
-from repro.fed.runtime import AsyncCheckpointWriter, enable_compile_cache
+from repro.fed.runtime import (
+    AsyncCheckpointWriter, ProgramCache, enable_compile_cache,
+)
 from repro.fed.server import ServerAggregator
+from repro.fed.telemetry import NULL_TRACER, runtime_snapshot
 
 
 @dataclass
@@ -74,7 +77,8 @@ class FLEngine:
                  mode: AvailabilityMode, cfg: FLConfig, *,
                  aggregator=None, agg_backend: str = "ref",
                  fault=None, fault_frac: float = 0.0,
-                 fault_seed: Optional[int] = None):
+                 fault_seed: Optional[int] = None,
+                 tracer=None, sink=None):
         """``aggregator`` is any ``fed.aggregator_device.AggregatorProcess``
         (default FedAvg — bit-parity with the legacy Eq. 18 path);
         ``agg_backend`` routes the memory family's scatter+reduction.
@@ -100,14 +104,37 @@ class FLEngine:
                 if fault_seed is None else fault_seed)
         else:
             self._faults = None
-        self._trainer = make_local_trainer(
-            model.loss, local_steps=cfg.local_steps,
-            batch_size=cfg.batch_size, prox_mu=cfg.prox_mu)
-        self._prober = make_loss_prober(model.loss) if sampler.needs_losses else None
-        self._eval = jax.jit(lambda p, x, y: (model.loss(p, x, y), model.accuracy(p, x, y)))
+        # observability spine (DESIGN.md §17): the host engine's jitted
+        # programs route through the same ProgramCache as the scan engine,
+        # so runtime_stats() reports hit/miss/compile counters with one
+        # shared snapshot shape (runtime_snapshot); tracer spans + metric
+        # sink are optional and default to no-ops
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.sink = sink
+        self._programs = ProgramCache(maxsize=8)
+        self._writer_stats: Optional[dict] = None
+        self._trainer = self._programs.get(
+            "trainer", lambda: make_local_trainer(
+                model.loss, local_steps=cfg.local_steps,
+                batch_size=cfg.batch_size, prox_mu=cfg.prox_mu))
+        self._prober = self._programs.get(
+            "prober", lambda: make_loss_prober(model.loss)) \
+            if sampler.needs_losses else None
+        self._eval = self._programs.get(
+            "eval", lambda: jax.jit(lambda p, x, y: (
+                model.loss(p, x, y), model.accuracy(p, x, y))))
         self.counts = np.zeros(self.n)
         if cfg.compile_cache_dir is not None:
             enable_compile_cache(cfg.compile_cache_dir)
+
+    def runtime_stats(self) -> dict:
+        """The shared telemetry snapshot (same shape as
+        ``ScanEngine.runtime_stats``): flat ProgramCache counters, the
+        last run's checkpoint-writer backpressure counters and the
+        tracer's per-span aggregates."""
+        return runtime_snapshot(programs=self._programs,
+                                writer=self._writer_stats,
+                                tracer=self.tracer)
 
     # ------------------------------------------------------------- 3DG setup
     def install_oracle_graph(self, features: Optional[np.ndarray] = None,
@@ -237,12 +264,25 @@ class FLEngine:
         # error (DESIGN.md §15)
         writer = AsyncCheckpointWriter() \
             if (ckpt_path and ckpt_every) else None
+        self._writer_stats = None
+        if self.sink is not None:
+            self.sink.emit("run_start",
+                           {"engine": "host", "rounds": cfg.rounds,
+                            "start_round": start_round,
+                            "sampler": self.sampler.name})
         try:
             self._run_rounds(hist, params, start_round, xs, ys, sizes, xv,
                              yv, progress, ckpt_path, ckpt_every, writer)
         finally:
             if writer is not None:
-                writer.close()
+                try:
+                    writer.close()
+                finally:
+                    self._writer_stats = writer.stats()
+            if self.sink is not None:
+                self.sink.emit("run_end",
+                               {"engine": "host",
+                                "runtime": self.runtime_stats()})
         return hist
 
     def _run_rounds(self, hist, params, start_round, xs, ys, sizes, xv, yv,
@@ -269,12 +309,16 @@ class FLEngine:
 
             lr = cfg.lr * (cfg.lr_decay ** t)
             key, sub = jax.random.split(key)
-            local = self._trainer(params, xs[sel], ys[sel], sizes[sel],
-                                  jnp.float32(lr), jax.random.split(sub, len(sel)))
+            with self.tracer.span("local_train", t=t, m=len(sel)):
+                local = self._trainer(params, xs[sel], ys[sel], sizes[sel],
+                                      jnp.float32(lr),
+                                      jax.random.split(sub, len(sel)))
             if self._faults is not None:
                 local = self._faults.inject(local, params, sel, avail, t)
-            params = self._server.apply(
-                local, self.ds.sizes[sel].astype(np.float32), sel, avail, t)
+            with self.tracer.span("aggregate", t=t):
+                params = self._server.apply(
+                    local, self.ds.sizes[sel].astype(np.float32), sel,
+                    avail, t)
             self.counts[sel] += 1
 
             if cfg.graph_refresh_every > 0 and hasattr(self, "_emb"):
@@ -283,13 +327,23 @@ class FLEngine:
                     self._rebuild_dynamic_graph()
 
             if t % cfg.eval_every == 0 or t == cfg.rounds - 1:
-                vl, va = self._eval(params, xv, yv)
+                with self.tracer.span("eval", t=t):
+                    vl, va = self._eval(params, xv, yv)
                 from repro.core.fairness import count_variance
                 hist.rounds.append(t)
                 hist.val_loss.append(float(vl))
                 hist.val_acc.append(float(va))
                 hist.count_var.append(count_variance(self.counts))
                 hist.sampled.append(sel.tolist())
+                if self.sink is not None:
+                    self.sink.emit("round",
+                                   {"engine": "host", "t": t,
+                                    "val_loss": float(vl),
+                                    "val_acc": float(va),
+                                    "count_var": hist.count_var[-1],
+                                    "n_selected": int(len(sel)),
+                                    "avail_rate":
+                                    float(np.mean(avail))})
                 if progress:
                     progress(t, float(vl), float(va))
             if writer is not None and (t + 1) % ckpt_every == 0:
@@ -302,9 +356,14 @@ class FLEngine:
                         "server": self._server.state}
                 if self._faults is not None:
                     snap["faults"] = self._faults.state
-                writer.submit(save_checkpoint, ckpt_path, snap,
-                              metadata={"round": t,
-                                        "sampler": self.sampler.name,
-                                        "aggregator": self._server
-                                        .process.name})
+
+                def _write(snap=snap, tn=t):
+                    with self.tracer.span("checkpoint_write", round=tn):
+                        save_checkpoint(
+                            ckpt_path, snap,
+                            metadata={"round": tn,
+                                      "sampler": self.sampler.name,
+                                      "aggregator":
+                                      self._server.process.name})
+                writer.submit(_write)
         self.params = params

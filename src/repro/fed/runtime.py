@@ -203,6 +203,12 @@ class AsyncCheckpointWriter:
     def __init__(self, max_pending: int = 2):
         self._q: queue.Queue = queue.Queue(maxsize=max_pending)
         self._err: Optional[BaseException] = None
+        # backpressure visibility (DESIGN.md §17): queue high-watermark,
+        # total time submit() spent BLOCKED on a full queue, and worker
+        # write time — surfaced through the engines' runtime_stats()
+        self._stats = {"submitted": 0, "completed": 0, "max_pending":
+                       int(max_pending), "queue_high_watermark": 0,
+                       "blocked_ms": 0.0, "write_ms": 0.0}
         self._thread = threading.Thread(
             target=self._loop, name="ckpt-writer", daemon=True)
         self._thread.start()
@@ -215,7 +221,11 @@ class AsyncCheckpointWriter:
                     return
                 if self._err is None:     # fail-fast: skip after first error
                     fn, args, kwargs = item
+                    t0 = time.perf_counter()
                     fn(*args, **kwargs)
+                    self._stats["write_ms"] += \
+                        (time.perf_counter() - t0) * 1e3
+                    self._stats["completed"] += 1
             except BaseException as e:    # noqa: BLE001 — re-raised on host
                 self._err = e
             finally:
@@ -228,7 +238,24 @@ class AsyncCheckpointWriter:
 
     def submit(self, fn: Callable, *args, **kwargs):
         self._raise_pending()
-        self._q.put((fn, args, kwargs))
+        item = (fn, args, kwargs)
+        try:
+            self._q.put_nowait(item)
+        except queue.Full:
+            # the backpressure path: the producer outran the disk — time
+            # the stall so it shows up in runtime_stats / BENCH rows
+            t0 = time.perf_counter()
+            self._q.put(item)
+            self._stats["blocked_ms"] += (time.perf_counter() - t0) * 1e3
+        self._stats["submitted"] += 1
+        self._stats["queue_high_watermark"] = max(
+            self._stats["queue_high_watermark"], self._q.qsize())
+
+    def stats(self) -> dict:
+        """Counters snapshot + instantaneous queue depth."""
+        return {**self._stats, "queue_depth": self._q.qsize(),
+                "blocked_ms": round(self._stats["blocked_ms"], 3),
+                "write_ms": round(self._stats["write_ms"], 3)}
 
     def flush(self):
         """Block until everything submitted so far has been written."""

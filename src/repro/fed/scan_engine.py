@@ -120,6 +120,9 @@ from repro.checkpoint.ckpt import load_checkpoint, save_checkpoint
 from repro.fed.runtime import (
     AsyncCheckpointWriter, CarryHandle, ProgramCache, enable_compile_cache,
 )
+from repro.fed.telemetry import (
+    NULL_TRACER, fault_corruption_norm, round_telemetry, runtime_snapshot,
+)
 from repro.core.availability import AvailabilityMode, host_trace
 from repro.core.availability_device import AvailabilityProcess, proc_draw
 from repro.core.graph_device import (
@@ -205,6 +208,14 @@ class ScanConfig:
     async_pipeline: bool = True
     compile_cache_dir: Optional[str] = None
     program_cache_size: int = 32
+    # in-scan telemetry channel (DESIGN.md §17): opt-in per-round stage
+    # health metrics (update norms / NaN fraction / clip rate, sampler
+    # dispersion, availability rate, weight entropy, staleness histogram,
+    # fault magnitude) captured alongside the ScanHistory trajectory.
+    # Gated like the fault carry: telemetry=False programs, outputs and
+    # checkpoints are bitwise untouched (assumption log #24)
+    telemetry: bool = False
+    telemetry_clip_thresh: float = 10.0   # client-update-norm clip probe
 
     def __post_init__(self):
         if self.sampler not in SAMPLERS:
@@ -296,6 +307,11 @@ class ScanHistory:
     sel: np.ndarray            # (T, M) sorted selected indices (padded)
     valid: np.ndarray          # (T, M) pad mask (False = zero-weight slot)
     counts: np.ndarray         # (N,) final participation counts
+    # opt-in per-round stage-health metrics (ScanConfig.telemetry;
+    # DESIGN.md §17): {name: (T,) or (T, bins) array} — None when the
+    # telemetry channel is off.  Rounds before a resume point are NaN
+    # (telemetry is observability, not state: it is NOT checkpointed)
+    telemetry: Optional[dict] = None
 
     @property
     def best_loss(self) -> float:
@@ -315,6 +331,7 @@ class ScanHistory:
 def _build_simulate(ds: FedDataset, model: FedModel, cfg: ScanConfig,
                     use_masks: bool, with_memory: bool = False, *,
                     with_fault: bool = False, with_stale: bool = False,
+                    with_telemetry: bool = False,
                     silo: int = 1, panel_axis: Optional[str] = None):
     """Closure-captures the (cell-shared) dataset and returns the pure
     per-cell closures the engine jit/vmap/shard_maps:
@@ -342,6 +359,12 @@ def _build_simulate(ds: FedDataset, model: FedModel, cfg: ScanConfig,
     way: only a batch with an actual fault cell carries the fault state
     (and only a straggler cell carries the (N, P) stale-update panel), so
     the benign default program — and its checkpoints — are unchanged.
+    ``with_telemetry`` gates the in-scan health channel identically
+    (``ScanConfig.telemetry``): the step emits an extra per-round metrics
+    pytree under ``out["telemetry"]`` — pure reductions over
+    intermediates the step already materializes, NO new carry state — so
+    a telemetry-off program, its history fields and its checkpoints are
+    bitwise untouched (DESIGN.md §17, assumption log #24).
 
     ``silo > 1`` chunks the vmap'd local-training client axis over the
     shard_map "silo" mesh axis (each silo trains ceil(M/s) clients with the
@@ -521,21 +544,29 @@ def _build_simulate(ds: FedDataset, model: FedModel, cfg: ScanConfig,
         # byz slots of the flat (M, P) update panel BETWEEN training and
         # aggregation (sign flips, noise, boosting, stale straggler
         # replays); benign cells pass through the identity branch
+        fault_mag = None
         if with_fault:
             fstate = carry["fault"]
+            cleanf = jax.vmap(fravel)(local)
             updf, fstate = fault_step(
                 cell["fault"], fstate,
                 jax.random.fold_in(cell["fault_key"], t),
-                jax.vmap(fravel)(local), fravel(params), avail, t, sel,
+                cleanf, fravel(params), avail, t, sel,
                 valid)
             local = jax.vmap(funravel)(updf)
+            if with_telemetry:
+                # corruption magnitude at the seam, where the clean flat
+                # panel is still in scope (DESIGN.md §17)
+                fault_mag = fault_corruption_norm(updf, cleanf, valid)
 
         # 4. server update — the aggregator switch step dispatches on
         # the cell's family (Eq. 18 weights: pads carry zero weight;
         # the fedavg branch is bit-identical to the legacy aggregate())
+        prev_params = params
+        agg_w = sizes_f[sel] * valid
         params, astate = agg_step(
             cell["agg"], astate, jax.random.fold_in(cell["agg_key"], t),
-            local, sizes_f[sel] * valid, s, avail, t, sel, valid)
+            local, agg_w, s, avail, t, sel, valid)
 
         # 5. count update v^{t+1}
         counts = counts + s.astype(jnp.float32)
@@ -566,6 +597,16 @@ def _build_simulate(ds: FedDataset, model: FedModel, cfg: ScanConfig,
         gini = gini_device(counts)
         out = {"val_loss": vl, "val_acc": va, "count_var": cvar,
                "gini": gini, "sel": sel.astype(jnp.int32), "valid": valid}
+        if with_telemetry:
+            # the in-scan health channel (DESIGN.md §17): pure reductions
+            # over this step's intermediates — consumers only, nothing
+            # feeds back into the carry or the history fields above
+            out["telemetry"] = round_telemetry(
+                avail=avail, valid=valid, sel=sel, local=local,
+                params_prev=prev_params, params_new=params, weights=agg_w,
+                h=h, clip_thresh=cfg.telemetry_clip_thresh,
+                tau=astate["tau"] if with_memory else None, t=t,
+                fault_mag=fault_mag)
         carry1 = {"agg": astate, "counts": counts, "h": h, "emb": emb,
                   "proc": pstate, "sampler": sstate}
         if with_fault:
@@ -594,25 +635,40 @@ class ScanEngine:
     checkpointing (DESIGN.md §13)."""
 
     def __init__(self, ds: FedDataset, model: FedModel, cfg: ScanConfig, *,
-                 use_masks: bool = False):
+                 use_masks: bool = False, tracer=None, sink=None):
         self.ds, self.model, self.cfg = ds, model, cfg
         self.n = ds.n_clients
         self.use_masks = use_masks
-        self._sims: dict = {}         # ((wm, wf, ws), silo, panel) -> closures
+        self._sims: dict = {}   # ((wm, wf, ws, wt), silo, panel) -> closures
         # program key -> jit'd fn: bounded LRU with hit/miss/compile-ms
         # counters (DESIGN.md §15) — the old unbounded dict leaked one
         # program per (seg_len, variant) across heterogeneous sweeps
         self._programs = ProgramCache(maxsize=cfg.program_cache_size)
         self._cspecs: dict = {}       # (flags, silo, panel) -> carry specs
         self._mesh_obj = None
+        # observability spine (DESIGN.md §17): host span tracer + streaming
+        # metrics sink — both default to no-ops, both hot-swappable
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.sink = sink
+        self._tel_parts: list = []    # [(t0, k, telemetry_host)] per run
+        self._writer_stats: Optional[dict] = None
         if cfg.compile_cache_dir is not None:
             enable_compile_cache(cfg.compile_cache_dir)
 
     def runtime_stats(self) -> dict:
-        """Program-cache counters: hits, misses, evictions, compiles,
-        compile_ms, size (benchmarks split first-call compile from
-        steady-state run with these)."""
-        return self._programs.stats()
+        """The unified telemetry snapshot (DESIGN.md §17): program-cache
+        counters FLAT at the top level (hits, misses, evictions, compiles,
+        compile_ms, size — the pre-telemetry shape benchmarks read), plus
+        the last run's checkpoint-writer backpressure counters and the
+        tracer's per-span aggregates."""
+        return runtime_snapshot(programs=self._programs,
+                                writer=self._writer_stats,
+                                tracer=self.tracer)
+
+    def attach_sink(self, sink):
+        """Install (or clear, with ``None``) the streaming metrics sink —
+        per-segment round metrics flow through ``run_batch_stream``."""
+        self.sink = sink
 
     # ----------------------------------------------------------- programs
     def _mesh(self):
@@ -623,11 +679,12 @@ class ScanEngine:
         return self._mesh_obj
 
     def _flags(self, cells: list[dict]) -> tuple:
-        """Static program-variant flags for this batch: ``(wm, wf, ws)`` —
-        does any cell need the (N, P) update-memory panel / the fault seam
-        / the straggler stale panel?  Each flag widens the carry (and the
-        traced step) only for batches that actually use the feature, so
-        the benign default program is unchanged."""
+        """Static program-variant flags for this batch: ``(wm, wf, ws,
+        wt)`` — does any cell need the (N, P) update-memory panel / the
+        fault seam / the straggler stale panel, and is the in-scan
+        telemetry channel on?  Each flag widens the carry or the traced
+        step only for batches that actually use the feature, so the
+        benign default program is unchanged."""
         midx = AGGREGATORS.index("memory")
         wm = self.cfg.aggregator == "memory" or any(
             int(np.asarray(c["agg"]["family"])) == midx for c in cells)
@@ -638,7 +695,7 @@ class ScanEngine:
         wf = self.cfg.fault != "none" or any(f != nidx for f in fams)
         ws = self.cfg.fault == "straggler_stale" or any(
             f == sidx for f in fams)
-        return wm, wf, ws
+        return wm, wf, ws, bool(self.cfg.telemetry)
 
     def _variant(self, batched: bool):
         """(mesh, silo, panel_axis-factory) for this run shape."""
@@ -651,13 +708,13 @@ class ScanEngine:
         return mesh, silo, panel
 
     def _closures(self, flags: tuple, silo: int, panel: Optional[str]):
-        wm, wf, ws = flags
+        wm, wf, ws, wt = flags
         key = (flags, silo, panel)
         if key not in self._sims:
             self._sims[key] = _build_simulate(
                 self.ds, self.model, self.cfg, self.use_masks,
-                with_memory=wm, with_fault=wf, with_stale=ws, silo=silo,
-                panel_axis=panel)
+                with_memory=wm, with_fault=wf, with_stale=ws,
+                with_telemetry=wt, silo=silo, panel_axis=panel)
         return self._sims[key]
 
     def _program(self, cells: list[dict], batched: bool):
@@ -837,7 +894,8 @@ class ScanEngine:
         return c
 
     # -------------------------------------------------------------- runs
-    def _to_history(self, out, i: Optional[int] = None) -> ScanHistory:
+    def _to_history(self, out, i: Optional[int] = None,
+                    telemetry: Optional[dict] = None) -> ScanHistory:
         pick = (lambda x: np.asarray(x)) if i is None else \
                (lambda x: np.asarray(x[i]))
         return ScanHistory(val_loss=pick(out["val_loss"]),
@@ -845,16 +903,78 @@ class ScanEngine:
                            count_var=pick(out["count_var"]),
                            gini=pick(out["gini"]),
                            sel=pick(out["sel"]), valid=pick(out["valid"]),
-                           counts=pick(out["counts"]))
+                           counts=pick(out["counts"]),
+                           telemetry=None if telemetry is None else
+                           jax.tree_util.tree_map(pick, telemetry))
+
+    # --------------------------------------------------- telemetry plumbing
+    def _emit_segment_metrics(self, b: int, t0: int, k: int, traj_h: dict,
+                              tel_h: Optional[dict]):
+        """Stream one fetched segment's per-round rows to the metrics sink
+        (DESIGN.md §17) — called per segment as it lands on host, so a
+        service front-end sees metrics while later segments still
+        compute.  Pad cells (mesh batch padding) are not emitted."""
+        if self.sink is None:
+            return
+        with self.tracer.span("metrics_emit", t0=t0, rounds=k):
+            for j in range(b):
+                for r in range(k):
+                    row = {"cell": j, "t": t0 + r,
+                           "n_valid": int(np.sum(traj_h["valid"][j][r]))}
+                    for f in ("val_loss", "val_acc", "count_var", "gini"):
+                        row[f] = float(traj_h[f][j][r])
+                    if tel_h is not None:
+                        row["metrics"] = {
+                            kk: np.asarray(v[j][r])
+                            for kk, v in tel_h.items()}
+                    self.sink.emit("round", row)
+            self.sink.emit("segment",
+                           {"t0": t0, "rounds": k, "cells": b,
+                            "programs": self._programs.stats()})
+
+    def _fetch_segment(self, t0: int, k: int, traj_dev, b: int) -> dict:
+        """ONE whole-pytree ``jax.device_get`` of a segment trajectory;
+        the telemetry subtree is split off (stashed for the final
+        histories + streamed to the sink) so the trajectory that flows
+        into checkpoints and stream consumers is bitwise the
+        telemetry-off one (assumption log #24)."""
+        with self.tracer.span("device_get", t0=t0, rounds=k):
+            traj_h = jax.device_get(traj_dev)
+        tel_h = traj_h.pop("telemetry", None)
+        if tel_h is not None:
+            self._tel_parts.append((t0, k, tel_h))
+        self._emit_segment_metrics(b, t0, k, traj_h, tel_h)
+        return traj_h
+
+    def _assemble_telemetry(self) -> Optional[dict]:
+        """Concat the stashed per-segment telemetry into (B, T, ...)
+        arrays; a resumed run's pre-resume prefix (telemetry is not
+        checkpointed) is NaN-filled so round indices stay aligned."""
+        if not self._tel_parts:
+            return None
+        parts, t_next = [], 0
+        for t0, k, tel in self._tel_parts:
+            if t0 > t_next:
+                gap = t0 - t_next
+                parts.append(jax.tree_util.tree_map(
+                    lambda x, g=gap: np.full(
+                        x.shape[:1] + (g,) + x.shape[2:], np.nan,
+                        x.dtype), tel))
+            parts.append(tel)
+            t_next = t0 + k
+        return jax.tree_util.tree_map(
+            lambda *xs: np.concatenate(xs, axis=1), *parts)
 
     def run(self, cell: dict) -> ScanHistory:
         """Execute one cell; the whole trajectory is a single device program
         (always single-device — the mesh applies to ``run_batch``).  The
         output pytree comes back in ONE ``jax.device_get`` transfer (which
         also synchronizes), not one ``np.asarray`` per history field."""
-        out = jax.device_get(self._program([cell], False)(cell))
+        with self.tracer.span("run_cell"):
+            out = jax.device_get(self._program([cell], False)(cell))
+        tel = out.pop("telemetry", None)
         self.params = out["params"]
-        return self._to_history(out)
+        return self._to_history(out, telemetry=tel)
 
     # ------------------------------------------------- segmented runtime
     def init_carry(self, cells: list[dict]) -> CarryHandle:
@@ -880,8 +1000,12 @@ class ScanEngine:
 
     def _run_segment(self, stacked: dict, flags: tuple, carry: CarryHandle,
                      t0: int, seg_len: int):
-        fn = self._segment_program(stacked, flags, seg_len)
-        new_carry, traj = fn(stacked, carry.consume(), jnp.int32(t0))
+        with self.tracer.span("program_get", seg_len=seg_len):
+            fn = self._segment_program(stacked, flags, seg_len)
+        # dispatch is async: this span covers trace/lower/compile on a
+        # cache miss and ~µs enqueue steady-state (assumption log #25)
+        with self.tracer.span("dispatch_segment", t0=t0, rounds=seg_len):
+            new_carry, traj = fn(stacked, carry.consume(), jnp.int32(t0))
         return CarryHandle(new_carry), traj
 
     def run_batch_stream(self, cells: list[dict], *,
@@ -916,6 +1040,13 @@ class ScanEngine:
         every = int(ckpt_every) if ckpt_every else rounds
         concat = lambda parts: jax.tree_util.tree_map(        # noqa: E731
             lambda *xs: np.concatenate(xs, axis=1), *parts)
+        self._tel_parts = []
+        self._writer_stats = None
+        if self.sink is not None:
+            self.sink.emit("run_start",
+                           {"cells": b, "rounds": rounds, "mesh": cfg.mesh,
+                            "telemetry": bool(cfg.telemetry),
+                            "ckpt_every": int(ckpt_every)})
         t0, parts, carry = 0, [], None
         if resume and ckpt_path is not None:
             p = ckpt_path if ckpt_path.endswith(".npz") else ckpt_path + ".npz"
@@ -926,7 +1057,8 @@ class ScanEngine:
                 parts.append(state["traj"])
                 yield 0, t0, state["traj"]
         if carry is None:
-            carry = self._init_program(stacked, flags)(stacked)
+            with self.tracer.span("init_carry", cells=len(cells_p)):
+                carry = self._init_program(stacked, flags)(stacked)
         handle = CarryHandle(carry)
         writer = AsyncCheckpointWriter() \
             if (ckpt_path is not None and cfg.async_pipeline) else None
@@ -944,14 +1076,16 @@ class ScanEngine:
                 need_ckpt = ckpt_path is not None and t1 < rounds
                 if not cfg.async_pipeline:
                     # PR 6 semantics: block, fetch, write inline
-                    traj_h = jax.device_get(traj_dev)
+                    traj_h = self._fetch_segment(t0, k, traj_dev, b)
                     parts.append(traj_h)
                     if need_ckpt:
-                        save_checkpoint(
-                            ckpt_path,
-                            {"carry": jax.device_get(handle.tree),
-                             "round": np.int64(t1), "traj": concat(parts)},
-                            metadata=meta_of(t1))
+                        with self.tracer.span("checkpoint_write", round=t1):
+                            save_checkpoint(
+                                ckpt_path,
+                                {"carry": jax.device_get(handle.tree),
+                                 "round": np.int64(t1),
+                                 "traj": concat(parts)},
+                                metadata=meta_of(t1))
                     yield t0, k, traj_h
                 elif need_ckpt:
                     # the checkpoint needs the cumulative trajectory AND
@@ -960,32 +1094,38 @@ class ScanEngine:
                     # concat + npz write run on the writer thread,
                     # overlapping the next segment's compute.
                     if pending is not None:
-                        ph = jax.device_get(pending[2])
+                        ph = self._fetch_segment(pending[0], pending[1],
+                                                 pending[2], b)
                         parts.append(ph)
                         yield pending[0], pending[1], ph
                         pending = None
-                    traj_h = jax.device_get(traj_dev)
+                    traj_h = self._fetch_segment(t0, k, traj_dev, b)
                     parts.append(traj_h)
                     carry_h = jax.device_get(handle.tree)
                     snapshot = list(parts)
-                    writer.submit(
-                        lambda ch=carry_h, sn=snapshot, tn=t1:
-                        save_checkpoint(
-                            ckpt_path, {"carry": ch, "round": np.int64(tn),
-                                        "traj": concat(sn)},
-                            metadata=meta_of(tn)))
+
+                    def _write(ch=carry_h, sn=snapshot, tn=t1):
+                        with self.tracer.span("checkpoint_write", round=tn):
+                            save_checkpoint(
+                                ckpt_path,
+                                {"carry": ch, "round": np.int64(tn),
+                                 "traj": concat(sn)},
+                                metadata=meta_of(tn))
+                    writer.submit(_write)
                     yield t0, k, traj_h
                 else:
                     # free-running: fetch the PREVIOUS segment while this
                     # one computes
                     if pending is not None:
-                        ph = jax.device_get(pending[2])
+                        ph = self._fetch_segment(pending[0], pending[1],
+                                                 pending[2], b)
                         parts.append(ph)
                         yield pending[0], pending[1], ph
                     pending = (t0, k, traj_dev)
                 t0 = t1
             if pending is not None:
-                ph = jax.device_get(pending[2])
+                ph = self._fetch_segment(pending[0], pending[1],
+                                         pending[2], b)
                 parts.append(ph)
                 yield pending[0], pending[1], ph
             final = jax.device_get({"params": handle.tree["agg"]["prev"],
@@ -995,7 +1135,12 @@ class ScanEngine:
             self.final_counts = final["counts"][:b]
         finally:
             if writer is not None:
-                writer.close()
+                try:
+                    writer.close()
+                finally:
+                    self._writer_stats = writer.stats()
+            if self.sink is not None:
+                self.sink.emit("run_end", {"runtime": self.runtime_stats()})
 
     def run_batch(self, cells: list[dict], *,
                   ckpt_path: Optional[str] = None, ckpt_every: int = 0,
@@ -1027,19 +1172,25 @@ class ScanEngine:
             fn = self._program(cells_p, True)
             # ONE device_get of the whole output pytree (one transfer +
             # sync), not one np.asarray round-trip per history field
-            out = jax.device_get(fn(stack_cells(cells_p)))
+            with self.tracer.span("device_get", t0=0,
+                                  rounds=self.cfg.rounds):
+                out = jax.device_get(fn(stack_cells(cells_p)))
+            tel = out.pop("telemetry", None)
+            self._emit_segment_metrics(b, 0, self.cfg.rounds, out, tel)
             self.params = jax.tree_util.tree_map(lambda x: x[:b],
                                                  out["params"])
-            return [self._to_history(out, i) for i in range(b)]
+            return [self._to_history(out, i, telemetry=tel)
+                    for i in range(b)]
 
         parts = [traj for _, _, traj in self.run_batch_stream(
             cells, ckpt_path=ckpt_path, ckpt_every=ckpt_every,
             resume=resume)]
         traj = jax.tree_util.tree_map(lambda *xs: np.concatenate(xs, axis=1),
                                       *parts)
+        tel = self._assemble_telemetry()
         # the stream already set self.params / self.final_counts (B-sliced)
         out = {**traj, "counts": self.final_counts}
-        return [self._to_history(out, i) for i in range(b)]
+        return [self._to_history(out, i, telemetry=tel) for i in range(b)]
 
     def lower_batch(self, cells: list[dict], *, abstract: bool = False):
         """Lower (without running) — for compile-time measurement.

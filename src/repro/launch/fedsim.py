@@ -201,7 +201,10 @@ def run(n_clients: int, *, multi_pod: bool, sample_frac: float = 0.1,
         n_max: int = 512, local_steps: int = 10, batch: int = 10,
         force: bool = False, solver_backend: str = "ref",
         aggregator: str = "fedavg", agg_backend: str = "ref",
-        sweep_mesh: tuple | None = None) -> dict:
+        sweep_mesh: tuple | None = None, tracer=None,
+        sink=None) -> dict:
+    from repro.fed.telemetry import NULL_TRACER
+    tracer = tracer if tracer is not None else NULL_TRACER
     mesh_tag = "pod2" if multi_pod else "pod1"
     key = f"fedsim__c{n_clients}__{mesh_tag}"
     if sweep_mesh:
@@ -246,8 +249,10 @@ def run(n_clients: int, *, multi_pod: bool, sample_frac: float = 0.1,
             jax.tree_util.tree_map(lambda _: repl, gp),
             client_sh, client_sh, client_sh, None, client_sh),
             out_shardings=jax.tree_util.tree_map(lambda _: repl, gp))
-        lowered = jitted.lower(*args)
-        compiled = lowered.compile()
+        with tracer.span("lower", stage="round"):
+            lowered = jitted.lower(*args)
+        with tracer.span("compile", stage="round"):
+            compiled = lowered.compile()
         hc = hlo_analyze(compiled.as_text())
         rec["round"] = {
             "m_sampled": m_sel,
@@ -264,8 +269,10 @@ def run(n_clients: int, *, multi_pod: bool, sample_frac: float = 0.1,
             f, c, a, 1.0, m_sel, solver_backend=solver_backend),
             in_shardings=(None, None, None))
         with mesh:
-            glow = gj.lower(*gargs)
-            gcomp = glow.compile()
+            with tracer.span("lower", stage="server_pipeline"):
+                glow = gj.lower(*gargs)
+            with tracer.span("compile", stage="server_pipeline"):
+                gcomp = glow.compile()
         ghc = hlo_analyze(gcomp.as_text())
         rec["server_pipeline"] = {
             "n_clients": n_clients,
@@ -276,7 +283,8 @@ def run(n_clients: int, *, multi_pod: bool, sample_frac: float = 0.1,
         # ---- the server-update (aggregator) program ----------------------
         aj, aargs = aggregator_program(aggregator, n_clients, m_sel,
                                        backend=agg_backend)
-        acomp = aj.lower(*aargs).compile()
+        with tracer.span("compile", stage="aggregator"):
+            acomp = aj.lower(*aargs).compile()
         ahc = hlo_analyze(acomp.as_text())
         rec["aggregator"] = {
             "family": aggregator, "backend": agg_backend,
@@ -307,6 +315,10 @@ def run(n_clients: int, *, multi_pod: bool, sample_frac: float = 0.1,
         rec["error"] = f"{type(e).__name__}: {e}"
         rec["traceback"] = traceback.format_exc()[-4000:]
     rec["total_s"] = round(time.time() - t0, 2)
+    if sink is not None:
+        sink.emit("dryrun", {"key": key, "ok": rec["ok"],
+                             "total_s": rec["total_s"],
+                             "spans": tracer.summary()})
     RESULTS_DIR.mkdir(parents=True, exist_ok=True)
     out_path.write_text(json.dumps(rec, indent=1))
     print(f"[fedsim] {key}: {'ok' if rec['ok'] else 'FAIL ' + rec.get('error', '')[:120]} "
@@ -334,13 +346,23 @@ def main():
                     help="also lower the shard_map'd sweep engine on a "
                          "(cells[, silo]) engine mesh, e.g. 8 or 4x2 "
                          "(fed/scan_engine.py, DESIGN.md §13)")
+    from repro.launch.obs_cli import (
+        add_observability_args, finish_observability, make_observability,
+    )
+    add_observability_args(ap)
     args = ap.parse_args()
     sweep = tuple(int(s) for s in args.sweep_mesh.split("x")) \
         if args.sweep_mesh else None
-    rec = run(args.clients, multi_pod=args.multi_pod, force=args.force,
-              solver_backend=args.solver_backend,
-              aggregator=args.aggregator, agg_backend=args.agg_backend,
-              sweep_mesh=sweep)
+    tracer, sink = make_observability(args, run=f"fedsim-c{args.clients}")
+    try:
+        rec = run(args.clients, multi_pod=args.multi_pod, force=args.force,
+                  solver_backend=args.solver_backend,
+                  aggregator=args.aggregator, agg_backend=args.agg_backend,
+                  sweep_mesh=sweep, tracer=tracer, sink=sink)
+    finally:
+        trace = finish_observability(tracer, sink, args)
+        if trace:
+            print(f"trace: {trace}")
     raise SystemExit(0 if rec["ok"] else 1)
 
 

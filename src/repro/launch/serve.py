@@ -29,6 +29,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.registry import get_config
+from repro.launch.obs_cli import (
+    add_observability_args, finish_observability, make_observability,
+)
 from repro.models import lm
 
 
@@ -43,6 +46,8 @@ class SegmentUpdate:
     val_acc: np.ndarray        # (rounds,)
     sel: np.ndarray            # (rounds, M) sampled sets (padded)
     valid: np.ndarray          # (rounds, M)
+    metrics: dict | None = None   # per-round in-scan telemetry slice
+                                  # (ScanConfig.telemetry cells only)
 
 
 class SimService:
@@ -54,20 +59,43 @@ class SimService:
     zero recompiles), and ``ScanConfig.compile_cache_dir`` persists them
     across service restarts.  ``submit`` accepts everything
     ``ScanEngine.cell`` does — the ``lax.switch`` subsystems mean arbitrary
-    sampler/availability/aggregator mixes still compile to one program."""
+    sampler/availability/aggregator mixes still compile to one program.
+
+    Observability (DESIGN.md §17): per-request queue latencies land in
+    ``self.timings`` — ``first_segment_s`` (submit -> first streamed
+    segment) and ``complete_s`` (submit -> reassembled history) — and on
+    the returned ``ScanHistory`` as ``.request_timing``;
+    ``metrics_text()`` renders service counters + the engine's runtime
+    snapshot as a Prometheus text exposition."""
 
     def __init__(self, engine):
         self.engine = engine
         self._pending: list[tuple[int, dict]] = []
         self._next = 0
         self.histories: dict[int, object] = {}   # request -> ScanHistory
+        self.timings: dict[int, dict] = {}       # request -> latency dict
+        self._counters = {"requests_total": 0, "drains_total": 0,
+                          "segments_streamed_total": 0,
+                          "updates_streamed_total": 0,
+                          "rounds_streamed_total": 0,
+                          "drain_busy_seconds_total": 0.0}
 
     def submit(self, **cell_kwargs) -> int:
         """Queue one sweep-cell request; returns its ticket."""
         rid = self._next
         self._next += 1
         self._pending.append((rid, self.engine.cell(**cell_kwargs)))
+        self.timings[rid] = {"submit_time": time.time()}
+        self._counters["requests_total"] += 1
         return rid
+
+    def _segment_metrics(self, t0: int, j: int) -> dict | None:
+        """This segment's per-request telemetry slice, if the engine just
+        stashed one (telemetry-off runs stream ``None``)."""
+        parts = getattr(self.engine, "_tel_parts", None)
+        if parts and parts[-1][0] == t0:
+            return {k: v[j] for k, v in parts[-1][2].items()}
+        return None
 
     def drain(self, *, segment: int = 0, ckpt_path=None, resume=False):
         """Run every pending request as one batched program, yielding a
@@ -80,25 +108,94 @@ class SimService:
         ids = [rid for rid, _ in self._pending]
         cells = [c for _, c in self._pending]
         self._pending = []
+        t_start = time.time()
+        self._counters["drains_total"] += 1
         parts = []
         for t0, k, traj in self.engine.run_batch_stream(
                 cells, ckpt_every=segment, ckpt_path=ckpt_path,
                 resume=resume):
             parts.append(traj)
+            self._counters["segments_streamed_total"] += 1
+            self._counters["rounds_streamed_total"] += k * len(ids)
+            now = time.time()
             for j, rid in enumerate(ids):
+                self.timings[rid].setdefault(
+                    "first_segment_s",
+                    now - self.timings[rid]["submit_time"])
+                self._counters["updates_streamed_total"] += 1
                 yield SegmentUpdate(
                     request=rid, t0=t0, rounds=k,
                     val_loss=traj["val_loss"][j], val_acc=traj["val_acc"][j],
-                    sel=traj["sel"][j], valid=traj["valid"][j])
+                    sel=traj["sel"][j], valid=traj["valid"][j],
+                    metrics=self._segment_metrics(t0, j))
         full = jax.tree_util.tree_map(
             lambda *xs: np.concatenate(xs, axis=1), *parts)
         out = {**full, "counts": self.engine.final_counts}
+        tel = self.engine._assemble_telemetry()
+        done = time.time()
+        self._counters["drain_busy_seconds_total"] += done - t_start
         for j, rid in enumerate(ids):
-            self.histories[rid] = self.engine._to_history(out, j)
+            self.timings[rid]["complete_s"] = \
+                done - self.timings[rid]["submit_time"]
+            hist = self.engine._to_history(out, j, telemetry=tel)
+            hist.request_timing = dict(self.timings[rid])
+            self.histories[rid] = hist
+            if self.engine.sink is not None:
+                self.engine.sink.emit(
+                    "request", {"request": rid, **self.timings[rid]})
 
     def stats(self) -> dict:
-        """The engine's program-cache counters (hits/misses/compile_ms)."""
-        return self.engine.runtime_stats()
+        """Service counters merged over the engine's runtime snapshot
+        (program-cache / checkpoint-writer / span counters)."""
+        return {**self.engine.runtime_stats(), "service": dict(self._counters)}
+
+    def metrics_text(self) -> str:
+        """Prometheus text exposition (format 0.0.4) of the service
+        counters, per-request queue latencies and the engine's runtime
+        counters — scrape or dump, zero dependencies."""
+        from repro.obs import render_prometheus
+        eng = self.engine.runtime_stats()
+        wall = max(self._counters["drain_busy_seconds_total"], 1e-9)
+        fams = {
+            "requests_total": {
+                "type": "counter", "help": "Sweep-cell requests submitted.",
+                "samples": [({}, self._counters["requests_total"])]},
+            "segments_streamed_total": {
+                "type": "counter", "help": "Scan segments streamed.",
+                "samples": [({},
+                             self._counters["segments_streamed_total"])]},
+            "rounds_streamed_total": {
+                "type": "counter",
+                "help": "Cell-rounds streamed to clients.",
+                "samples": [({}, self._counters["rounds_streamed_total"])]},
+            "rounds_per_second": {
+                "type": "gauge",
+                "help": "Cell-rounds per busy drain second.",
+                "samples": [({}, self._counters["rounds_streamed_total"]
+                             / wall)]},
+            "program_cache_hit_rate": {
+                "type": "gauge",
+                "help": "ProgramCache hits / (hits + misses).",
+                "samples": [({}, eng["hits"] / max(
+                    eng["hits"] + eng["misses"], 1))]},
+            "compile_ms_total": {
+                "type": "counter",
+                "help": "Total XLA compile wall-clock (ms).",
+                "samples": [({}, eng["compile_ms"])]},
+            "request_queue_seconds": {
+                "type": "gauge",
+                "help": "submit -> first streamed segment latency.",
+                "samples": [({"request": str(r)}, tm["first_segment_s"])
+                            for r, tm in sorted(self.timings.items())
+                            if "first_segment_s" in tm]},
+            "request_complete_seconds": {
+                "type": "gauge",
+                "help": "submit -> reassembled history latency.",
+                "samples": [({"request": str(r)}, tm["complete_s"])
+                            for r, tm in sorted(self.timings.items())
+                            if "complete_s" in tm]},
+        }
+        return render_prometheus(fams)
 
 
 def _fedsim_main(args):
@@ -111,8 +208,11 @@ def _fedsim_main(args):
                         seed=args.seed)
     cfg = ScanConfig(rounds=args.rounds, m=4, local_steps=2, batch_size=8,
                      eval_every=1, sampler="uniform",
-                     compile_cache_dir=args.compile_cache_dir)
-    svc = SimService(ScanEngine(ds, logistic_regression(), cfg))
+                     compile_cache_dir=args.compile_cache_dir,
+                     telemetry=bool(getattr(args, "telemetry", False)))
+    tracer, sink = make_observability(args)
+    svc = SimService(ScanEngine(ds, logistic_regression(), cfg,
+                                tracer=tracer, sink=sink))
     scenarios = ("GE", "CLUSTER", "DRIFT", "DEADLINE")
     tickets = [svc.submit(
         seed=i, avail_seed=100 + i,
@@ -124,20 +224,28 @@ def _fedsim_main(args):
         for i in range(args.cells)]
     t0 = time.time()
     n_updates = 0
-    for upd in svc.drain(segment=args.segment):
-        n_updates += 1
-        loss = upd.val_loss[np.isfinite(upd.val_loss)]
-        print(f"req {upd.request} rounds [{upd.t0}, {upd.t0 + upd.rounds}) "
-              f"loss {loss[-1]:.4f}" if loss.size else
-              f"req {upd.request} rounds [{upd.t0}, {upd.t0 + upd.rounds})")
-    wall = time.time() - t0
-    st = svc.stats()
-    print(f"fedsim: {len(tickets)} cells x {args.rounds} rounds, "
-          f"{n_updates} streamed updates in {wall:.2f}s "
-          f"({len(tickets) * args.rounds / max(wall, 1e-9):.1f} "
-          f"cell-rounds/s)")
-    print(f"programs: {st['misses']} built ({st['compiles']} compiles, "
-          f"{st['compile_ms']:.0f} ms), {st['hits']} cache hits")
+    try:
+        for upd in svc.drain(segment=args.segment):
+            n_updates += 1
+            loss = upd.val_loss[np.isfinite(upd.val_loss)]
+            print(f"req {upd.request} rounds "
+                  f"[{upd.t0}, {upd.t0 + upd.rounds}) "
+                  f"loss {loss[-1]:.4f}" if loss.size else
+                  f"req {upd.request} rounds "
+                  f"[{upd.t0}, {upd.t0 + upd.rounds})")
+        wall = time.time() - t0
+        st = svc.stats()
+        print(f"fedsim: {len(tickets)} cells x {args.rounds} rounds, "
+              f"{n_updates} streamed updates in {wall:.2f}s "
+              f"({len(tickets) * args.rounds / max(wall, 1e-9):.1f} "
+              f"cell-rounds/s)")
+        print(f"programs: {st['misses']} built ({st['compiles']} compiles, "
+              f"{st['compile_ms']:.0f} ms), {st['hits']} cache hits")
+        print(svc.metrics_text(), end="")
+    finally:
+        trace = finish_observability(tracer, sink, args)
+        if trace:
+            print(f"trace: {trace}")
     return [svc.histories[t] for t in tickets]
 
 
@@ -160,6 +268,10 @@ def main(argv=None):
     ap.add_argument("--n-clients", type=int, default=16)
     ap.add_argument("--compile-cache-dir", default=None,
                     help="persistent XLA compile cache directory")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="enable the in-scan per-round health channel "
+                         "(ScanConfig.telemetry)")
+    add_observability_args(ap)
     args = ap.parse_args(argv)
 
     if args.fedsim:

@@ -39,6 +39,9 @@ from repro.fed.aggregator_device import make_aggregator_process
 from repro.fed.faults_device import FAMILIES as FAULTS
 from repro.fed.faults_device import HostFaultInjector, make_fault_process
 from repro.fed.server import ServerAggregator
+from repro.launch.obs_cli import (
+    add_observability_args, finish_observability, make_observability,
+)
 from repro.models import lm
 from repro.optim.optimizers import adamw
 
@@ -93,7 +96,9 @@ def main(argv=None):
     ap.add_argument("--ckpt", default=None,
                     help="checkpoint path: saves params+counts every 10 "
                          "rounds and resumes if present")
+    add_observability_args(ap)
     args = ap.parse_args(argv)
+    tracer, sink = make_observability(args, run=f"train-{args.arch}")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -183,36 +188,60 @@ def main(argv=None):
             fault_seed=args.seed + 0xFA17)
         faults.init(params)
     t0 = time.time()
-    for t in range(start, args.rounds):
-        avail = mode.sample(t, avail_rng)
-        sel = np.asarray(sampler.sample(avail=avail, m=m, rng=rng,
-                                        counts=counts, data_sizes=sizes), int)
-        if len(sel) == 0:
-            # empty A_t (samplers return the empty array, PR-4): the round
-            # is a params no-op — the zero-weight-guard story end to end
-            print(f"round {t:3d}  sel=[]  (no clients available; params "
-                  f"kept)", flush=True)
-            continue
-        locals_, losses = [], []
-        for k in sel:
-            key, sub = jax.random.split(key)
-            pk, lk = local_train(params, pools_j[k], jnp.float32(args.lr), sub)
-            locals_.append(pk)
-            losses.append(float(lk))
-        stacked = jax.tree_util.tree_map(lambda *x: jnp.stack(x), *locals_)
-        if faults is not None:
-            stacked = faults.inject(stacked, params, sel, avail, t)
-        params = server.apply(stacked, sizes[sel].astype(np.float32),
-                              sel, avail, t)
-        counts[sel] += 1
-        vl = float(eval_loss(params, val))
-        print(f"round {t:3d}  sel={sel.tolist()}  train={np.mean(losses):.4f}  "
-              f"val={vl:.4f}  Var(v)={count_variance(counts):.3f}", flush=True)
-        if args.ckpt and (t + 1) % 10 == 0:
-            from repro.checkpoint.ckpt import save_checkpoint
-            save_checkpoint(args.ckpt, {"params": params, "counts": counts,
-                                        "round": np.asarray(t, np.int64)},
-                            metadata={"round": t, "arch": cfg.name})
+    try:
+        for t in range(start, args.rounds):
+            avail = mode.sample(t, avail_rng)
+            sel = np.asarray(sampler.sample(avail=avail, m=m, rng=rng,
+                                            counts=counts,
+                                            data_sizes=sizes), int)
+            if len(sel) == 0:
+                # empty A_t (samplers return the empty array, PR-4): the
+                # round is a params no-op — the zero-weight-guard story
+                # end to end
+                print(f"round {t:3d}  sel=[]  (no clients available; "
+                      f"params kept)", flush=True)
+                continue
+            locals_, losses = [], []
+            with tracer.span("local_train", t=t, m=len(sel)):
+                for k in sel:
+                    key, sub = jax.random.split(key)
+                    pk, lk = local_train(params, pools_j[k],
+                                         jnp.float32(args.lr), sub)
+                    locals_.append(pk)
+                    losses.append(float(lk))
+            stacked = jax.tree_util.tree_map(lambda *x: jnp.stack(x),
+                                             *locals_)
+            if faults is not None:
+                stacked = faults.inject(stacked, params, sel, avail, t)
+            with tracer.span("aggregate", t=t):
+                params = server.apply(stacked, sizes[sel].astype(np.float32),
+                                      sel, avail, t)
+            counts[sel] += 1
+            with tracer.span("eval", t=t):
+                vl = float(eval_loss(params, val))
+            if sink is not None:
+                sink.emit("round", {"engine": "train-lm", "t": t,
+                                    "val_loss": vl,
+                                    "train_loss": float(np.mean(losses)),
+                                    "n_selected": int(len(sel)),
+                                    "avail_rate": float(np.mean(avail)),
+                                    "count_var":
+                                    float(count_variance(counts))})
+            print(f"round {t:3d}  sel={sel.tolist()}  "
+                  f"train={np.mean(losses):.4f}  "
+                  f"val={vl:.4f}  Var(v)={count_variance(counts):.3f}",
+                  flush=True)
+            if args.ckpt and (t + 1) % 10 == 0:
+                from repro.checkpoint.ckpt import save_checkpoint
+                with tracer.span("checkpoint_write", round=t):
+                    save_checkpoint(
+                        args.ckpt, {"params": params, "counts": counts,
+                                    "round": np.asarray(t, np.int64)},
+                        metadata={"round": t, "arch": cfg.name})
+    finally:
+        trace = finish_observability(tracer, sink, args)
+        if trace:
+            print(f"trace: {trace}")
     print(f"done in {time.time() - t0:.1f}s; final Var(v^t)={count_variance(counts):.3f}")
     return params, counts
 

@@ -1,0 +1,17 @@
+"""Streaming observability sinks (DESIGN.md §17).
+
+``fed/telemetry.py`` produces the signals (in-scan metric pytrees, host
+spans, runtime counters); this package STREAMS them out of the process:
+a schema-versioned JSONL event log (``sinks.JSONLMetricsSink`` — one
+background writer thread, the PR-8 ``AsyncCheckpointWriter`` pattern)
+and a Prometheus-style text exposition (``prom.render_prometheus``) for
+the ``SimService`` front-end."""
+from repro.obs.prom import prom_families, render_prometheus
+from repro.obs.sinks import (
+    METRICS_SCHEMA_VERSION, JSONLMetricsSink, read_metrics_jsonl,
+)
+
+__all__ = [
+    "JSONLMetricsSink", "METRICS_SCHEMA_VERSION", "read_metrics_jsonl",
+    "prom_families", "render_prometheus",
+]
